@@ -1,0 +1,99 @@
+"""Paper Fig. 12 — heuristic auto-scaling holds the SLO under varying load.
+
+ResNet with a 69 ms latency SLO (the paper's number).  The offered RPS
+follows a diurnal ramp (20 -> 240 -> 20 req/s, 8x swing, as Fig. 12's
+varying load); every 0.5 s the control loop predicts RPS from the trailing
+window and runs Alg. 1 (scale-up with p_eff/p_ideal, scale-down lowest-RPR
+first).  Acceptance (paper): SLO violations <= 1%.
+
+Profile points carry p99s measured at 0.8x capacity (not the saturating
+capacity probe), so Alg. 1's SLO-feasibility filter can reject
+configurations whose *service time alone* eats the latency budget.
+
+A second, harsher trace with abrupt 2-4x steps is reported as info: a
+purely reactive scaler necessarily violates during the detection lag.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.core.cluster import Cluster
+from repro.core.profiler import ProfileDB, simulate_trial
+from repro.core.workload import PAPER_ZOO, diurnal_trace, trace_arrivals
+
+SLO_S = 0.069
+DURATION = 160.0
+CONTROL_PERIOD = 0.5
+HORIZON = 2.0
+HEADROOM = 1.6  # target utilization ~0.6: bounded queueing at p99
+STEP_TRACE = [(0.0, 30.0), (30.0, 120.0), (60.0, 240.0), (100.0, 90.0),
+              (130.0, 20.0), (160.0, 0.0)]
+
+
+def _profile() -> ProfileDB:
+    db = ProfileDB()
+    for sm in (0.12, 0.24, 0.5):
+        for quota in (0.4, 1.0):
+            cap = simulate_trial(PAPER_ZOO["resnet"], sm, quota,
+                                 duration=15.0, overload_factor=1.5)
+            lat = simulate_trial(PAPER_ZOO["resnet"], sm, quota,
+                                 duration=15.0, overload_factor=0.8)
+            import dataclasses
+            db.add("resnet", dataclasses.replace(cap, p99=lat.p99))
+    return db
+
+
+def _run_trace(trace, profiles) -> tuple[float, float, float, int]:
+    cluster = Cluster(n_nodes=8, sharing=True, max_batch=2)
+    cluster.register_function("resnet", PAPER_ZOO["resnet"],
+                              slo_latency=SLO_S)
+    best = max(profiles["resnet"], key=lambda p: p.rpr)
+    cluster.deploy("resnet", best, elastic_limit=1.0)
+    arrivals = trace_arrivals("resnet", trace, seed=5)
+    cluster.submit_all(arrivals)
+    peak_pods = [1]
+
+    def control() -> None:
+        now = cluster.sim.now
+        recent = [r for r in arrivals if now - HORIZON <= r.arrival <= now]
+        predicted = len(recent) / HORIZON
+        cluster.autoscale({"resnet": predicted}, profiles,
+                          slo_latency={"resnet": SLO_S}, headroom=HEADROOM)
+        peak_pods[0] = max(peak_pods[0], len(cluster.fn_pods["resnet"]))
+        if now < DURATION:
+            cluster.sim.after(CONTROL_PERIOD, control)
+
+    cluster.sim.after(CONTROL_PERIOD, control)
+    cluster.run(DURATION + 10)
+    rec = cluster.recorders["resnet"]
+    warm = 5.0
+    return (rec.violation_ratio(since=warm),
+            rec.count() / max(len(arrivals), 1),
+            rec.p99(since=warm), peak_pods[0])
+
+
+def run() -> list[Row]:
+    profiles = {"resnet": _profile().table("resnet")}
+    ramp = diurnal_trace(base_rps=20.0, peak_rps=240.0, period=DURATION,
+                         duration=DURATION, step=5.0) + [(DURATION, 0.0)]
+    v, served, p99, pods = _run_trace(ramp, profiles)
+    rows = [
+        Row("fig12", "slo_violation_ratio", v, target=0.0, tol=0.01,
+            note="paper: <=1% at 69 ms SLO (diurnal 20->240->20 RPS)"),
+        Row("fig12", "served_fraction", served, target=1.0, tol=0.02,
+            note="dropped requests break the SLO too"),
+        Row("fig12", "p99_s", p99, note="end-to-end p99 under autoscaling"),
+        Row("fig12", "peak_pods", pods,
+            note="Alg. 1 scaled up to this many pods at the 240 RPS peak"),
+    ]
+    v2, served2, p99_2, pods2 = _run_trace(STEP_TRACE, profiles)
+    rows.append(Row("fig12", "abrupt_step_violation_ratio", v2,
+                    note="2-4x RPS steps: reactive detection lag shows up "
+                         "as transient violations"))
+    rows.append(Row("fig12", "abrupt_step_peak_pods", pods2))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

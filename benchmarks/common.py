@@ -1,0 +1,40 @@
+"""Shared row type + tiny report helpers for the benchmark suite."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+
+@dataclasses.dataclass
+class Row:
+    bench: str
+    metric: str
+    value: float
+    target: Optional[float] = None  # paper's number, when one exists
+    tol: float = 0.25  # relative tolerance vs target
+    note: str = ""
+
+    @property
+    def status(self) -> str:
+        if self.target is None:
+            return "info"
+        if self.target == 0:
+            return "ok" if abs(self.value) <= self.tol else "FAIL"
+        return ("ok" if abs(self.value - self.target) <=
+                self.tol * abs(self.target) else "FAIL")
+
+    def csv(self) -> str:
+        t = "" if self.target is None else f"{self.target:.4g}"
+        return (f"{self.bench},{self.metric},{self.value:.4g},{t},"
+                f"{self.status},{self.note}")
+
+
+def timed(fn: Callable[[], list[Row]], name: str) -> tuple[list[Row], float]:
+    t0 = time.perf_counter()
+    rows = fn()
+    return rows, time.perf_counter() - t0
+
+
+HEADER = "bench,metric,value,paper_target,status,note"

@@ -1,0 +1,58 @@
+"""Paper Fig. 8 — FaST-Profiler throughput curves.
+
+Profiles each model over the paper's (spatial x temporal) grid with the
+real Experiment->Trial workflow (dedicated node, TokenScheduler in the
+loop) and checks the figure's three qualitative laws plus its quantitative
+anchors:
+
+1. *temporal proportionality*: T(s, q) ~= q x T(s, 1);
+2. *spatial saturation*: throughput stops growing at ``sm_sat``;
+3. larger models saturate later (resnet @24% < gnmt/bert @50% < vit @80%).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.core.profiler import profile_function
+from repro.core.workload import PAPER_ZOO
+
+MODELS = ("resnet", "rnnt", "gnmt", "bert")
+GRID_T = (0.2, 0.4, 0.6, 0.8, 1.0)
+GRID_S = (0.06, 0.12, 0.24, 0.5, 1.0)
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for name in MODELS:
+        curve = PAPER_ZOO[name]
+        db = profile_function(curve, temporal=GRID_T, spatial=GRID_S,
+                              duration=20.0)
+        pts = {(round(p.sm, 2), round(p.quota, 2)): p.throughput
+               for p in db.table(name)}
+        # 1. temporal proportionality at sm=0.24: T(0.4)/T(1.0) ~ 0.4
+        ratio = pts[(0.24, 0.4)] / max(pts[(0.24, 1.0)], 1e-9)
+        rows.append(Row("fig8", f"{name}.temporal_ratio_q40", ratio,
+                        target=0.4, tol=0.2,
+                        note="T(s,0.4q)/T(s,1.0q) ~ 0.4"))
+        # 2. spatial saturation: beyond sm_sat, gain < 10%
+        sat_gain = pts[(1.0, 1.0)] / max(pts[(round(curve.sm_sat, 2), 1.0)]
+                                         if (round(curve.sm_sat, 2), 1.0)
+                                         in pts else pts[(0.5, 1.0)], 1e-9)
+        rows.append(Row("fig8", f"{name}.saturation_gain", sat_gain,
+                        target=1.0, tol=0.1,
+                        note="T(100% SM)/T(sm_sat) — flat past saturation"))
+        # Quantitative anchor: racing throughput (paper §5.3)
+        rows.append(Row("fig8", f"{name}.racing_rps", pts[(1.0, 1.0)],
+                        target=curve.r_max, tol=0.1,
+                        note="single pod, full GPU"))
+    # 3. saturation ordering (info)
+    order = [PAPER_ZOO[m].sm_sat for m in ("resnet", "gnmt", "vit_huge")]
+    rows.append(Row("fig8", "saturation_monotone",
+                    1.0 if order == sorted(order) else 0.0, target=1.0,
+                    tol=0.0, note="larger models saturate later"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,61 @@
+"""Roofline table — reads results/dryrun/*.json (written by
+``repro.launch.dryrun``) and prints the per-(arch x shape x mesh) roofline
+terms for EXPERIMENTS.md §Roofline.  Informational: no paper targets."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Row
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "results/dryrun")
+
+
+def load_cells() -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def table(cells: list[dict]) -> str:
+    hdr = (f"{'arch':24s} {'case':12s} {'mesh':8s} {'C(s)':>9s} "
+           f"{'M(s)':>9s} {'M_adj(s)':>9s} {'X(s)':>9s} {'dom':>10s} "
+           f"{'useful':>7s} {'MFU_bnd':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for c in cells:
+        if c["status"] != "ok":
+            lines.append(f"{c['arch']:24s} {c['case']:12s} {c['mesh']:8s} "
+                         f"[{c['status']}] {c.get('error', '')[:60]}")
+            continue
+        lines.append(
+            f"{c['arch']:24s} {c['case']:12s} {c['mesh']:8s} "
+            f"{c['compute_s']:9.3f} {c['memory_s']:9.3f} "
+            f"{c['memory_adj_s']:9.3f} {c['collective_s']:9.3f} "
+            f"{c.get('dominant', '?'):>10s} {c.get('useful_ratio', 0):7.2f} "
+            f"{c.get('mfu_bound', 0):8.3f}")
+    return "\n".join(lines)
+
+
+def run() -> list[Row]:
+    cells = load_cells()
+    ok = [c for c in cells if c["status"] == "ok"]
+    skipped = [c for c in cells if c["status"] == "skipped"]
+    failed = [c for c in cells if c["status"] == "failed"]
+    rows = [
+        Row("roofline", "cells_ok", len(ok)),
+        Row("roofline", "cells_skipped_by_design", len(skipped)),
+        Row("roofline", "cells_failed", len(failed), target=0, tol=0.0),
+    ]
+    if ok:
+        print(table(cells))
+    return rows
+
+
+if __name__ == "__main__":
+    run_rows = run()
+    for r in run_rows:
+        print(r.csv())

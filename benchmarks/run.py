@@ -1,0 +1,73 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  fig8   profiler_curves      FaST-Profiler throughput curves
+  fig9   isolation            spatial isolation vs time-sharing interference
+  fig10  spatial_sharing      spatial sharing vs racing (throughput/tail)
+  fig11  scheduler_packing    MRA packing, utilization/occupancy gains
+  fig12  autoscale_slo        Alg.-1 autoscaling holds the 69 ms SLO
+  fig13  model_sharing_mem    model-sharing memory footprints
+  head   headline             3.15x / 1.34x / 3.13x aggregate claims
+  roof   roofline_table       (arch x shape x mesh) roofline from dry-run
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--only fig10,fig11]
+Output: ``bench,metric,value,paper_target,status,note`` CSV rows; exits
+non-zero if any targeted metric misses its tolerance.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks.common import HEADER, Row
+
+MODULES = [
+    ("fig8", "benchmarks.profiler_curves"),
+    ("fig9", "benchmarks.isolation"),
+    ("fig10", "benchmarks.spatial_sharing"),
+    ("fig11", "benchmarks.scheduler_packing"),
+    ("fig12", "benchmarks.autoscale_slo"),
+    ("fig13", "benchmarks.model_sharing_mem"),
+    ("head", "benchmarks.headline"),
+    ("roof", "benchmarks.roofline_table"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset (fig8..fig13,head,roof)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    import importlib
+    all_rows: list[Row] = []
+    print(HEADER)
+    t_total = time.perf_counter()
+    for key, modname in MODULES:
+        if only and key not in only:
+            continue
+        t0 = time.perf_counter()
+        mod = importlib.import_module(modname)
+        try:
+            rows = mod.run()
+        except Exception as e:  # noqa: BLE001 — report and keep going
+            rows = [Row(key, "crashed", 0.0, target=1.0, tol=0.0,
+                        note=f"{type(e).__name__}: {e}")]
+        dt = time.perf_counter() - t0
+        for r in rows:
+            print(r.csv())
+        print(f"# {modname}: {len(rows)} rows in {dt:.1f}s", flush=True)
+        all_rows.extend(rows)
+
+    n_fail = sum(1 for r in all_rows if r.status == "FAIL")
+    n_ok = sum(1 for r in all_rows if r.status == "ok")
+    print(f"# TOTAL: {n_ok} ok, {n_fail} FAIL, "
+          f"{sum(1 for r in all_rows if r.status == 'info')} info rows in "
+          f"{time.perf_counter() - t_total:.1f}s")
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

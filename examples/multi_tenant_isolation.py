@@ -1,0 +1,72 @@
+"""Live isolation demo: two real models share one node without interference.
+
+Two functions (reduced qwen2 + rwkv6) run on one ServingEngine.  First the
+aggressor runs with an elastic quota next to the victim (time sharing
+style) — the victim's step dispatch rate drops.  Then both get hard
+spatio-temporal partitions — the victim's rate is unaffected by the
+aggressor.  The live analogue of paper Fig. 9, on real JAX executors.
+
+Run:  PYTHONPATH=src python examples/multi_tenant_isolation.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.resources import Alloc
+from repro.models import build_model
+from repro.serving.engine import ServingEngine
+
+
+def serve_victim(aggressor: bool, isolated: bool) -> float:
+    """-> victim completed requests/s."""
+    engine = ServingEngine(window=0.2)
+    rng = np.random.default_rng(0)
+
+    cfg_v = get_config("rwkv6-1.6b", reduced=True)
+    victim = build_model(cfg_v)
+    params_v = victim.init(jax.random.PRNGKey(0))
+    # Victim: guaranteed 50%; isolated run caps everyone's elasticity.
+    engine.deploy("victim", victim, params_v,
+                  Alloc(sm=0.24 if isolated else 1.0, quota_request=0.5,
+                        quota_limit=0.5 if isolated else 0.8),
+                  n_instances=1, max_batch=2, max_len=20)
+    if aggressor:
+        cfg_a = get_config("qwen2-7b", reduced=True)
+        model_a = build_model(cfg_a)
+        params_a = model_a.init(jax.random.PRNGKey(1))
+        engine.deploy("aggressor", model_a, params_a,
+                      Alloc(sm=0.24 if isolated else 1.0, quota_request=0.5,
+                            quota_limit=0.5 if isolated else 1.0),
+                      n_instances=1, max_batch=2, max_len=20)
+        for _ in range(40):
+            engine.submit("aggressor",
+                          rng.integers(0, cfg_a.vocab_size, 8).astype(np.int32),
+                          max_new_tokens=8)
+    n_victim = 30
+    for _ in range(n_victim):
+        engine.submit("victim",
+                      rng.integers(0, cfg_v.vocab_size, 8).astype(np.int32),
+                      max_new_tokens=4)
+    engine.pump(budget_s=30.0)
+    rec = engine.recorders["victim"]
+    span = max(rec.completion_times) - min(rec.completion_times) if \
+        rec.count() > 1 else 1.0
+    return rec.count() / max(span, 1e-9)
+
+
+def main() -> None:
+    alone = serve_victim(aggressor=False, isolated=True)
+    contended = serve_victim(aggressor=True, isolated=False)
+    isolated = serve_victim(aggressor=True, isolated=True)
+    print(f"victim rate alone       : {alone:6.1f} req/s")
+    print(f"victim rate, time-shared: {contended:6.1f} req/s "
+          f"({contended / alone:.0%} of alone — interference)")
+    print(f"victim rate, isolated   : {isolated:6.1f} req/s "
+          f"({isolated / alone:.0%} of alone)")
+    # Isolation must recover most of the drop the aggressor causes.
+    assert isolated >= contended * 0.9, "isolation should not be worse"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Full control plane: profile -> autoscale -> schedule -> survive failures.
+
+Reproduces the paper's serving story end to end on the discrete-event
+cluster: FaST-Profiler sweeps two functions, Alg. 1 autoscales them under a
+diurnal load with a latency SLO, MRA packs pods onto the fewest GPUs, a
+node is killed mid-run (fault tolerance), and the run ends with utilization
+/ occupancy / SLO numbers.
+
+Run:  PYTHONPATH=src python examples/serve_cluster.py
+"""
+
+from repro.core.cluster import Cluster
+from repro.core.profiler import ProfileDB, simulate_trial
+from repro.core.workload import PAPER_ZOO, diurnal_trace, trace_arrivals
+
+SLO = {"resnet": 0.069, "bert": 0.15}
+DURATION = 120.0
+
+
+def main() -> None:
+    # 1. FaST-Profiler: Experiment -> Trial grid for each function.
+    db = ProfileDB()
+    for fn in SLO:
+        for sm in (0.12, 0.24, 0.5):
+            for quota in (0.4, 1.0):
+                import dataclasses
+                cap = simulate_trial(PAPER_ZOO[fn], sm, quota, duration=12.0)
+                lat = simulate_trial(PAPER_ZOO[fn], sm, quota, duration=12.0,
+                                     overload_factor=0.8)
+                db.add(fn, dataclasses.replace(cap, p99=lat.p99))
+        best = db.best_rpr(fn)
+        print(f"[profile] {fn}: best RPR at sm={best.sm} quota={best.quota} "
+              f"-> {best.throughput:.1f} req/s")
+    profiles = {fn: db.table(fn) for fn in SLO}
+
+    # 2. Cluster with autoscaling control loop.
+    cluster = Cluster(n_nodes=6, sharing=True, max_batch=2)
+    arrivals = []
+    for i, fn in enumerate(SLO):
+        cluster.register_function(fn, PAPER_ZOO[fn], slo_latency=SLO[fn])
+        cluster.deploy(fn, db.best_rpr(fn), elastic_limit=1.0)
+        trace = diurnal_trace(15.0, 150.0, DURATION, DURATION, 5.0) + [
+            (DURATION, 0.0)]
+        arrivals += trace_arrivals(fn, trace, seed=10 + i)
+    cluster.submit_all(arrivals)
+
+    def control() -> None:
+        now = cluster.sim.now
+        pred = {}
+        for fn in SLO:
+            recent = [r for r in arrivals
+                      if r.fn == fn and now - 2.0 <= r.arrival <= now]
+            pred[fn] = len(recent) / 2.0
+        cluster.autoscale(pred, profiles, slo_latency=SLO, headroom=1.6)
+        if now < DURATION:
+            cluster.sim.after(0.5, control)
+
+    cluster.sim.after(0.5, control)
+
+    # 3. Kill a node mid-run: pods re-placed via MRA, requests re-queued.
+    def failure() -> None:
+        victim = next((n.node_id for n in cluster.nodes if n.pods), 0)
+        replaced = cluster.fail_node(victim)
+        print(f"[t={cluster.sim.now:5.1f}] node {victim} FAILED; "
+              f"{replaced} pods re-placed on survivors")
+
+    cluster.sim.at(DURATION / 2, failure)
+    cluster.run(DURATION + 10)
+
+    # 4. Report.
+    print(f"\n[cluster] nodes in use: {cluster.nodes_in_use()} / 6  "
+          f"(dropped={cluster.dropped}, rescheduled={cluster.rescheduled})")
+    print(f"[cluster] utilization={cluster.gpu_utilization(30):.2f}  "
+          f"occupancy={cluster.sm_occupancy(30):.2f}")
+    for fn in SLO:
+        rec = cluster.recorders[fn]
+        print(f"  {fn:8s} served={rec.count():5d}  p99={rec.p99(5.0):.3f}s  "
+              f"SLO violations={rec.violation_ratio(5.0):.2%}")
+        assert rec.violation_ratio(5.0) < 0.05, "SLO badly violated"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""HLO text analysis: collective-op operand bytes for the roofline.
+
+``cost_analysis()`` does not report communication, so we parse the
+optimized (post-SPMD) HLO: build a name -> shape table from every
+instruction definition, then sum operand sizes for each collective op
+(all-gather, all-reduce, reduce-scatter, all-to-all, collective-permute).
+Shapes are per-device (the HLO is the partitioned single-program module).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# `%name = bf16[1,2,3]{2,1,0} op-name(...)` or tuple results (tuples of
+# >=6 elements carry `/*index=5*/` comments, so admit `=` inside parens).
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^()]*\)|[\w\[\],\s{}:#*]+?)\s+"
+    r"([\w\-]+)\((.*)$")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of all array shapes in a type string (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict[str, float]:
+    """Sum of operand bytes per collective kind, per device.
+
+    Operand sizes are resolved through a name->bytes table built from all
+    instruction definitions; `all-reduce(%x)` style references then look up
+    %x.  For `all-gather`, operand bytes understate the wire cost by
+    (N-1)/N ~= 1, so operand-sum is the standard approximation.
+    """
+    name_bytes: dict[str, int] = {}
+    lines = hlo_text.splitlines()
+    defs = []
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op, rest = m.groups()
+        name_bytes[name] = _shape_bytes(type_str)
+        defs.append((name, type_str, op, rest))
+
+    out: dict[str, float] = defaultdict(float)
+    for name, type_str, op, rest in defs:
+        kind = None
+        for c in COLLECTIVE_OPS:
+            if op == c or op.startswith(c + "-start") or op == c + "-start":
+                kind = c
+                break
+        if kind is None:
+            continue
+        # Operand list is everything up to the matching ')': grab %refs.
+        args_part = rest.split(")")[0]
+        refs = re.findall(r"%([\w\.\-]+)", args_part)
+        operand_bytes = sum(name_bytes.get(r, 0) for r in refs)
+        if operand_bytes == 0:
+            # Fallback: inline-typed operands, or size from the result.
+            operand_bytes = _shape_bytes(args_part) or _shape_bytes(type_str)
+        out[kind] += float(operand_bytes)
+    return dict(out)
+
+
+def count_ops(hlo_text: str, *ops: str) -> dict[str, int]:
+    counts = {o: 0 for o in ops}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            for o in ops:
+                if m.group(3).startswith(o):
+                    counts[o] += 1
+    return counts

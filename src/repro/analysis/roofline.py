@@ -1,0 +1,663 @@
+"""Trip-count-aware roofline analysis from optimized (post-SPMD) HLO.
+
+``compiled.cost_analysis()`` counts every ``while`` body **once**, but the
+models scan over layers (trip 28..80) and the flash kernels loop over KV
+blocks, so raw cost numbers under-count FLOPs/bytes/collectives by 1-2
+orders of magnitude.  This module parses the HLO text into computations,
+propagates a *call multiplier* through the call graph (``while`` bodies get
+``x known_trip_count``), and accumulates:
+
+* **flops** — 2 x numel(result) x contraction for every ``dot``,
+  multiplier-weighted (fusion-internal dots included);
+* **hbm_bytes** — operand+result bytes per instruction in *executed*
+  computations (fusions are one instruction; in-place
+  ``dynamic-update-slice`` counts only the updated window, matching XLA's
+  buffer-aliasing behaviour — not the full aliased buffer);
+* **collective wire bytes** — per-device link traffic with the standard
+  ring-cost model: all-reduce 2B, all-gather/reduce-scatter/all-to-all B,
+  collective-permute B.
+
+The three roofline terms then follow from the TPU v5e constants
+(197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI).  All figures are
+per-device: the parsed HLO is already the partitioned SPMD program.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Optional
+
+# -- TPU v5e hardware constants (per chip) -----------------------------------
+PEAK_FLOPS = 197e12  # bf16 FLOP/s
+HBM_BW = 819e9  # bytes/s
+LINK_BW = 50e9  # bytes/s per ICI link (conservative: 1 link serializes)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# `  %name = <type> <op>(<rest...>`   (type may be a tuple `(...)`;
+# tuples of >=6 elements carry `/*index=5*/` comments, so the tuple matcher
+# must admit `=` — it excludes parens instead, which tuple types never nest)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^()]*\)|[\w\[\],\s{}:#*]+?)\s+"
+    r"([\w\-]+)\((.*)$")
+# `%comp_name (p0: type, ...) -> type {`   /  `ENTRY %main (...) -> type {`
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\((.*)\)\s*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_PARAM_RE = re.compile(r"%?([\w\.\-]+):\s*((?:\([^)]*\))|[\w\[\],{}]+)")
+
+# to_apply targets of these ops are per-element lambdas, not real calls.
+_APPLY_OPS = {"reduce", "reduce-window", "scatter", "select-and-scatter",
+              "map", "sort", "all-reduce", "reduce-scatter",
+              "all-reduce-start"}
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "after-all", "partition-id", "replica-id",
+                   "opt-barrier", "custom-call",
+                   # Control ops: their operand/result tuples alias the live
+                   # buffers; the *bodies* are walked separately.
+                   "while", "conditional", "call",
+                   "copy-start", "copy-done", "send", "recv"}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+def _numel(type_str: str) -> int:
+    n = 1
+    for d in _shape_dims(type_str):
+        n *= d
+    return max(n, 1) if _SHAPE_RE.search(type_str) else 0
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str
+
+    def operand_refs(self) -> list[str]:
+        args = self.rest.split(")")[0]
+        return re.findall(r"%([\w\.\-]+)", args)
+
+    def attr_ref(self, key: str) -> Optional[str]:
+        m = re.search(key + r"=%?([\w\.\-]+)", self.rest)
+        return m.group(1) if m else None
+
+    def attr_refs(self, key: str) -> list[str]:
+        m = re.search(key + r"=\{([^}]*)\}", self.rest)
+        if not m:
+            return []
+        return re.findall(r"%?([\w\.\-]+)", m.group(1))
+
+    def trip_count(self) -> Optional[int]:
+        m = _TRIP_RE.search(self.rest)
+        return int(m.group(1)) if m else None
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instrs: list[Instr] = dataclasses.field(default_factory=list)
+
+    @property
+    def root(self) -> Optional[Instr]:
+        return self.instrs[-1] if self.instrs else None
+
+
+def parse_module(hlo_text: str) -> tuple[dict[str, Computation], str,
+                                         dict[str, str]]:
+    """-> (computations by name, entry name, global name->type table)."""
+    comps: dict[str, Computation] = {}
+    types: dict[str, str] = {}
+    entry = ""
+    current: Optional[Computation] = None
+    for line in hlo_text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc:
+            is_entry, name, params = mc.group(1), mc.group(2), mc.group(3)
+            current = Computation(name=name, is_entry=bool(is_entry))
+            comps[name] = current
+            if is_entry:
+                entry = name
+            for pname, ptype in _PARAM_RE.findall(params):
+                types[pname] = ptype
+            continue
+        if line.startswith("}"):
+            current = None
+            continue
+        if current is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            continue
+        instr = Instr(*mi.groups())
+        current.instrs.append(instr)
+        types[instr.name] = instr.type_str
+    return comps, entry, types
+
+
+def _multipliers(comps: dict[str, Computation], entry: str
+                 ) -> tuple[dict[str, float], set[str], int]:
+    """Call-graph walk: computation -> summed call multiplier.
+
+    Returns (multipliers, fusion-called computation names,
+    #while loops with unknown trip count).
+    """
+    mult: dict[str, float] = defaultdict(float)
+    fusion_comps: set[str] = set()
+    unknown_trips = 0
+    mult[entry] = 1.0
+    work = [entry]
+    seen_order: list[str] = []
+    # Worklist with accumulation: process in topological-ish order by
+    # repeated relaxation (call graphs here are DAGs; loop bound for safety).
+    pending: list[tuple[str, float]] = [(entry, 1.0)]
+    mult = defaultdict(float)
+    while pending:
+        cname, m = pending.pop()
+        mult[cname] += m
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for ins in comp.instrs:
+            if ins.op == "while":
+                trip = ins.trip_count()
+                if trip is None:
+                    trip = 1
+                    unknown_trips += 1
+                body = ins.attr_ref("body")
+                cond = ins.attr_ref("condition")
+                if body:
+                    pending.append((body, m * trip))
+                if cond:
+                    pending.append((cond, m * (trip + 1)))
+            elif ins.op == "fusion":
+                tgt = ins.attr_ref("calls")
+                if tgt:
+                    fusion_comps.add(tgt)
+                    pending.append((tgt, m))
+            elif ins.op == "call":
+                tgt = ins.attr_ref("to_apply")
+                if tgt:
+                    pending.append((tgt, m))
+            elif ins.op == "conditional":
+                for tgt in (ins.attr_refs("branch_computations")
+                            or [ins.attr_ref("true_computation") or "",
+                                ins.attr_ref("false_computation") or ""]):
+                    if tgt:
+                        pending.append((tgt, m))
+            # reduce/scatter/sort to_apply: per-element lambda, skip.
+    return dict(mult), fusion_comps, unknown_trips
+
+
+def _dot_flops(ins: Instr, types: dict[str, str]) -> float:
+    refs = ins.operand_refs()
+    if not refs:
+        return 0.0
+    lhs_dims = _shape_dims(types.get(refs[0], ""))
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+    contraction = 1
+    if m and m.group(1):
+        for idx in m.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                contraction *= lhs_dims[i]
+    return 2.0 * _numel(ins.type_str) * contraction
+
+
+def _instr_bytes(ins: Instr, types: dict[str, str],
+                 comps: dict[str, Computation]) -> float:
+    """HBM bytes for one executed instruction (aliasing-aware)."""
+    op = ins.op
+    if op in _SKIP_BYTES_OPS:
+        return 0.0
+    refs = ins.operand_refs()
+    if op == "dynamic-update-slice":
+        upd = types.get(refs[1], "") if len(refs) > 1 else ""
+        return 2.0 * _shape_bytes(upd)
+    if op == "dynamic-slice":
+        return 2.0 * _shape_bytes(ins.type_str)
+    if op == "fusion":
+        tgt = ins.attr_ref("calls")
+        comp = comps.get(tgt or "")
+        if comp is not None:
+            return _fusion_bytes(ins, comp, types)
+    if op == "broadcast" or op == "iota":
+        return float(_shape_bytes(ins.type_str))
+    operand = sum(_shape_bytes(types.get(r, "")) for r in refs)
+    return float(operand + _shape_bytes(ins.type_str))
+
+
+def _fusion_bytes(ins: Instr, comp: Computation,
+                  types: dict[str, str]) -> float:
+    """HBM traffic of one fusion: aliasing- and slicing-aware.
+
+    A fused ``dynamic-slice`` reads only the slice window of its parameter,
+    and a root ``dynamic-update-slice`` writes only the updated window (the
+    full buffer is aliased in place).  Parameters consumed any other way are
+    read in full; elementwise/reduce fusions therefore count full operands,
+    exactly as XLA's own bytes-accessed does.
+    """
+    # parameter index -> instruction name, and a 1-hop bitcast alias map.
+    param_names: dict[int, str] = {}
+    alias: dict[str, str] = {}
+    for i in comp.instrs:
+        if i.op == "parameter":
+            idx_str = i.rest.split(")")[0]
+            if idx_str.isdigit():
+                param_names[int(idx_str)] = i.name
+        elif i.op in ("bitcast", "reshape", "transpose", "copy"):
+            refs = i.operand_refs()
+            if refs:
+                alias[i.name] = refs[0]
+
+    def canon(name: str) -> str:
+        seen = set()
+        while name in alias and name not in seen:
+            seen.add(name)
+            name = alias[name]
+        return name
+
+    # Names sliced inside the fusion -> window bytes of the slice result.
+    sliced: dict[str, float] = {}
+    for i in comp.instrs:
+        if i.op in ("dynamic-slice", "slice"):
+            refs = i.operand_refs()
+            if refs:
+                src = canon(refs[0])
+                sliced[src] = sliced.get(src, 0.0) + _shape_bytes(i.type_str)
+        elif i.op == "gather" and i.operand_refs():
+            src = canon(i.operand_refs()[0])
+            sliced[src] = sliced.get(src, 0.0) + _shape_bytes(i.type_str)
+
+    fusion_refs = ins.operand_refs()
+    total = 0.0
+    for pos, ref in enumerate(fusion_refs):
+        pname = param_names.get(pos)
+        full = _shape_bytes(types.get(ref, ""))
+        if pname is not None and pname in sliced:
+            total += min(sliced[pname], float(full))
+        else:
+            total += float(full)
+    # XLA:CPU FloatNormalization widens bf16 values to f32 with convert
+    # round-trips inside fusions; the TPU target moves them at bf16.  Halve
+    # the traffic of normalized fusions (approximate; flagged in §Roofline).
+    if any(i.op == "convert" and "bf16" in i.type_str for i in comp.instrs):
+        roundtrip = True
+    else:
+        roundtrip = False
+    root = comp.root
+    if root is not None and root.op == "dynamic-update-slice":
+        rrefs = root.operand_refs()
+        upd = types.get(canon(rrefs[1]), "") if len(rrefs) > 1 else ""
+        # The written window (+ the aliased big operand was counted as read
+        # in full above only if not sliced; subtract it — DUS aliases it).
+        if rrefs:
+            big = canon(rrefs[0])
+            for pos, ref in enumerate(fusion_refs):
+                if param_names.get(pos) == big:
+                    total -= _shape_bytes(types.get(ref, ""))
+                    break
+        total += 2.0 * _shape_bytes(upd)
+    else:
+        total += _shape_bytes(ins.type_str)
+    if roundtrip:
+        total *= 0.5
+    return max(total, 0.0)
+
+
+def _true_width_factor(ins: Instr, types: dict[str, str],
+                       comps: dict[str, Computation],
+                       producers: dict[str, "Instr"]) -> float:
+    """XLA:CPU's FloatNormalization pass rewrites bf16 compute to f32 and
+    wraps values in bf16<->f32 convert round-trips; collectives then carry
+    f32 payloads the TPU target would move as bf16.  Detect the round-trip
+    on the producer side and count such collectives at half width."""
+    if "f32" not in ins.type_str:
+        return 1.0
+    refs = ins.operand_refs()
+    prod = producers.get(refs[0]) if refs else None
+    if prod is None:
+        return 1.0
+    if prod.op == "convert" and "bf16" in types.get(
+            prod.operand_refs()[0] if prod.operand_refs() else "", ""):
+        return 0.5
+    if prod.op == "fusion":
+        tgt = comps.get(prod.attr_ref("calls") or "")
+        if tgt is not None:
+            for i in tgt.instrs:
+                if i.op == "convert" and "bf16" in i.type_str:
+                    return 0.5
+    return 1.0
+
+
+def _collective_wire_bytes(ins: Instr, types: dict[str, str],
+                           comps: dict[str, Computation],
+                           producers: dict[str, "Instr"]) -> tuple[
+        Optional[str], float]:
+    op = ins.op
+    kind = None
+    for c in COLLECTIVE_OPS:
+        if op == c or op == c + "-start":
+            kind = c
+            break
+    if kind is None:
+        return None, 0.0
+    operand = sum(_shape_bytes(types.get(r, "")) for r in ins.operand_refs())
+    if operand == 0:
+        operand = _shape_bytes(ins.rest.split(")")[0]) or _shape_bytes(
+            ins.type_str)
+    result = _shape_bytes(ins.type_str)
+    f = _true_width_factor(ins, types, comps, producers)
+    # Ring-cost model, per device.
+    if kind == "all-reduce":
+        return kind, 2.0 * operand * f
+    if kind == "all-gather":
+        return kind, float(max(result, operand)) * f
+    # reduce-scatter / all-to-all / collective-permute: send ~operand bytes.
+    return kind, float(operand) * f
+
+
+# The CPU-lowered stand-ins for the Pallas kernels materialize per-block
+# score/mask tensors that live in VMEM on the TPU target.  Instructions
+# whose op_name metadata points inside a kernel are bucketed separately so
+# the roofline can report raw and kernel-adjusted memory terms.
+KERNEL_MARKERS = ("flash_attention", "decode_attention", "wkv6", "ssm_scan")
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+@dataclasses.dataclass
+class HloAnalysis:
+    """Trip-count-corrected per-device totals."""
+
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    kernel_internal_bytes: float = 0.0  # subset of hbm_bytes inside kernels
+    collective_wire: dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    flops_uncorrected: float = 0.0  # bodies counted once (= cost_analysis)
+    unknown_trip_whiles: int = 0
+    n_dots: int = 0
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.collective_wire.values())
+
+
+def _in_kernel(ins: Instr) -> bool:
+    m = _OPNAME_RE.search(ins.rest)
+    if not m:
+        return False
+    name = m.group(1)
+    return any(k in name for k in KERNEL_MARKERS)
+
+
+def analyze_hlo(hlo_text: str) -> HloAnalysis:
+    comps, entry, types = parse_module(hlo_text)
+    mult, fusion_comps, unknown = _multipliers(comps, entry)
+    producers: dict[str, Instr] = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            producers[ins.name] = ins
+    out = HloAnalysis(unknown_trip_whiles=unknown)
+    coll: dict[str, float] = defaultdict(float)
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        executed = cname not in fusion_comps
+        for ins in comp.instrs:
+            if ins.op == "dot":
+                f = _dot_flops(ins, types)
+                out.flops += m * f
+                out.flops_uncorrected += f
+                out.n_dots += 1
+            if executed:
+                b = m * _instr_bytes(ins, types, comps)
+                out.hbm_bytes += b
+                if b and _in_kernel(ins):
+                    out.kernel_internal_bytes += b
+                kind, wire = _collective_wire_bytes(ins, types, comps,
+                                                    producers)
+                if kind:
+                    coll[kind] += m * wire
+    out.collective_wire = dict(coll)
+    return out
+
+
+def bytes_by_opname(hlo_text: str, depth: int = 6,
+                    collectives_only: bool = False) -> dict[str, float]:
+    """Trip-count-weighted HBM bytes (or collective wire bytes) grouped by
+    op_name prefix — the §Perf 'where do the bytes go?' profile."""
+    comps, entry, types = parse_module(hlo_text)
+    mult, fusion_comps, _ = _multipliers(comps, entry)
+    producers = {i.name: i for c in comps.values() for i in c.instrs}
+    out: dict[str, float] = defaultdict(float)
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0 or cname in fusion_comps:
+            continue
+        for ins in comp.instrs:
+            if collectives_only:
+                kind, wire = _collective_wire_bytes(ins, types, comps,
+                                                    producers)
+                b = wire if kind else 0.0
+            else:
+                b = _instr_bytes(ins, types, comps)
+            if not b:
+                continue
+            om = _OPNAME_RE.search(ins.rest)
+            name = om.group(1) if om else f"<{ins.op}>"
+            key = "/".join(name.split("/")[:depth])
+            if collectives_only:
+                key = f"{ins.op}: {key}"
+            out[key] += m * b
+    return dict(out)
+
+
+def flops_by_opname(hlo_text: str, depth: int = 3) -> dict[str, float]:
+    """Trip-count-weighted dot FLOPs grouped by op_name prefix (profiling
+    aid for the perf loop: 'where does the compute actually go?')."""
+    comps, entry, types = parse_module(hlo_text)
+    mult, _, _ = _multipliers(comps, entry)
+    out: dict[str, float] = defaultdict(float)
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for ins in comp.instrs:
+            if ins.op != "dot":
+                continue
+            om = _OPNAME_RE.search(ins.rest)
+            name = om.group(1) if om else "<?>"
+            key = "/".join(name.split("/")[:depth])
+            out[key] += m * _dot_flops(ins, types)
+    return dict(out)
+
+
+# --------------------------------------------------------------------------
+# Roofline terms
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Three-term roofline for one (arch x shape x mesh) cell, per step.
+
+    ``memory_s`` is the raw parsed term; ``memory_adj_s`` replaces the
+    kernel-internal traffic of the CPU stand-ins (score/mask blocks that
+    stay in VMEM on TPU) with the analytic Pallas-kernel traffic.  The
+    dominant-term analysis uses the adjusted term — it reflects the TPU
+    target, not the CPU fallback artifact.  Both are reported.
+    """
+
+    compute_s: float
+    memory_s: float
+    memory_adj_s: float
+    collective_s: float
+    model_flops: float  # useful (analytic) FLOPs for the whole step, global
+    hlo_flops_global: float
+    n_chips: int = 0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_adj_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)  # type: ignore[arg-type]
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_adj_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPS — how much compiled compute is useful."""
+        return self.model_flops / max(self.hlo_flops_global, 1.0)
+
+    @property
+    def mfu_bound(self) -> float:
+        """Best-case MFU if the step runs exactly at the dominant term."""
+        if not self.n_chips:
+            return 0.0
+        return (self.model_flops / max(self.bound_s, 1e-12)) / (
+            PEAK_FLOPS * self.n_chips)
+
+
+def roofline_terms(analysis: HloAnalysis, n_chips: int,
+                   model_flops: float,
+                   kernel_bytes_global: float = 0.0) -> Roofline:
+    """Per-device analysis -> step-level roofline terms (seconds)."""
+    adj_bytes = (analysis.hbm_bytes - analysis.kernel_internal_bytes
+                 + kernel_bytes_global / max(n_chips, 1))
+    return Roofline(
+        compute_s=analysis.flops / PEAK_FLOPS,
+        memory_s=analysis.hbm_bytes / HBM_BW,
+        memory_adj_s=max(adj_bytes, 0.0) / HBM_BW,
+        collective_s=analysis.collective_bytes / LINK_BW,
+        model_flops=model_flops,
+        hlo_flops_global=analysis.flops * n_chips,
+        n_chips=n_chips,
+    )
+
+
+# --------------------------------------------------------------------------
+# Analytic MODEL_FLOPS per (arch x shape)
+# --------------------------------------------------------------------------
+
+
+def kernel_hbm_bytes(cfg, case, *, block_q: int = 512) -> float:
+    """Analytic HBM traffic (global bytes/step) of the Pallas kernels.
+
+    On TPU the attention/scan kernels stream Q/K/V/O between HBM and VMEM;
+    the per-block score/mask tensors the CPU stand-in materializes never
+    leave VMEM.  This is the traffic that replaces ``kernel_internal_bytes``
+    in the kernel-adjusted memory term.  Model: flash fwd reads Q once and
+    K/V once per (causal-reachable) Q-block pass and writes O; backward ~2x
+    forward; remat re-runs forward once.  Decode reads the KV cache once.
+    """
+    b, s = case.global_batch, case.seq_len
+    d, kv_d = cfg.n_heads * cfg.dh, cfg.n_kv_heads * cfg.dh
+    bf16 = 2.0
+    if cfg.family == "rwkv":
+        # wkv6 scan: read r/k/v/w + write out + state traffic ~ 6 x (b,s,d).
+        return 6.0 * b * s * cfg.d_model * bf16 * cfg.n_layers * (
+            3.0 if case.kind == "train" else 1.0)
+    n_attn = cfg.n_layers + getattr(cfg, "encoder_layers", 0)
+    if case.kind in ("train", "prefill"):
+        q_o = 2.0 * b * s * d * bf16
+        if cfg.sliding_window and cfg.local_global_ratio > 0:
+            n_glob = max(cfg.n_layers // (cfg.local_global_ratio + 1), 1)
+            kv_pass_g = max(-(-s // block_q) / 2.0, 1.0)
+            kv_pass_l = max(cfg.sliding_window / block_q, 1.0)
+            kv = 2.0 * b * s * kv_d * bf16
+            fwd = (n_glob * (q_o + kv_pass_g * kv)
+                   + (cfg.n_layers - n_glob) * (q_o + kv_pass_l * kv))
+        else:
+            w = cfg.sliding_window or s
+            eff = min(w, s)
+            kv_pass = max(-(-s // block_q) / 2.0, 1.0) if w >= s else max(
+                eff / block_q, 1.0)
+            kv = 2.0 * b * s * kv_d * bf16
+            fwd = n_attn * (q_o + kv_pass * kv)
+        if cfg.family == "hybrid" and cfg.ssm_state:
+            fwd += 4.0 * b * s * cfg.d_model * bf16 * cfg.n_layers
+        return fwd * (4.0 if case.kind == "train" else 1.0)
+    # decode: stream the KV cache once per step.
+    w = cfg.sliding_window or s
+    eff = min(w, s)
+    traffic = 2.0 * b * eff * kv_d * bf16 * cfg.n_layers
+    if cfg.family == "hybrid" and cfg.ssm_state:
+        traffic += 2.0 * b * cfg.n_heads * cfg.dh * cfg.ssm_state * 4.0 * \
+            cfg.n_layers
+    return traffic
+
+
+def model_flops(cfg, case) -> float:
+    """Useful FLOPs of one step, whole cluster (6ND / 2ND + attention)."""
+    b, s = case.global_batch, case.seq_len
+    n_active = cfg.active_param_count()
+    # Matmul params exclude the input embedding lookup (a gather); a tied
+    # head still *matmuls* the shared V x D table, so it stays counted.
+    emb = cfg.padded_vocab * cfg.d_model
+    n_matmul = n_active if cfg.tie_embeddings else n_active - emb
+    tokens = b * s
+    attn_dim = cfg.n_heads * cfg.dh
+    if cfg.family == "rwkv":
+        attn_fwd = 0.0
+    else:
+        n_attn_layers = cfg.n_layers + getattr(cfg, "encoder_layers", 0)
+        if case.kind in ("train", "prefill"):
+            # causal: half of the s^2 block matrix, QK^T + AV.
+            per_layer = 2.0 * b * s * s * attn_dim  # 2 matmuls x 1/2 causal x 2flops
+            if cfg.sliding_window and cfg.local_global_ratio > 0:
+                w = cfg.sliding_window
+                n_glob = max(cfg.n_layers // (cfg.local_global_ratio + 1), 1)
+                n_loc = cfg.n_layers - n_glob
+                per_loc = 2.0 * b * s * min(s, w) * attn_dim * 2
+                attn_fwd = n_glob * per_layer + n_loc * per_loc
+            elif cfg.sliding_window:
+                w = cfg.sliding_window
+                attn_fwd = n_attn_layers * 2.0 * b * s * min(s, w) * attn_dim * 2
+            else:
+                attn_fwd = n_attn_layers * per_layer
+        else:  # decode: one token vs s keys
+            attn_fwd = cfg.n_layers * 4.0 * b * s * attn_dim
+            if cfg.sliding_window:
+                w = min(cfg.sliding_window, s)
+                attn_fwd = cfg.n_layers * 4.0 * b * w * attn_dim
+    if case.kind == "train":
+        return 6.0 * n_matmul * tokens + 3.0 * attn_fwd
+    if case.kind == "prefill":
+        return 2.0 * n_matmul * tokens + attn_fwd
+    # decode: one new token per sequence.
+    return 2.0 * n_matmul * b + attn_fwd

@@ -1,0 +1,46 @@
+"""Assigned architecture configs. ``get_config(name, reduced=...)``."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+ARCHS = (
+    "qwen2_7b",
+    "gemma3_27b",
+    "starcoder2_15b",
+    "qwen1_5_110b",
+    "seamless_m4t_large_v2",
+    "rwkv6_1_6b",
+    "llama3_2_vision_11b",
+    "qwen2_moe_a2_7b",
+    "mixtral_8x7b",
+    "hymba_1_5b",
+)
+
+# CLI ids (--arch <id>) -> module names.
+ALIASES = {
+    "qwen2-7b": "qwen2_7b",
+    "gemma3-27b": "gemma3_27b",
+    "starcoder2-15b": "starcoder2_15b",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "llama-3.2-vision-11b": "llama3_2_vision_11b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "hymba-1.5b": "hymba_1_5b",
+}
+
+
+def get_config(name: str, reduced: bool = False) -> ModelConfig:
+    mod_name = ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+    if mod_name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ALIASES)}")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.reduced_config() if reduced else mod.config()
+
+
+def all_arch_ids() -> list[str]:
+    return list(ALIASES)

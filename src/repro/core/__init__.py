@@ -1,0 +1,30 @@
+"""FaST-GShare core: the paper's spatio-temporal sharing control plane."""
+
+from repro.core.cluster import Cluster, Node, Simulator
+from repro.core.manager import Token, TokenScheduler, fair_share_baseline
+from repro.core.maximal_rectangles import MaxRectsNode, MaxRectsPool, Placement
+from repro.core.model_sharing import MemoryModel, ModelStore, pytree_nbytes
+from repro.core.profiler import (ProfileDB, TrialResult, measure_callable_trial,
+                                 profile_function, simulate_trial)
+from repro.core.resources import SCALE, Alloc, Rect
+from repro.core.scaling import (FunctionPodQueue, ProfilePoint, ScaleDecision,
+                                heuristic_scale, processing_gap)
+from repro.core.slo import SLORecorder
+from repro.core.workload import (PAPER_ZOO, Request, ServiceCurve,
+                                 diurnal_trace, poisson_arrivals,
+                                 predicted_rps, trace_arrivals)
+
+__all__ = [
+    "Alloc", "Rect", "SCALE",
+    "TokenScheduler", "Token", "fair_share_baseline",
+    "MaxRectsPool", "MaxRectsNode", "Placement",
+    "ModelStore", "MemoryModel", "pytree_nbytes",
+    "ProfilePoint", "ScaleDecision", "FunctionPodQueue",
+    "heuristic_scale", "processing_gap",
+    "ProfileDB", "TrialResult", "profile_function", "simulate_trial",
+    "measure_callable_trial",
+    "Cluster", "Node", "Simulator",
+    "SLORecorder",
+    "ServiceCurve", "PAPER_ZOO", "Request",
+    "poisson_arrivals", "trace_arrivals", "diurnal_trace", "predicted_rps",
+]

@@ -1,0 +1,444 @@
+"""Cluster control plane + discrete-event simulator.
+
+Faithfully executes the paper's full serving stack — FaST-Manager token
+scheduling per node, MRA node selection, heuristic auto-scaling, model
+sharing admission — over virtual time, so every benchmark figure can be
+reproduced deterministically on this CPU-only container.  The *algorithms*
+are the real implementations from this package (not re-derivations); only
+step wall-times come from calibrated ``ServiceCurve``s (DESIGN.md §7).
+
+Fault-tolerance features exercised here (large-scale runnability):
+
+* **Node failure**: in-flight and queued requests are re-queued to surviving
+  replicas; the node's rectangles are released and evicted pods re-placed
+  via MRA on surviving nodes.
+* **Straggler mitigation**: nodes carry a ``slowdown`` factor; the control
+  loop compares per-pod service rates against the fleet median and re-places
+  pods whose node is degraded beyond a threshold.
+* **Elastic scaling**: the autoscale loop adds/removes pods from live
+  predicted RPS using the paper's Alg. 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import statistics
+from collections import deque
+from typing import Callable, Optional
+
+from repro.core.manager import TokenScheduler
+from repro.core.maximal_rectangles import MaxRectsPool, Placement
+from repro.core.model_sharing import MemoryModel
+from repro.core.resources import Alloc
+from repro.core.scaling import (FunctionPodQueue, ProfilePoint, ScaleDecision,
+                                heuristic_scale, processing_gap)
+from repro.core.slo import SLORecorder
+from repro.core.workload import Request, ServiceCurve
+
+
+# --------------------------------------------------------------------------
+# Event engine
+# --------------------------------------------------------------------------
+
+
+class Simulator:
+    """Minimal deterministic discrete-event engine."""
+
+    def __init__(self) -> None:
+        self._heap: list[tuple[float, int, Callable[[], None]]] = []
+        self._seq = itertools.count()
+        self.now = 0.0
+
+    def at(self, time: float, fn: Callable[[], None]) -> None:
+        if time < self.now - 1e-12:
+            raise ValueError(f"event in the past: {time} < {self.now}")
+        heapq.heappush(self._heap, (time, next(self._seq), fn))
+
+    def after(self, delay: float, fn: Callable[[], None]) -> None:
+        self.at(self.now + delay, fn)
+
+    def run(self, until: float) -> None:
+        while self._heap and self._heap[0][0] <= until:
+            time, _, fn = heapq.heappop(self._heap)
+            self.now = time
+            fn()
+        self.now = max(self.now, until)
+
+
+# --------------------------------------------------------------------------
+# Pods and nodes
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PodRuntime:
+    """A running function instance bound to a node."""
+
+    pod_id: str
+    fn: str
+    curve: ServiceCurve
+    alloc: Alloc
+    point: ProfilePoint
+    placement: Placement
+    max_batch: int = 1
+    queue: deque = dataclasses.field(default_factory=deque)
+    in_flight: list = dataclasses.field(default_factory=list)
+    waiting_token: bool = False
+    retired: bool = False
+    steps: int = 0
+
+
+class Node:
+    """One accelerator node: token scheduler + memory accounting."""
+
+    def __init__(self, node_id: int, mem_bytes: int, window: float = 1.0,
+                 sharing: bool = True, slowdown: float = 1.0):
+        self.node_id = node_id
+        self.mem_bytes = mem_bytes
+        self.scheduler = TokenScheduler(window=window)
+        self.sharing = sharing
+        self.slowdown = slowdown
+        self.alive = True
+        self.pods: dict[str, PodRuntime] = {}
+        # function -> instance count, for the shared-memory footprint model
+        self._fn_instances: dict[str, int] = {}
+        self._fn_memmodel: dict[str, MemoryModel] = {}
+
+    def mem_used(self) -> int:
+        return sum(
+            self._fn_memmodel[fn].footprint(n, self.sharing)
+            for fn, n in self._fn_instances.items() if n > 0
+        )
+
+    def admits(self, fn: str, mm: MemoryModel) -> bool:
+        n = self._fn_instances.get(fn, 0)
+        projected = self.mem_used() - mm.footprint(n, self.sharing) \
+            + mm.footprint(n + 1, self.sharing)
+        return projected <= self.mem_bytes
+
+    def add_pod(self, pod: PodRuntime, mm: MemoryModel) -> None:
+        self.pods[pod.pod_id] = pod
+        self._fn_memmodel[pod.fn] = mm
+        self._fn_instances[pod.fn] = self._fn_instances.get(pod.fn, 0) + 1
+        # DCGM-style occupancy: a pod drains at most its model's saturation
+        # share, however large its allocation (Fig. 1b's racing pods).
+        self.scheduler.register(
+            pod.pod_id, pod.alloc,
+            occupied_sm=min(pod.alloc.sm, pod.curve.sm_sat))
+
+    def remove_pod(self, pod_id: str) -> PodRuntime:
+        pod = self.pods.pop(pod_id)
+        self._fn_instances[pod.fn] -= 1
+        self.scheduler.deregister(pod_id)
+        return pod
+
+
+# --------------------------------------------------------------------------
+# Cluster
+# --------------------------------------------------------------------------
+
+
+class Cluster:
+    """FaST-GShare control plane over a simulated node fleet."""
+
+    def __init__(
+        self,
+        n_nodes: int,
+        mem_bytes: int = 16 * 1024**3,
+        window: float = 1.0,
+        sharing: bool = True,
+        allow_grow: bool = False,
+        max_batch: int = 1,
+        scheduler_period: float = 0.05,
+    ):
+        self.sim = Simulator()
+        self.window = window
+        self.max_batch = max_batch
+        self.nodes = [Node(i, mem_bytes, window, sharing) for i in range(n_nodes)]
+        self.pool = MaxRectsPool(n_nodes, allow_grow=allow_grow)
+        self.pods: dict[str, PodRuntime] = {}
+        self.fn_pods: dict[str, list[str]] = {}
+        self.fn_curves: dict[str, ServiceCurve] = {}
+        self.fn_queues: dict[str, FunctionPodQueue] = {}
+        self.recorders: dict[str, SLORecorder] = {}
+        self._rr: dict[str, int] = {}
+        self._pod_seq = itertools.count()
+        self.dropped = 0
+        self.rescheduled = 0
+        # Periodic scheduler pump so window rolls release blocked pods.
+        for node in self.nodes:
+            self._tick(node, scheduler_period)
+
+    # -- deployment -------------------------------------------------------
+
+    def register_function(self, fn: str, curve: ServiceCurve,
+                          slo_latency: Optional[float] = None) -> None:
+        self.fn_curves[fn] = curve
+        self.fn_queues.setdefault(fn, FunctionPodQueue())
+        self.recorders[fn] = SLORecorder(fn=fn, slo_latency=slo_latency)
+        self.fn_pods.setdefault(fn, [])
+
+    def memory_model(self, fn: str) -> MemoryModel:
+        c = self.fn_curves[fn]
+        return MemoryModel(weight_bytes=c.weight_bytes,
+                           framework_bytes=c.framework_bytes)
+
+    def deploy(self, fn: str, point: ProfilePoint,
+               elastic_limit: float | None = None,
+               track: bool = True) -> Optional[str]:
+        """Place one pod of ``fn`` at profile point ``point`` via MRA.
+
+        ``track=False`` skips the L_j capacity-queue push — used by
+        ``autoscale``, which manages L_j itself (Alg. 1 already pushed a
+        provisional entry).
+        """
+        alloc = point.to_alloc(elastic_limit)
+        pod_id = f"{fn}-{next(self._pod_seq)}"
+        mm = self.memory_model(fn)
+        excluded: set[int] = set()
+        while True:
+            placement = self.pool.schedule(alloc, pod_id, exclude=excluded)
+            if placement is None:
+                return None
+            if placement.node >= len(self.nodes):  # pool grew (allow_grow)
+                self.nodes.append(Node(placement.node,
+                                       self.nodes[0].mem_bytes,
+                                       self.window,
+                                       self.nodes[0].sharing))
+                self._tick(self.nodes[-1], 0.05)
+            node = self.nodes[placement.node]
+            if node.alive and node.admits(fn, mm):
+                break
+            # Rectangle fit but node infeasible (dead / memory): retry others.
+            self.pool.release(placement)
+            excluded.add(placement.node)
+        pod = PodRuntime(pod_id=pod_id, fn=fn, curve=self.fn_curves[fn],
+                         alloc=alloc, point=point, placement=placement,
+                         max_batch=self.max_batch)
+        node.add_pod(pod, mm)
+        self.pods[pod_id] = pod
+        self.fn_pods[fn].append(pod_id)
+        if track:
+            self.fn_queues[fn].push(pod_id, point)
+        return pod_id
+
+    def retire(self, pod_id: str, drain: bool = True) -> None:
+        """Scale-down: stop routing to the pod; release resources when idle."""
+        pod = self.pods[pod_id]
+        pod.retired = True
+        self.fn_pods[pod.fn].remove(pod_id)
+        self.fn_queues[pod.fn].remove(pod_id)
+        if not drain or (not pod.queue and not pod.in_flight
+                         and not pod.waiting_token):
+            self._teardown(pod)
+
+    def _teardown(self, pod: PodRuntime) -> None:
+        node = self.nodes[pod.placement.node]
+        if pod.pod_id in node.pods and not pod.waiting_token \
+                and node.scheduler.pods[pod.pod_id].holding is None:
+            node.remove_pod(pod.pod_id)
+            self.pool.release(pod.placement)
+            del self.pods[pod.pod_id]
+
+    # -- request path -------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.sim.at(req.arrival, lambda: self._arrive(req))
+
+    def submit_all(self, reqs: list[Request]) -> None:
+        for r in reqs:
+            self.submit(r)
+
+    def _arrive(self, req: Request) -> None:
+        pods = [p for p in self.fn_pods.get(req.fn, ())
+                if not self.pods[p].retired]
+        if not pods:
+            self.dropped += 1
+            return
+        # Join-shortest-queue routing across the function's replicas.
+        pod = min((self.pods[p] for p in pods),
+                  key=lambda p: len(p.queue) + len(p.in_flight))
+        pod.queue.append(req)
+        self._want_token(pod)
+
+    def _want_token(self, pod: PodRuntime) -> None:
+        node = self.nodes[pod.placement.node]
+        if not node.alive or pod.waiting_token or not pod.queue:
+            return
+        if node.scheduler.pods[pod.pod_id].holding is not None:
+            return
+        pod.waiting_token = True
+        node.scheduler.request_token(pod.pod_id, self.sim.now)
+        self._pump(node)
+
+    def _pump(self, node: Node) -> None:
+        if not node.alive:
+            return
+        for token in node.scheduler.dispatch(self.sim.now):
+            pod = node.pods[token.pod_id]
+            pod.waiting_token = False
+            self._start_step(node, pod)
+
+    def _start_step(self, node: Node, pod: PodRuntime) -> None:
+        batch = min(len(pod.queue), pod.max_batch)
+        if batch == 0:
+            # Token granted but queue drained (e.g. rebalanced away): return it.
+            node.scheduler.complete(pod.pod_id, 0.0, self.sim.now)
+            return
+        reqs = [pod.queue.popleft() for _ in range(batch)]
+        pod.in_flight = reqs
+        dur = pod.curve.step_time(pod.alloc.sm, batch) * node.slowdown
+        pod.steps += 1
+        self.sim.after(dur, lambda: self._finish_step(node, pod, reqs, dur))
+
+    def _finish_step(self, node: Node, pod: PodRuntime, reqs: list[Request],
+                     dur: float) -> None:
+        if not node.alive:
+            return  # failure handler already re-queued them
+        pod.in_flight = []
+        rec = self.recorders[pod.fn]
+        for r in reqs:
+            rec.record(self.sim.now - r.arrival, self.sim.now)
+        node.scheduler.complete(pod.pod_id, dur, self.sim.now)
+        if pod.retired and not pod.queue:
+            self._teardown(pod)
+        else:
+            self._want_token(pod)
+        self._pump(node)
+
+    def _tick(self, node: Node, period: float) -> None:
+        def tick() -> None:
+            if node.alive:
+                self._pump(node)
+                # Re-arm any pod that has work but lost its request across a
+                # window roll.
+                for pod in list(node.pods.values()):
+                    if pod.queue and not pod.waiting_token and not pod.in_flight:
+                        self._want_token(pod)
+            self.sim.after(period, tick)
+
+        self.sim.after(period, tick)
+
+    # -- autoscaling (paper Alg. 1 in the loop) ------------------------------
+
+    def autoscale(self, predicted: dict[str, float],
+                  profiles: dict[str, list[ProfilePoint]],
+                  slo_latency: dict[str, float] | None = None,
+                  headroom: float = 1.2,
+                  elastic_limit: float | None = 1.0) -> list[ScaleDecision]:
+        """Paper Alg. 1 in the loop.
+
+        ``headroom`` over-provisions capacity relative to predicted load
+        (target utilization 1/headroom) so queueing delay stays bounded —
+        provisioning at exactly rho=1 would violate any latency SLO.
+        ``elastic_limit`` sets Q_limit above Q_request for scaled-up pods
+        (§3.3.2: "enable pods to utilize more GPU resources when the GPU is
+        idle") — Poisson bursts are absorbed instead of blocking until the
+        next window.
+        """
+        inflated = {fn: rps * headroom for fn, rps in predicted.items()}
+        gaps = processing_gap(inflated, self.fn_queues)
+        decisions = heuristic_scale(gaps, profiles, self.fn_queues, slo_latency)
+        applied: list[ScaleDecision] = []
+        for d in decisions:
+            if d.direction > 0:
+                # Alg. 1 pushed a provisional entry under d.pod_id; swap it
+                # for the real pod (or drop it when placement fails).
+                queue = self.fn_queues[d.function]
+                queue.remove(d.pod_id)
+                real = self.deploy(d.function, d.point,
+                                   elastic_limit=elastic_limit, track=False)
+                if real is None:
+                    continue
+                queue.push(real, d.point)
+                applied.append(d)
+            else:
+                assert d.pod_id is not None
+                if d.pod_id in self.pods:
+                    self.retire(d.pod_id)
+                applied.append(d)
+        return applied
+
+    # -- fault tolerance -------------------------------------------------------
+
+    def fail_node(self, node_id: int) -> int:
+        """Kill a node; re-queue its work and re-place its pods via MRA."""
+        node = self.nodes[node_id]
+        node.alive = False
+        self.pool.drain_node(node_id)
+        displaced: list[PodRuntime] = list(node.pods.values())
+        strays: list[Request] = []
+        for pod in displaced:
+            strays.extend(pod.in_flight)
+            strays.extend(pod.queue)
+            pod.in_flight, pod.queue = [], deque()
+            if pod.fn in self.fn_pods and pod.pod_id in self.fn_pods[pod.fn]:
+                self.fn_pods[pod.fn].remove(pod.pod_id)
+            self.fn_queues[pod.fn].remove(pod.pod_id)
+            del self.pods[pod.pod_id]
+        node.pods.clear()
+        replaced = 0
+        for pod in displaced:
+            if pod.retired:
+                continue
+            new_id = self.deploy(pod.fn, pod.point)
+            if new_id is not None:
+                replaced += 1
+        self.rescheduled += len(displaced)
+        # Re-inject stranded requests at the current time.
+        for r in strays:
+            self._arrive(dataclasses.replace(r, arrival=r.arrival))
+        return replaced
+
+    def detect_stragglers(self, threshold: float = 2.0) -> list[int]:
+        """Nodes whose effective service rate lags the fleet median."""
+        rates = {n.node_id: 1.0 / n.slowdown for n in self.nodes if n.alive}
+        if len(rates) < 2:
+            return []
+        med = statistics.median(rates.values())
+        return [nid for nid, r in rates.items() if med / max(r, 1e-9) > threshold]
+
+    def mitigate_stragglers(self, threshold: float = 2.0) -> int:
+        """Re-place pods off straggler nodes (paper-adjacent; DESIGN.md §5)."""
+        moved = 0
+        for nid in self.detect_stragglers(threshold):
+            node = self.nodes[nid]
+            self.pool.cordon(nid)  # stop MRA from re-choosing the straggler
+            for pod in list(node.pods.values()):
+                if pod.retired:
+                    continue
+                if pod.in_flight or pod.waiting_token:
+                    continue  # move only idle pods; busy ones drain first
+                node.remove_pod(pod.pod_id)
+                self.pool.release(pod.placement)
+                self.fn_pods[pod.fn].remove(pod.pod_id)
+                self.fn_queues[pod.fn].remove(pod.pod_id)
+                strays = list(pod.queue)
+                del self.pods[pod.pod_id]
+                if self.deploy(pod.fn, pod.point) is not None:
+                    moved += 1
+                for r in strays:
+                    self._arrive(r)
+        return moved
+
+    # -- metrics ---------------------------------------------------------------
+
+    def run(self, until: float) -> None:
+        self.sim.run(until)
+
+    def gpu_utilization(self, last_n: int = 10) -> float:
+        live = [n for n in self.nodes if n.alive and n.pods]
+        if not live:
+            return 0.0
+        return sum(n.scheduler.utilization(last_n) for n in live) / len(live)
+
+    def sm_occupancy(self, last_n: int = 10) -> float:
+        live = [n for n in self.nodes if n.alive and n.pods]
+        if not live:
+            return 0.0
+        return sum(n.scheduler.occupancy(last_n) for n in live) / len(live)
+
+    def nodes_in_use(self) -> int:
+        return sum(1 for n in self.nodes if n.alive and n.pods)

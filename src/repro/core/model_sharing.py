@@ -1,0 +1,183 @@
+"""Model sharing (paper §3.5): one weight copy per function per node.
+
+The paper shares model tensors between instances of the same function via
+CUDA IPC handles exported by a Model Storage Server.  The TPU/JAX analogue
+(DESIGN.md §2) is **weight-buffer aliasing**: jitted executables are pure
+functions of their inputs, so N instances of a function can be passed *the
+same* device-resident param pytree — the runtime never copies it.  What the
+GPU design achieves with `cuIpcGetMemHandle`, JAX gets from referential
+transparency; what remains to build is the *bookkeeping*: a per-node store
+with STORE/GET semantics, refcounts, eviction, and exact memory accounting
+(reproducing Fig. 13).
+
+Two layers:
+
+* ``ModelStore`` — the live store used by the serving engine; holds real
+  pytrees (JAX arrays or numpy) keyed by (function, tensor-set id).
+* ``MemoryModel`` — closed-form per-node accelerator-memory accounting used
+  by the scheduler's admission control and the Fig.-13 benchmark:
+  ``no_share(n) = n * (framework + weights)``;
+  ``share(n) = (weights + server_overhead) + n * framework``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+# Fixed per-model overhead of the storage-server process context measured by
+# the paper on V100 (§5.5, hatched areas of Fig. 13).
+SERVER_CONTEXT_OVERHEAD = 300 * 1024 * 1024
+
+
+def pytree_nbytes(tree: Any) -> int:
+    """Total bytes of all leaf buffers in a pytree."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for leaf in leaves:
+        if hasattr(leaf, "nbytes"):
+            total += int(leaf.nbytes)
+        else:
+            total += int(np.asarray(leaf).nbytes)
+    return total
+
+
+@dataclasses.dataclass
+class _Entry:
+    tree: Any
+    nbytes: int
+    refcount: int = 0
+
+
+class ModelStore:
+    """Per-node shared weight store with STORE()/GET() (paper Fig. 7).
+
+    ``get`` is the hot path: it returns the stored pytree *by reference*
+    (zero-copy) and bumps the refcount; ``put_back`` releases.  A miss with a
+    ``loader`` triggers the STORE path, exactly like the paper's GET-miss
+    falling back to STORE.
+    """
+
+    def __init__(self, capacity_bytes: Optional[int] = None):
+        self._entries: dict[str, _Entry] = {}
+        self._lock = threading.Lock()
+        self.capacity_bytes = capacity_bytes
+        self.stores = 0
+        self.hits = 0
+        self.misses = 0
+
+    # -- STORE -----------------------------------------------------------
+
+    def store(self, key: str, tree: Any) -> int:
+        """Insert (or overwrite) the tensor set for ``key``; returns bytes."""
+        nbytes = pytree_nbytes(tree)
+        with self._lock:
+            if self.capacity_bytes is not None:
+                projected = self.used_bytes_locked() + nbytes - (
+                    self._entries[key].nbytes if key in self._entries else 0
+                )
+                if projected > self.capacity_bytes:
+                    self._evict_locked(projected - self.capacity_bytes)
+            old = self._entries.get(key)
+            refcount = old.refcount if old else 0
+            self._entries[key] = _Entry(tree=tree, nbytes=nbytes, refcount=refcount)
+            self.stores += 1
+        return nbytes
+
+    # -- GET -------------------------------------------------------------
+
+    def get(self, key: str, loader: Optional[Callable[[], Any]] = None) -> Any:
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None:
+                entry.refcount += 1
+                self.hits += 1
+                return entry.tree
+            self.misses += 1
+        if loader is None:
+            raise KeyError(f"model {key!r} not in store and no loader given")
+        tree = loader()
+        self.store(key, tree)
+        with self._lock:
+            self._entries[key].refcount += 1
+        return tree
+
+    def put_back(self, key: str) -> None:
+        with self._lock:
+            entry = self._entries[key]
+            if entry.refcount <= 0:
+                raise RuntimeError(f"refcount underflow for {key!r}")
+            entry.refcount -= 1
+
+    # -- accounting / eviction --------------------------------------------
+
+    def used_bytes_locked(self) -> int:
+        return sum(e.nbytes for e in self._entries.values())
+
+    def used_bytes(self) -> int:
+        with self._lock:
+            return self.used_bytes_locked()
+
+    def refcount(self, key: str) -> int:
+        with self._lock:
+            return self._entries[key].refcount if key in self._entries else 0
+
+    def contains(self, key: str) -> bool:
+        with self._lock:
+            return key in self._entries
+
+    def _evict_locked(self, need_bytes: int) -> None:
+        """Evict unreferenced entries (largest first) to free ``need_bytes``."""
+        freed = 0
+        victims = sorted(
+            (k for k, e in self._entries.items() if e.refcount == 0),
+            key=lambda k: -self._entries[k].nbytes,
+        )
+        for k in victims:
+            if freed >= need_bytes:
+                break
+            freed += self._entries.pop(k).nbytes
+        if freed < need_bytes:
+            raise MemoryError(
+                f"model store over capacity: need {need_bytes} more bytes but "
+                f"only {freed} evictable"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryModel:
+    """Closed-form footprint of a function's instances on one node (Fig. 13).
+
+    ``framework_bytes`` is the per-instance runtime footprint (framework,
+    activations, CUDA/XLA context); ``weight_bytes`` the parameters.
+    """
+
+    weight_bytes: int
+    framework_bytes: int
+    server_overhead: int = SERVER_CONTEXT_OVERHEAD
+
+    def footprint(self, n_instances: int, sharing: bool) -> int:
+        if n_instances == 0:
+            return 0
+        if not sharing:
+            return n_instances * (self.weight_bytes + self.framework_bytes)
+        server = self.weight_bytes + self.server_overhead
+        return server + n_instances * self.framework_bytes
+
+    def reduction(self, n_instances: int) -> float:
+        """Fractional footprint reduction from sharing at ``n_instances``."""
+        base = self.footprint(n_instances, sharing=False)
+        shared = self.footprint(n_instances, sharing=True)
+        return 1.0 - shared / base
+
+    def max_instances(self, capacity_bytes: int, sharing: bool) -> int:
+        """How many instances fit in ``capacity_bytes`` (Fig.-13 claim:
+        7 ResNeXt pods with sharing vs 4 without on a 16G V100)."""
+        n = 0
+        while self.footprint(n + 1, sharing) <= capacity_bytes:
+            n += 1
+        return n

@@ -1,0 +1,176 @@
+"""Heuristic Scaling Algorithm (paper Alg. 1).
+
+Given each function's RPS processing gap ``ΔRPS_j`` and the profile table
+``P = {<F_j, S_p, Q_p, T_p>}`` from the FaST-Profiler, emit scale-up /
+scale-down configuration decisions:
+
+* Scale **up** (``ΔRPS_j >= 0``): choose the most *efficient* profile point
+  ``p_eff = argmax_p RPR`` where ``RPR = T_p / (S_p * Q_p)`` ("RPS per
+  Resource"); deploy ``n = floor(ΔRPS / T_eff)`` pods of it, then one
+  minimal-but-sufficient ``p_ideal = argmin_p (T_p - r)`` with ``T_p > r``
+  for the residual ``r``.
+* Scale **down** (``ΔRPS_j < 0``): pop lowest-RPR running pods (the ``L_j``
+  priority queue is kept in ascending RPR) while removing a pod keeps the
+  remaining capacity sufficient (``ΔR + T_i <= 0``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import math
+from typing import Iterable, Optional
+
+from repro.core.resources import Alloc
+
+
+@dataclasses.dataclass(frozen=True)
+class ProfilePoint:
+    """One profiler measurement: throughput T at allocation (S, Q)."""
+
+    sm: float
+    quota: float
+    throughput: float  # requests/second
+    p99_latency: float = 0.0  # seconds, used for SLO-feasibility filtering
+
+    @property
+    def rpr(self) -> float:
+        """RPS per Resource = T / (S * Q)."""
+        return self.throughput / (self.sm * self.quota)
+
+    def to_alloc(self, elastic_limit: float | None = None,
+                 mem_bytes: int = 0) -> Alloc:
+        limit = self.quota if elastic_limit is None else max(self.quota, elastic_limit)
+        return Alloc(sm=self.sm, quota_request=self.quota,
+                     quota_limit=limit, mem_bytes=mem_bytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleDecision:
+    function: str
+    point: ProfilePoint
+    direction: int  # +1 scale-up, -1 scale-down
+    # Scale-down: the concrete victim pod.  Scale-up: the provisional id the
+    # algorithm pushed into L_j; the deployer replaces it with the real pod id
+    # (or removes it if placement fails).
+    pod_id: Optional[str] = None
+
+
+@dataclasses.dataclass(order=True)
+class _RunningPod:
+    rpr: float
+    seq: int
+    pod_id: str = dataclasses.field(compare=False)
+    point: ProfilePoint = dataclasses.field(compare=False)
+
+
+class FunctionPodQueue:
+    """Per-function priority queue L_j, ascending RPR (Alg. 1 input)."""
+
+    def __init__(self) -> None:
+        self._heap: list[_RunningPod] = []
+        self._dead: set[str] = set()
+        self._seq = itertools.count()
+
+    def push(self, pod_id: str, point: ProfilePoint) -> None:
+        heapq.heappush(self._heap, _RunningPod(point.rpr, next(self._seq),
+                                               pod_id, point))
+
+    def remove(self, pod_id: str) -> None:
+        self._dead.add(pod_id)
+
+    def _gc(self) -> None:
+        while self._heap and self._heap[0].pod_id in self._dead:
+            self._dead.discard(heapq.heappop(self._heap).pod_id)
+
+    def front(self) -> Optional[_RunningPod]:
+        self._gc()
+        return self._heap[0] if self._heap else None
+
+    def pop(self) -> _RunningPod:
+        self._gc()
+        return heapq.heappop(self._heap)
+
+    def __len__(self) -> int:
+        self._gc()
+        return sum(1 for p in self._heap if p.pod_id not in self._dead)
+
+    def capacity(self) -> float:
+        self._gc()
+        return sum(p.point.throughput for p in self._heap
+                   if p.pod_id not in self._dead)
+
+
+def heuristic_scale(
+    delta_rps: dict[str, float],
+    profiles: dict[str, list[ProfilePoint]],
+    queues: dict[str, FunctionPodQueue],
+    slo_latency: dict[str, float] | None = None,
+) -> list[ScaleDecision]:
+    """Paper Algorithm 1. Mutates ``queues`` to reflect the decisions.
+
+    ``slo_latency`` optionally filters profile points whose measured p99
+    exceeds the function's SLO — a point that violates latency cannot be used
+    no matter how efficient (FaST-Profiler records latency for exactly this).
+    """
+    cfgs: list[ScaleDecision] = []
+    for fn, gap in delta_rps.items():
+        points = profiles[fn]
+        if slo_latency and fn in slo_latency:
+            feasible = [p for p in points if p.p99_latency <= slo_latency[fn]]
+            points = feasible or points  # degrade gracefully if none feasible
+        if not points:
+            raise ValueError(f"no profile points for function {fn}")
+        queue = queues.setdefault(fn, FunctionPodQueue())
+        if gap >= 0:
+            if gap == 0:
+                continue
+            p_eff = max(points, key=lambda p: p.rpr)
+            t_eff = p_eff.throughput
+            n = math.floor(gap / t_eff)
+            r = gap - n * t_eff
+            for _ in range(n):
+                pid = _fresh_pod_id(fn)
+                cfgs.append(ScaleDecision(fn, p_eff, +1, pod_id=pid))
+                queue.push(pid, p_eff)
+            if r > 0:
+                # Minimal sufficient residual config: argmin (T_p - r), T_p > r.
+                candidates = [p for p in points if p.throughput > r]
+                if candidates:
+                    p_ideal = min(candidates, key=lambda p: p.throughput - r)
+                else:  # residual exceeds every point: one more p_eff pod
+                    p_ideal = p_eff
+                pid = _fresh_pod_id(fn)
+                cfgs.append(ScaleDecision(fn, p_ideal, +1, pod_id=pid))
+                queue.push(pid, p_ideal)
+        else:
+            delta_r = gap
+            while delta_r < 0 and len(queue) > 0:
+                front = queue.front()
+                assert front is not None
+                # Only remove while the remaining pods still cover the load.
+                if delta_r + front.point.throughput <= 0:
+                    queue.pop()
+                    cfgs.append(ScaleDecision(fn, front.point, -1,
+                                              pod_id=front.pod_id))
+                    delta_r += front.point.throughput
+                else:
+                    break
+    return cfgs
+
+
+_pod_counter = itertools.count()
+
+
+def _fresh_pod_id(fn: str) -> str:
+    return f"{fn}-pod-{next(_pod_counter)}"
+
+
+def processing_gap(predicted_rps: dict[str, float],
+                   queues: dict[str, FunctionPodQueue]) -> dict[str, float]:
+    """ΔRPS_j = R_j - Σ T_{j,i} over the function's running pods."""
+    return {
+        fn: rps - (queues[fn].capacity() if fn in queues else 0.0)
+        for fn, rps in predicted_rps.items()
+    }

@@ -1,0 +1,57 @@
+"""SLO accounting: per-function latency recorder and violation ratios."""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SLORecorder:
+    """Streaming latency recorder for one function."""
+
+    fn: str
+    slo_latency: Optional[float] = None  # seconds; None = best-effort
+    latencies: list[float] = dataclasses.field(default_factory=list)
+    completion_times: list[float] = dataclasses.field(default_factory=list)
+
+    def record(self, latency: float, completed_at: float) -> None:
+        self.latencies.append(latency)
+        self.completion_times.append(completed_at)
+
+    def count(self) -> int:
+        return len(self.latencies)
+
+    def percentile(self, q: float, since: float = 0.0) -> float:
+        lats = self._window(since)
+        return float(np.percentile(lats, q)) if lats else 0.0
+
+    def p50(self, since: float = 0.0) -> float:
+        return self.percentile(50, since)
+
+    def p99(self, since: float = 0.0) -> float:
+        return self.percentile(99, since)
+
+    def violation_ratio(self, since: float = 0.0) -> float:
+        """Fraction of requests exceeding the SLO (paper: <=1% for ResNet)."""
+        if self.slo_latency is None:
+            return 0.0
+        lats = self._window(since)
+        if not lats:
+            return 0.0
+        return sum(1 for l in lats if l > self.slo_latency) / len(lats)
+
+    def throughput(self, t_start: float, t_end: float) -> float:
+        lo = bisect.bisect_left(self.completion_times, t_start)
+        hi = bisect.bisect_right(self.completion_times, t_end)
+        dur = max(t_end - t_start, 1e-9)
+        return (hi - lo) / dur
+
+    def _window(self, since: float) -> list[float]:
+        if since <= 0.0:
+            return self.latencies
+        lo = bisect.bisect_left(self.completion_times, since)
+        return self.latencies[lo:]

@@ -1,0 +1,169 @@
+"""Workload generation and calibrated service models.
+
+Two halves:
+
+* **Arrival processes** — Poisson open-loop, closed-loop (k6/Locust style
+  virtual users), and step/diurnal RPS traces used by the autoscaling
+  benchmark (paper Fig. 12).
+* **ServiceCurve** — the per-model performance model used by the
+  discrete-event simulator.  Calibrated against the paper's V100 numbers
+  (§5.3): single-instance throughput saturates at a model-specific spatial
+  share ``sm_sat`` — the *reason* spatial sharing wins — and scales
+  proportionally with the temporal quota (§5.2 "throughput over temporal
+  dimension is basically proportional").
+
+The saturation shape is the power law ``c(s) = (s / sm_sat) ** p`` clamped
+to 1 beyond ``sm_sat``; ``p`` is fit per model so the curve passes exactly
+through the paper's measured per-pod throughput at 12% SM (an exponential
+shape cannot: it is concave-only, while RNNT/GNMT measure *convex*
+sub-saturation scaling, c(0.12) < 0.12/sm_sat).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterator
+
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# Service model
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceCurve:
+    """Throughput/latency model of one function (DL model) on one node.
+
+    ``r_max``: saturated single-instance throughput (req/s) at full quota.
+    ``sm_sat``: spatial share where a single instance saturates.
+    ``tau``: concavity of the sub-saturation region.
+    ``weight_bytes``/``framework_bytes``: memory model inputs (Fig. 13).
+    """
+
+    name: str
+    r_max: float
+    sm_sat: float
+    p: float  # power-law exponent of the sub-saturation region
+    weight_bytes: int = 0
+    framework_bytes: int = 0
+
+    def rate(self, sm: float, quota: float = 1.0) -> float:
+        """Sustainable throughput (req/s) at allocation (sm, quota)."""
+        c = min(sm / self.sm_sat, 1.0) ** self.p
+        return self.r_max * c * quota
+
+    def step_time(self, sm: float, batch: int = 1) -> float:
+        """Wall time of one dispatched step processing ``batch`` requests."""
+        return batch / self.rate(sm, quota=1.0)
+
+
+def _curve(name: str, r_max: float, sm_sat: float, s_ref: float, c_ref: float,
+           weight_mb: int, framework_mb: int) -> ServiceCurve:
+    """Fit p so the curve passes exactly through (s_ref, c_ref)."""
+    p = math.log(c_ref) / math.log(min(s_ref / sm_sat, 1.0 - 1e-9))
+    return ServiceCurve(
+        name=name,
+        r_max=r_max,
+        sm_sat=sm_sat,
+        p=p,
+        weight_bytes=weight_mb * 1024 * 1024,
+        framework_bytes=framework_mb * 1024 * 1024,
+    )
+
+
+# Calibration targets (paper §5.3, §5.5):
+#   resnet: racing pod 71.37 req/s; 8 pods @12% -> 296.8 => c(0.12)=0.52
+#   rnnt:   racing pod 12.51 req/s; 8 pods @12% -> ~40   => c(0.12)=0.40
+#   gnmt:   racing pod 28.85 req/s; spatial 43.79 (0.52x gain) => c(0.12)=0.19
+#   memory: resnet 1525M total / ~100M weights; vit_huge 4735M / 2634M weights.
+PAPER_ZOO: dict[str, ServiceCurve] = {
+    "resnet": _curve("resnet", r_max=71.37, sm_sat=0.24, s_ref=0.12, c_ref=0.52,
+                     weight_mb=98, framework_mb=1427),
+    "rnnt": _curve("rnnt", r_max=12.51, sm_sat=0.24, s_ref=0.12, c_ref=0.40,
+                   weight_mb=460, framework_mb=1260),
+    "gnmt": _curve("gnmt", r_max=28.85, sm_sat=0.50, s_ref=0.12, c_ref=0.19,
+                   weight_mb=520, framework_mb=1300),
+    "bert": _curve("bert", r_max=48.0, sm_sat=0.50, s_ref=0.12, c_ref=0.30,
+                   weight_mb=420, framework_mb=1350),
+    # resnext memory calibrated to the §5.5 claim "a 16G V100 can accommodate
+    # 7 ResNeXt pods with sharing, whereas only 4 without": total must lie in
+    # (3277, 4096] MB and framework > 1726 MB for both bounds to bind.
+    "resnext": _curve("resnext", r_max=33.0, sm_sat=0.60, s_ref=0.12, c_ref=0.25,
+                      weight_mb=2200, framework_mb=1850),
+    "vit_huge": _curve("vit_huge", r_max=21.0, sm_sat=0.80, s_ref=0.12, c_ref=0.18,
+                       weight_mb=2634, framework_mb=2101),
+}
+
+
+# --------------------------------------------------------------------------
+# Arrival processes
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    fn: str
+    arrival: float
+    req_id: int
+
+
+def poisson_arrivals(fn: str, rps: float, duration: float, *,
+                     seed: int = 0, start: float = 0.0) -> list[Request]:
+    """Open-loop Poisson arrivals at ``rps`` for ``duration`` seconds."""
+    rng = np.random.default_rng(seed)
+    out: list[Request] = []
+    t = start
+    i = 0
+    while True:
+        t += rng.exponential(1.0 / rps)
+        if t >= start + duration:
+            break
+        out.append(Request(fn=fn, arrival=t, req_id=i))
+        i += 1
+    return out
+
+
+def trace_arrivals(fn: str, rps_trace: list[tuple[float, float]],
+                   *, seed: int = 0) -> list[Request]:
+    """Piecewise-constant RPS trace [(t_start, rps), ...] -> arrivals.
+
+    Drives the Fig.-12 autoscaling experiment (RPS steps over time).
+    """
+    rng = np.random.default_rng(seed)
+    out: list[Request] = []
+    i = 0
+    for (t0, rps), (t1, _) in zip(rps_trace, rps_trace[1:] + [(math.inf, 0.0)]):
+        if rps <= 0:
+            continue
+        t = t0
+        while True:
+            t += rng.exponential(1.0 / rps)
+            if t >= t1:
+                break
+            out.append(Request(fn=fn, arrival=t, req_id=i))
+            i += 1
+            if t1 is math.inf and i > 10_000_000:  # pragma: no cover
+                raise RuntimeError("unbounded trace")
+    return out
+
+
+def diurnal_trace(base_rps: float, peak_rps: float, period: float,
+                  duration: float, step: float = 10.0) -> list[tuple[float, float]]:
+    """Sinusoidal day/night RPS trace sampled every ``step`` seconds."""
+    out = []
+    t = 0.0
+    while t < duration:
+        phase = 2 * math.pi * t / period
+        rps = base_rps + (peak_rps - base_rps) * 0.5 * (1 - math.cos(phase))
+        out.append((t, rps))
+        t += step
+    return out
+
+
+def predicted_rps(window: list[Request], horizon: float, now: float) -> float:
+    """Gateway-style load prediction: mean RPS over the trailing horizon."""
+    recent = [r for r in window if now - horizon <= r.arrival <= now]
+    return len(recent) / horizon if horizon > 0 else 0.0

@@ -1,0 +1,5 @@
+from repro.distributed.sharding import (cache_pspec, constrain, current_mesh,
+                                        named, resolve_pspec, use_mesh)
+
+__all__ = ["constrain", "use_mesh", "current_mesh", "resolve_pspec",
+           "cache_pspec", "named"]

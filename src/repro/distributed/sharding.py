@@ -1,0 +1,161 @@
+"""Divisibility-aware logical sharding rules.
+
+Model code annotates tensors with *logical* dimension names; this module
+resolves them to ``PartitionSpec``s against whatever mesh is active.  A rule
+is applied only when the dimension size divides the product of the mapped
+mesh axes — otherwise that dimension is left unsharded.  This single policy
+makes every assigned architecture shard cleanly on the production meshes:
+
+* qwen2-7b has 28 query heads (not divisible by model=16) -> heads stay
+  replicated over TP while d_ff / vocab still shard (the §Perf hillclimb
+  measures what that costs and fixes it with head padding);
+* GQA kv heads (4, 5, 8) < 16 -> kv tensors replicate over TP, the standard
+  GQA tensor-parallel fallback;
+* long_500k has batch=1 -> batch rules no-op and the KV cache shards its
+  *sequence* axis instead (context parallelism), see ``cache_pspec``.
+
+The active mesh comes from ``use_mesh`` (a contextvar), so reduced-config
+smoke tests on one CPU device run the exact same model code with every
+constraint collapsing to a no-op.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical dimension name -> preferred mesh axes (in order).
+RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": (),  # unsharded by default (sequence parallelism is opt-in)
+    "seq_shard": ("pod", "data"),  # context-parallel sequence (long decode)
+    "d_model": (),  # activations keep d_model local
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "d_ff": ("model",),
+    "vocab": ("model",),
+    "fsdp": ("data",),  # parameter d_model/d_ff dims shard over data (FSDP)
+    "experts": ("model",),
+    "layers": (),  # stacked-layer leading dim of scanned params
+    "state": (),
+    None: (),
+}
+
+_mesh_var: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
+    "repro_mesh", default=None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    token = _mesh_var.set(mesh)
+    try:
+        yield mesh
+    finally:
+        _mesh_var.reset(token)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _mesh_var.get()
+
+
+def _axes_in_mesh(mesh: Mesh, axes: Sequence[str]) -> tuple[str, ...]:
+    return tuple(a for a in axes if a in mesh.shape)
+
+
+def resolve_pspec(names: Sequence[Optional[str]], shape: Sequence[int],
+                  mesh: Mesh) -> P:
+    """Logical names -> PartitionSpec, dropping non-divisible rules."""
+    if len(names) != len(shape):
+        raise ValueError(f"rank mismatch: {names} vs shape {shape}")
+    spec: list[Any] = []
+    used: set[str] = set()
+    for name, dim in zip(names, shape):
+        axes = _axes_in_mesh(mesh, RULES.get(name, ()))
+        axes = tuple(a for a in axes if a not in used)
+        # Largest prefix of the preferred axes that divides the dim.
+        while axes and dim % math.prod(mesh.shape[a] for a in axes) != 0:
+            axes = axes[:-1]
+        if axes:
+            used.update(axes)
+            spec.append(axes if len(axes) > 1 else axes[0])
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+def named(x: jax.Array | Any, *names: Optional[str]) -> jax.Array:
+    """Annotate ``x`` with logical dimension names (no-op without a mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = resolve_pspec(names, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ``constrain`` is the verb used inside model code.
+constrain = named
+
+
+def cache_pspec(shape: Sequence[int], mesh: Mesh,
+                layout: Sequence[Optional[str]] = ("layers", "batch", "seq",
+                                                   "kv_heads", None)) -> P:
+    """KV-cache spec: every mesh axis must shard *something* or the cache
+    replicates and overflows HBM (e.g. qwen1.5-110b decode_32k is 1.4 TB).
+
+    Assignment policy:
+      * batch takes (pod, data) when divisible; otherwise those axes move
+        to seq (context parallelism — long_500k, batch=1);
+      * kv_heads takes model when divisible (GQA with kv >= TP); otherwise
+        model also moves to seq (kv=4/5/8 archs), giving flash-decoding
+        style sequence-sharded attention with a softmax combine.
+    """
+    names = list(layout)
+    if "batch" not in names or "seq" not in names:
+        return resolve_pspec(names, shape, mesh)
+    b_idx, s_idx = names.index("batch"), names.index("seq")
+    seq_axes: list[str] = []
+    dp_axes = _axes_in_mesh(mesh, RULES["batch"])
+    dp = math.prod(mesh.shape[a] for a in dp_axes)
+    if dp and shape[b_idx] % dp != 0:
+        names[b_idx] = None
+        seq_axes.extend(dp_axes)
+    if "kv_heads" in names:
+        k_idx = names.index("kv_heads")
+        tp_axes = _axes_in_mesh(mesh, RULES["kv_heads"])
+        tp = math.prod(mesh.shape[a] for a in tp_axes)
+        if tp and shape[k_idx] % tp != 0:
+            names[k_idx] = None
+            seq_axes.extend(tp_axes)
+    if seq_axes:
+        total = math.prod(mesh.shape[a] for a in seq_axes)
+        if shape[s_idx] % total == 0:
+            spec = resolve_pspec(names, shape, mesh)
+            parts = list(spec)
+            parts[s_idx] = tuple(seq_axes) if len(seq_axes) > 1 else seq_axes[0]
+            return P(*parts)
+    return resolve_pspec(names, shape, mesh)
+
+
+def sharding_for(names: Sequence[Optional[str]], shape: Sequence[int],
+                 mesh: Optional[Mesh] = None) -> Optional[NamedSharding]:
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve_pspec(names, shape, mesh))
+
+
+def tree_shardings(spec_tree: Any, shape_tree: Any, mesh: Mesh) -> Any:
+    """Map a pytree of logical-name tuples + matching ShapeDtypeStructs to
+    NamedShardings (used to build jit in_shardings for the dry-run)."""
+    return jax.tree_util.tree_map(
+        lambda names, sds: NamedSharding(
+            mesh, resolve_pspec(names, sds.shape, mesh)),
+        spec_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(i, (str, type(None))) for i in x),
+    )

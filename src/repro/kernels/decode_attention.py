@@ -1,0 +1,203 @@
+"""Single-token GQA decode attention Pallas TPU kernel.
+
+The serving hot-spot: one query token per sequence attends over a long
+(padded) KV cache.  Grid = (batch, kv-head, kv-blocks); all G query heads of
+a kv group are processed together as a (G x d) tile so the MXU sees a real
+matmul instead of G matvecs — the TPU-native replacement for the GPU
+warp-per-row reductions this kind of kernel uses on CUDA (DESIGN.md).
+Online softmax state lives in VMEM scratch across the sequential kv-block
+dimension; per-row cache lengths arrive via SMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            block_s: int, n_blocks: int, window: Optional[int], scale: float):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    cache_len = len_ref[0]
+    blk_lo = ik * block_s
+    live = blk_lo < cache_len
+    if window is not None:
+        live &= (blk_lo + block_s) > cache_len - 1 - window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0, 0, :, :].astype(jnp.float32) * scale  # (G, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bs, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G, bs)
+        pos = blk_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = pos < cache_len
+        if window is not None:
+            mask &= pos > cache_len - 1 - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def _kernel_q8(len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+               acc_ref, m_ref, l_ref, *, block_s: int, n_blocks: int,
+               scale: float):
+    """int8-KV variant (§Perf D): codes dequantize in VMEM after the HBM
+    load, so the cache streams at 1 byte/element + a scale row."""
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    cache_len = len_ref[0]
+    blk_lo = ik * block_s
+
+    @pl.when(blk_lo < cache_len)
+    def _compute():
+        q = q_ref[0, 0, 0, :, :].astype(jnp.float32) * scale  # (G, d)
+        ks = ks_ref[0, :, 0, :].astype(jnp.float32)  # (bs, 1)
+        vs = vs_ref[0, :, 0, :].astype(jnp.float32)
+        k = k_ref[0, :, 0, :].astype(jnp.float32) * ks  # dequant in VMEM
+        v = v_ref[0, :, 0, :].astype(jnp.float32) * vs
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G, bs)
+        pos = blk_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < cache_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention_quant_pallas(
+    q: jax.Array,        # (B, 1, H, D)
+    k_cache: jax.Array,  # (B, S, K, D) int8
+    v_cache: jax.Array,  # (B, S, K, D) int8
+    k_scale: jax.Array,  # (B, S, K, 1) bf16
+    v_scale: jax.Array,
+    cache_len: jax.Array,  # (B,) int32
+    *,
+    block_s: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    b, _, h, d = q.shape
+    _, s, n_kv, _ = k_cache.shape
+    g = h // n_kv
+    block_s = min(block_s, s)
+    if s % block_s:
+        raise ValueError("cache length must divide block_s")
+    ns = s // block_s
+
+    kernel = functools.partial(_kernel_q8, block_s=block_s, n_blocks=ns,
+                               scale=d ** -0.5)
+    qg = q.reshape(b, 1, n_kv, g, d)
+    kv_spec = pl.BlockSpec((1, block_s, 1, d),
+                           lambda ib, ih, ik: (ib, ik, ih, 0))
+    sc_spec = pl.BlockSpec((1, block_s, 1, 1),
+                           lambda ib, ih, ik: (ib, ik, ih, 0))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, n_kv, ns),
+        in_specs=[
+            pl.BlockSpec((1,), lambda ib, ih, ik: (ib,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, 1, g, d), lambda ib, ih, ik: (ib, 0, ih, 0, 0)),
+            kv_spec, kv_spec, sc_spec, sc_spec,
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda ib, ih, ik: (ib, ih, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_kv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(dimension_semantics=(
+            "parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(cache_len.astype(jnp.int32), qg, k_cache, v_cache, k_scale, v_scale)
+    return out.reshape(b, 1, h, d)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_s", "interpret"))
+def decode_attention_pallas(
+    q: jax.Array,        # (B, 1, H, D)
+    k_cache: jax.Array,  # (B, S, K, D)
+    v_cache: jax.Array,
+    cache_len: jax.Array,  # (B,) int32
+    *,
+    window: Optional[int] = None,
+    block_s: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    b, _, h, d = q.shape
+    _, s, n_kv, _ = k_cache.shape
+    g = h // n_kv
+    block_s = min(block_s, s)
+    if s % block_s:
+        raise ValueError("cache length must divide block_s")
+    ns = s // block_s
+
+    kernel = functools.partial(_kernel, block_s=block_s, n_blocks=ns,
+                               window=window, scale=d ** -0.5)
+    qg = q.reshape(b, 1, n_kv, g, d)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, n_kv, ns),
+        in_specs=[
+            pl.BlockSpec((1,), lambda ib, ih, ik: (ib,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, 1, g, d), lambda ib, ih, ik: (ib, 0, ih, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, d), lambda ib, ih, ik: (ib, ik, ih, 0)),
+            pl.BlockSpec((1, block_s, 1, d), lambda ib, ih, ik: (ib, ik, ih, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda ib, ih, ik: (ib, ih, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_kv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(dimension_semantics=(
+            "parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(cache_len.astype(jnp.int32), qg, k_cache, v_cache)
+    return out.reshape(b, 1, h, d)

@@ -1,0 +1,296 @@
+"""Attention / scan ops: jit'd wrappers that dispatch to an implementation.
+
+Backends:
+  * ``pallas`` — the TPU kernels in this package (``pl.pallas_call``); on CPU
+    they run in interpret mode (tests only — slow).
+  * ``xla``    — pure-jnp *chunked* implementations with online softmax.
+    Memory-bounded like the kernels (never materializes S x S), compiles to
+    compact While-loop HLO, and is the default path inside the models.
+  * ``ref``    — naive full-matrix oracles from ``ref.py`` (tests only).
+
+The models call these wrappers; the dry-run therefore lowers the xla path,
+and kernel tests assert pallas == xla == ref over shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+
+DEFAULT_BACKEND = "xla"
+
+NEG_INF = -1e30
+
+
+def _gqa_expand(q: jax.Array, n_kv: int) -> jax.Array:
+    """(B, S, H, D) -> (B, S, K, G, D) grouped by kv head."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def _block_mask(q_pos: jax.Array, k_pos: jax.Array, causal: bool,
+                window: Optional[int]) -> jax.Array:
+    """(bq, bk) validity mask from absolute positions."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    return m
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "backend"))
+def flash_attention(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Sk, K, D)
+    v: jax.Array,  # (B, Sk, K, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    block_q: int = 512,
+    block_k: int = 512,
+    backend: str = DEFAULT_BACKEND,
+) -> jax.Array:
+    """Multi-head GQA attention, O(S) memory. Returns (B, Sq, H, D)."""
+    if backend == "ref":
+        return _ref.mha_reference(q, k, v, causal=causal, window=window,
+                                  q_offset=q_offset)
+    if backend == "pallas":
+        from repro.kernels import flash_attention as _fa
+        return _fa.flash_attention_pallas(q, k, v, causal=causal,
+                                          window=window, q_offset=q_offset,
+                                          block_q=block_q, block_k=block_k)
+    return _xla_flash(q, k, v, causal=causal, window=window,
+                      q_offset=q_offset, block_q=block_q, block_k=block_k)
+
+
+def _xla_flash(q, k, v, *, causal, window, q_offset, block_q, block_k):
+    orig_dtype = q.dtype
+    b, sq, h, d = q.shape
+    _, sk, n_kv, _ = k.shape
+    g = h // n_kv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    # Pad ragged tails up to block multiples (hymba's +meta-token seqs,
+    # vision cross-attention ctx lengths); padded keys are masked via
+    # ``sk_valid`` below and padded query rows sliced off at the end.
+    pad_q = (-sq) % block_q
+    pad_k = (-sk) % block_k
+    sq_valid, sk_valid = sq, sk
+    if pad_q or pad_k:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        sq, sk = sq + pad_q, sk + pad_k
+    scale = d ** -0.5
+    qg = _gqa_expand(q, n_kv).astype(jnp.float32) * scale  # (B,Sq,K,G,D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    nq, nk = sq // block_q, sk // block_k
+
+    q_blocks = qg.reshape(b, nq, block_q, n_kv, g, d).transpose(1, 0, 3, 4, 2, 5)
+    k_blocks = kf.reshape(b, nk, block_k, n_kv, d).transpose(1, 0, 3, 2, 4)
+    v_blocks = vf.reshape(b, nk, block_k, n_kv, d).transpose(1, 0, 3, 2, 4)
+
+    # Windowed attention only ever reaches a bounded, *contiguous* range of
+    # KV blocks per Q block — scan that constant-length range from a
+    # dynamic start instead of all nk blocks (16x fewer block-pairs for
+    # hymba's W=1024 at 32k ctx; static trip count, exact HLO accounting).
+    import os
+    n_win = None
+    if window is not None and os.environ.get("REPRO_BASELINE", "") != "1":
+        n_win = min(nk, (window - 1 + block_q) // block_k + 2)
+
+    def attend(carry, ik, kb, vb, q_pos, qb):
+        acc, m, l = carry
+        k_pos = ik * block_k + jnp.arange(block_k)
+        s = jnp.einsum("bkgqd,bksd->bkgqs", qb, kb)  # (B,K,G,bq,bk)
+        mask = _block_mask(q_pos, k_pos, causal, window)
+        mask &= (k_pos < sk_valid)[None, :]  # padded keys are invalid
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bksd->bkgqd", p, vb)
+        return acc_new, m_new, l_new
+
+    def one_q_block(iq, qb):  # qb: (B, K, G, bq, D)
+        q_pos = q_offset + iq * block_q + jnp.arange(block_q)
+        acc0 = jnp.zeros((b, n_kv, g, block_q, d), jnp.float32)
+        m0 = jnp.full((b, n_kv, g, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, n_kv, g, block_q), jnp.float32)
+
+        if n_win is not None and n_win < nk:
+            q_start = q_offset + iq * block_q
+            start = jnp.clip((q_start - window + 1) // block_k,
+                             0, nk - n_win)
+
+            def kv_step_win(carry, j):
+                ik = start + j
+                kb = jax.lax.dynamic_index_in_dim(k_blocks, ik, 0, False)
+                vb = jax.lax.dynamic_index_in_dim(v_blocks, ik, 0, False)
+                return attend(carry, ik, kb, vb, q_pos, qb), None
+
+            (acc, m, l), _ = jax.lax.scan(
+                kv_step_win, (acc0, m0, l0), jnp.arange(n_win))
+        else:
+            def kv_step(carry, inputs):
+                ik, kb, vb = inputs  # kb/vb: (B, K, bk, D)
+                return attend(carry, ik, kb, vb, q_pos, qb), None
+
+            (acc, m, l), _ = jax.lax.scan(
+                kv_step, (acc0, m0, l0),
+                (jnp.arange(nk), k_blocks, v_blocks))
+        return acc / jnp.maximum(l, 1e-30)[..., None]  # (B,K,G,bq,D)
+
+    out, = jax.lax.map(
+        lambda args: (one_q_block(*args),),
+        (jnp.arange(nq), q_blocks))
+    # out: (nq, B, K, G, bq, D) -> (B, Sq, H, D)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, d)
+    return out[:, :sq_valid].astype(orig_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "backend"))
+def decode_attention(
+    q: jax.Array,        # (B, 1, H, D) — one new token per sequence
+    k_cache: jax.Array,  # (B, S, K, D)
+    v_cache: jax.Array,  # (B, S, K, D)
+    cache_len: jax.Array,  # (B,) int32 — valid prefix length (incl. new token)
+    *,
+    window: Optional[int] = None,
+    backend: str = DEFAULT_BACKEND,
+) -> jax.Array:
+    """Single-token GQA attention against a (padded) KV cache."""
+    if backend == "pallas":
+        from repro.kernels import decode_attention as _da
+        return _da.decode_attention_pallas(q, k_cache, v_cache, cache_len,
+                                           window=window)
+    if backend == "ref":
+        return _ref.decode_reference(q, k_cache, v_cache, cache_len,
+                                     window=window)
+    b, _, h, d = q.shape
+    _, s, n_kv, _ = k_cache.shape
+    scale = d ** -0.5
+    qg = _gqa_expand(q, n_kv).astype(jnp.float32) * scale  # (B,1,K,G,D)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg,
+                        k_cache.astype(jnp.float32))  # (B,K,G,1,S)
+    pos = jnp.arange(s)
+    valid = pos[None, :] < cache_len[:, None]  # (B, S)
+    if window is not None:
+        valid &= pos[None, :] > cache_len[:, None] - 1 - window
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def decode_attention_quant(
+    q: jax.Array,        # (B, 1, H, D)
+    k_cache: jax.Array,  # (B, S, K, D) int8 codes
+    v_cache: jax.Array,
+    k_scale: jax.Array,  # (B, S, K, 1) bf16 per-(pos, kv-head) scales
+    v_scale: jax.Array,
+    cache_len: jax.Array,
+    *,
+    backend: str = DEFAULT_BACKEND,
+) -> jax.Array:
+    """Decode attention over an int8 KV cache (§Perf D).
+
+    The pallas backend streams int8 + scales and dequantizes in VMEM; the
+    xla/ref backends dequantize then reuse the bf16 path (on CPU the
+    dequant fuses into the consumer, so HBM reads stay int8-sized).
+    """
+    if backend == "pallas":
+        from repro.kernels import decode_attention as _da
+        return _da.decode_attention_quant_pallas(q, k_cache, v_cache,
+                                                 k_scale, v_scale, cache_len)
+
+    def deq(c, s):
+        return (c.astype(jnp.float32) * s.astype(jnp.float32)).astype(
+            jnp.bfloat16)
+
+    return decode_attention(q, deq(k_cache, k_scale), deq(v_cache, v_scale),
+                            cache_len, backend=backend)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def wkv6_scan(
+    r: jax.Array,  # (B, S, H, D) receptance
+    k: jax.Array,  # (B, S, H, D)
+    v: jax.Array,  # (B, S, H, D)
+    w: jax.Array,  # (B, S, H, D) data-dependent decay (log-space, negative)
+    u: jax.Array,  # (H, D) bonus for current token
+    state: jax.Array,  # (B, H, D, D) recurrent state
+    *,
+    backend: str = DEFAULT_BACKEND,
+) -> tuple[jax.Array, jax.Array]:
+    """RWKV-6 WKV recurrence. Returns (out (B,S,H,D), new state)."""
+    if backend == "pallas":
+        from repro.kernels import wkv6 as _wkv
+        return _wkv.wkv6_pallas(r, k, v, w, u, state)
+    if backend == "ref":
+        return _ref.wkv6_reference(r, k, v, w, u, state)
+    # xla path: lax.scan over time (compact HLO; sequential like the kernel).
+    rf, kf, vf, wf = (x.astype(jnp.float32).transpose(1, 0, 2, 3)
+                      for x in (r, k, v, w))
+
+    def step(s, inputs):  # s: (B, H, D, D) maps k-dim x v-dim
+        rt, kt, vt, wt = inputs  # each (B, H, D)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,Dk,Dv)
+        # out_t = r . (u*kv + state)
+        att = s + u.astype(jnp.float32)[None, :, :, None] * kv
+        out = jnp.einsum("bhk,bhkv->bhv", rt, att)
+        s_new = jnp.exp(wt)[..., None] * s + kv
+        return s_new, out
+
+    state_f, outs = jax.lax.scan(step, state.astype(jnp.float32),
+                                 (rf, kf, vf, wf))
+    return outs.transpose(1, 0, 2, 3).astype(r.dtype), state_f.astype(state.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def ssm_scan(
+    x: jax.Array,      # (B, S, H, D) input per head
+    dt: jax.Array,     # (B, S, H) step size (post-softplus)
+    a_log: jax.Array,  # (H, N) state matrix (log of -A)
+    b: jax.Array,      # (B, S, H, N) input matrix
+    c: jax.Array,      # (B, S, H, N) output matrix
+    state: jax.Array,  # (B, H, D, N)
+    *,
+    backend: str = DEFAULT_BACKEND,
+) -> tuple[jax.Array, jax.Array]:
+    """Mamba-style selective scan (Hymba SSM heads)."""
+    if backend == "pallas":
+        from repro.kernels import ssm_scan as _ssm
+        return _ssm.ssm_scan_pallas(x, dt, a_log, b, c, state)
+    if backend == "ref":
+        return _ref.ssm_reference(x, dt, a_log, b, c, state)
+    a = -jnp.exp(a_log.astype(jnp.float32))  # (H, N)
+    xf = x.astype(jnp.float32).transpose(1, 0, 2, 3)   # (S,B,H,D)
+    dtf = dt.astype(jnp.float32).transpose(1, 0, 2)    # (S,B,H)
+    bf = b.astype(jnp.float32).transpose(1, 0, 2, 3)   # (S,B,H,N)
+    cf = c.astype(jnp.float32).transpose(1, 0, 2, 3)
+
+    def step(s, inputs):  # s: (B,H,D,N)
+        xt, dtt, bt, ct = inputs
+        da = jnp.exp(dtt[..., None] * a[None])          # (B,H,N)
+        dbx = (dtt[..., None] * bt)[:, :, None, :] * xt[..., None]  # (B,H,D,N)
+        s_new = da[:, :, None, :] * s + dbx
+        yt = jnp.einsum("bhdn,bhn->bhd", s_new, ct)
+        return s_new, yt
+
+    state_f, ys = jax.lax.scan(step, state.astype(jnp.float32),
+                               (xf, dtf, bf, cf))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), state_f.astype(state.dtype)

@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every kernel (naive, O(S^2) memory where applicable).
+
+These are the ground truth for kernel tests: pallas (interpret mode) and the
+xla chunked paths must match these within dtype tolerance.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_reference(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  q_offset: int = 0) -> jax.Array:
+    """Naive GQA attention. q: (B,Sq,H,D); k,v: (B,Sk,K,D)."""
+    b, sq, h, d = q.shape
+    _, sk, n_kv, _ = k.shape
+    g = h // n_kv
+    qf = q.astype(jnp.float32) * d ** -0.5
+    qf = qf.reshape(b, sq, n_kv, g, d)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k.astype(jnp.float32))
+    q_pos = q_offset + jnp.arange(sq)
+    k_pos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def decode_reference(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array, *,
+                     window: Optional[int] = None) -> jax.Array:
+    b, _, h, d = q.shape
+    _, s, n_kv, _ = k_cache.shape
+    g = h // n_kv
+    qf = q.astype(jnp.float32).reshape(b, 1, n_kv, g, d) * d ** -0.5
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qf, k_cache.astype(jnp.float32))
+    pos = jnp.arange(s)
+    valid = pos[None, :] < cache_len[:, None]
+    if window is not None:
+        valid &= pos[None, :] > cache_len[:, None] - 1 - window
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def wkv6_reference(r, k, v, w, u, state):
+    """RWKV-6 recurrence, python loop over time (oracle)."""
+    b, s, h, d = r.shape
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    st = state.astype(jnp.float32)  # (B,H,Dk,Dv)
+    outs = []
+    for t in range(s):
+        kv = kf[:, t, :, :, None] * vf[:, t, :, None, :]
+        att = st + uf[None, :, :, None] * kv
+        outs.append(jnp.einsum("bhk,bhkv->bhv", rf[:, t], att))
+        st = jnp.exp(wf[:, t])[..., None] * st + kv
+    out = jnp.stack(outs, axis=1)
+    return out.astype(r.dtype), st.astype(state.dtype)
+
+
+def ssm_reference(x, dt, a_log, b, c, state):
+    """Selective scan, python loop over time (oracle)."""
+    bsz, s, h, d = x.shape
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    bf, cf = b.astype(jnp.float32), c.astype(jnp.float32)
+    st = state.astype(jnp.float32)  # (B,H,D,N)
+    ys = []
+    for t in range(s):
+        da = jnp.exp(dtf[:, t][..., None] * a[None])  # (B,H,N)
+        dbx = (dtf[:, t][..., None] * bf[:, t])[:, :, None, :] \
+            * xf[:, t][..., None]
+        st = da[:, :, None, :] * st + dbx
+        ys.append(jnp.einsum("bhdn,bhn->bhd", st, cf[:, t]))
+    y = jnp.stack(ys, axis=1)
+    return y.astype(x.dtype), st.astype(state.dtype)

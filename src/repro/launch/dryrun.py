@@ -1,0 +1,280 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST precede every other import (jax locks the
+# device count on first init), which is why the docstring sits below them.
+
+_DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the jitted step (train_step / prefill /
+serve_step) with explicit NamedSharding in/out shardings derived from the
+logical rules, lowers it against ShapeDtypeStruct stand-ins (no
+allocation), compiles, and records ``memory_analysis`` / ``cost_analysis``
+plus the collective-bytes breakdown parsed from the optimized HLO.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --case train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both \
+      --out results/dryrun
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis.hlo import collective_bytes_from_hlo
+from repro.analysis.roofline import (analyze_hlo, kernel_hbm_bytes,
+                                     model_flops, roofline_terms)
+from repro.configs import all_arch_ids, get_config
+from repro.distributed.sharding import cache_pspec, resolve_pspec, use_mesh
+from repro.launch.mesh import make_production_mesh
+from repro.models import SHAPE_CASES, build_model, input_specs
+from repro.models.layers import abstract_params, param_logical_names
+from repro.training import AdamW, TrainStepConfig, make_train_step
+from repro.training.optimizer import AdamWState
+
+# Cells skipped by design (DESIGN.md §4): pure full-attention archs do not
+# run the long-context decode cell.
+LONG_CTX_SKIPS = {
+    "qwen2-7b", "starcoder2-15b", "qwen1.5-110b", "seamless-m4t-large-v2",
+    "llama-3.2-vision-11b", "qwen2-moe-a2.7b",
+}
+
+
+def _sharding_tree(names_tree: Any, shapes_tree: Any, mesh, *,
+                   cache: bool = False) -> Any:
+    """names/ShapeDtypeStruct trees -> NamedSharding tree."""
+
+    def leaf(names, sds):
+        if cache and "seq" in names and "batch" in names:
+            spec = cache_pspec(sds.shape, mesh, names)
+        else:
+            spec = resolve_pspec(names, sds.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map(
+        leaf, names_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(i, (str, type(None))) for i in x))
+
+
+def _param_shardings(model, mesh):
+    return _sharding_tree(param_logical_names(model.specs),
+                          abstract_params(model.specs), mesh)
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    case: str
+    mesh: str
+    status: str  # ok | skipped | failed
+    seconds: float = 0.0
+    # cost_analysis() raw numbers (while bodies counted once):
+    flops_per_device: float = 0.0
+    bytes_per_device: float = 0.0
+    collectives: dict = dataclasses.field(default_factory=dict)
+    collective_bytes: float = 0.0
+    memory: dict = dataclasses.field(default_factory=dict)
+    # trip-count-corrected analysis (analysis/roofline.py):
+    hlo_flops_per_device: float = 0.0
+    hbm_bytes_per_device: float = 0.0
+    kernel_internal_bytes: float = 0.0
+    collective_wire: dict = dataclasses.field(default_factory=dict)
+    # roofline terms (seconds / step) + bookkeeping:
+    model_flops: float = 0.0
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    memory_adj_s: float = 0.0
+    collective_s: float = 0.0
+    dominant: str = ""
+    useful_ratio: float = 0.0
+    mfu_bound: float = 0.0
+    error: str = ""
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _memory_dict(compiled) -> dict:
+    try:
+        m = compiled.memory_analysis()
+    except Exception:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(m, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def build_step(model, case, mesh):
+    """Returns (fn, example_args tree of SDS, in_shardings, out_shardings,
+    donate_argnums)."""
+    cfg = model.cfg
+    specs, names = input_specs(model, case)
+    params_sds = abstract_params(model.specs)
+    params_sh = _param_shardings(model, mesh)
+    repl = NamedSharding(mesh, P())
+
+    if case.kind == "train":
+        opt = AdamW()
+        opt_sds = AdamWState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            m=jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                params_sds),
+            v=jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                params_sds))
+        opt_sh = AdamWState(
+            step=repl,
+            m=jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s.spec), params_sh),
+            v=jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s.spec), params_sh))
+        batch_sh = _sharding_tree(names, specs, mesh)
+        # Optimized mode ships bf16 gradient reduction (§Perf B2);
+        # REPRO_BASELINE=1 keeps f32 grads for the paper-faithful baseline.
+        compress = os.environ.get("REPRO_BASELINE", "") != "1"
+        step = make_train_step(
+            model, opt, TrainStepConfig(remat=True, grad_compress=compress))
+        metrics_sh = {"grad_norm": repl, "lr": repl, "loss": repl}
+        return (step, (params_sds, opt_sds, specs),
+                (params_sh, opt_sh, batch_sh),
+                (params_sh, opt_sh, metrics_sh), (0, 1))
+
+    if case.kind == "prefill":
+        batch_sh = _sharding_tree(names, specs, mesh)
+        cache_sds = model.cache_shapes(case.global_batch, case.seq_len)
+        cache_names = model.cache_names(case.global_batch, case.seq_len)
+        cache_sh = _sharding_tree(cache_names, cache_sds, mesh, cache=True)
+        logits_sh = NamedSharding(mesh, resolve_pspec(
+            ("batch", "vocab"), (case.global_batch, cfg.padded_vocab), mesh))
+
+        def fn(params, batch):
+            return model.prefill(params, batch["tokens"],
+                                 max_len=case.seq_len, ctx=batch.get("ctx"))
+
+        return (fn, (params_sds, specs), (params_sh, batch_sh),
+                (logits_sh, cache_sh), ())
+
+    # decode
+    cache_sds = specs["cache"]
+    cache_sh = _sharding_tree(names["cache"], cache_sds, mesh, cache=True)
+    token_sh = NamedSharding(mesh, resolve_pspec(
+        ("batch",), (case.global_batch,), mesh))
+    logits_sh = NamedSharding(mesh, resolve_pspec(
+        ("batch", "vocab"), (case.global_batch, cfg.padded_vocab), mesh))
+
+    def fn(params, token, cache):
+        return model.decode_step(params, token, cache)
+
+    return (fn, (params_sds, specs["token"], cache_sds),
+            (params_sh, token_sh, cache_sh),
+            (logits_sh, cache_sh), (2,))
+
+
+def run_cell(arch: str, case_name: str, multi_pod: bool,
+             timeout_note: Optional[str] = None) -> CellResult:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    case = SHAPE_CASES[case_name]
+    if case_name == "long_500k" and arch in LONG_CTX_SKIPS:
+        return CellResult(arch, case_name, mesh_name, "skipped",
+                          error="pure full-attention arch (DESIGN.md §4)")
+    t0 = time.perf_counter()
+    try:
+        cfg = get_config(arch)
+        model = build_model(cfg)
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        with mesh, use_mesh(mesh):
+            fn, args, in_sh, out_sh, donate = build_step(model, case, mesh)
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            compiled = lowered.compile()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+            coll = collective_bytes_from_hlo(hlo)
+            mem = _memory_dict(compiled)
+            analysis = analyze_hlo(hlo)
+            n_chips = mesh.devices.size
+            mf = model_flops(cfg, case)
+            kb = kernel_hbm_bytes(cfg, case)
+            rl = roofline_terms(analysis, n_chips, mf,
+                                kernel_bytes_global=kb)
+        return CellResult(
+            arch=arch, case=case_name, mesh=mesh_name, status="ok",
+            seconds=time.perf_counter() - t0,
+            flops_per_device=float(cost.get("flops", 0.0)),
+            bytes_per_device=float(cost.get("bytes accessed", 0.0)),
+            collectives={k: float(v) for k, v in coll.items()},
+            collective_bytes=float(sum(coll.values())),
+            memory=mem,
+            hlo_flops_per_device=analysis.flops,
+            hbm_bytes_per_device=analysis.hbm_bytes,
+            kernel_internal_bytes=analysis.kernel_internal_bytes,
+            collective_wire=dict(analysis.collective_wire),
+            model_flops=mf,
+            compute_s=rl.compute_s,
+            memory_s=rl.memory_s,
+            memory_adj_s=rl.memory_adj_s,
+            collective_s=rl.collective_s,
+            dominant=rl.dominant,
+            useful_ratio=rl.useful_ratio,
+            mfu_bound=rl.mfu_bound)
+    except Exception as e:  # noqa: BLE001 - report, don't crash the sweep
+        return CellResult(arch, case_name, mesh_name, "failed",
+                          seconds=time.perf_counter() - t0,
+                          error=f"{type(e).__name__}: {e}\n"
+                                f"{traceback.format_exc(limit=8)}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--case", default=None, choices=list(SHAPE_CASES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    archs = all_arch_ids() if args.all or not args.arch else [args.arch]
+    cases = list(SHAPE_CASES) if args.all or not args.case else [args.case]
+    pods = {"single": [False], "multi": [True],
+            "both": [False, True]}[args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        for case_name in cases:
+            for mp in pods:
+                tag = f"{arch}__{case_name}__{'multi' if mp else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[skip existing] {tag}")
+                    continue
+                res = run_cell(arch, case_name, mp)
+                with open(path, "w") as f:
+                    json.dump(res.to_json(), f, indent=2)
+                print(f"[{res.status:7s}] {tag}  {res.seconds:6.1f}s  "
+                      f"C={res.compute_s:.3f}s M={res.memory_adj_s:.3f}s "
+                      f"X={res.collective_s:.3f}s dom={res.dominant or '-'} "
+                      f"useful={res.useful_ratio:.2f}"
+                      + (f"  ERR {res.error.splitlines()[0]}"
+                         if res.error else ""), flush=True)
+
+
+if __name__ == "__main__":
+    main()

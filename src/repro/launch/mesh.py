@@ -1,0 +1,30 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first init.
+
+Target hardware: TPU v5e pods; single pod = 16 x 16 = 256 chips
+(data x model), multi-pod = 2 x 16 x 16 (pod x data x model).
+"""
+
+from __future__ import annotations
+
+import jax
+
+# v5e hardware constants used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Whatever devices exist (1 on this container) as a flat data mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,6 @@
+from repro.models.config import ModelConfig
+from repro.models.model import (SHAPE_CASES, Model, ShapeCase, build_model,
+                                input_specs)
+
+__all__ = ["ModelConfig", "Model", "build_model", "input_specs",
+           "ShapeCase", "SHAPE_CASES"]

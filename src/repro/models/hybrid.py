@@ -1,0 +1,179 @@
+"""Hymba-style hybrid: parallel attention + SSM heads per layer (hymba-1.5b).
+
+Each layer normalizes the residual stream once, runs a GQA attention path
+and a Mamba-style selective-scan path *in parallel on the same input*, mean-
+fuses the per-path outputs after per-path RMS normalization (the Hymba
+fusion), then a gated MLP.  Learnable *meta tokens* are prepended to the
+sequence (and live at the start of the decode cache).
+
+Attention is sliding-window (cfg.sliding_window) — with the O(1) SSM state
+this keeps the long_500k cache bounded, per Hymba's global/local design
+(simplification recorded in DESIGN.md: all attention layers are windowed
+here, Hymba keeps 3 global layers).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import named
+from repro.kernels import ops
+from repro.models import attention as attn
+from repro.models.config import ModelConfig
+from repro.models.layers import (PSpec, mlp_apply, mlp_specs, rms_norm,
+                                 stack_tree)
+from repro.models.transformer import _full_cache, _windowed_cache, lm_head
+
+
+def ssm_specs(cfg: ModelConfig) -> dict[str, PSpec]:
+    d, n = cfg.d_model, cfg.ssm_state
+    h, dh = cfg.n_heads, cfg.dh
+    return {
+        "w_in": PSpec((d, h * dh), ("fsdp", "tp")),
+        "w_dt": PSpec((d, h), ("fsdp", None)),
+        "dt_bias": PSpec((h,), (None,), init="small"),
+        "a_log": PSpec((h, n), (None, None), init="small"),
+        "w_b": PSpec((d, h * n), ("fsdp", None)),
+        "w_c": PSpec((d, h * n), ("fsdp", None)),
+        "w_out": PSpec((h * dh, d), ("tp", "fsdp")),
+    }
+
+
+def block_specs(cfg: ModelConfig) -> dict[str, Any]:
+    d = cfg.d_model
+    return {
+        "ln1": PSpec((d,), (None,), init="zeros"),
+        "attn": attn.attn_specs(cfg),
+        "ln_attn": PSpec((d,), (None,), init="zeros"),
+        "ssm": ssm_specs(cfg),
+        "ln_ssm": PSpec((d,), (None,), init="zeros"),
+        "ln2": PSpec((d,), (None,), init="zeros"),
+        "mlp": mlp_specs(d, cfg.d_ff, cfg.mlp),
+    }
+
+
+def hybrid_specs(cfg: ModelConfig) -> dict[str, Any]:
+    d, v = cfg.d_model, cfg.padded_vocab
+    return {
+        "embed": PSpec((v, d), ("vocab", "fsdp"), init="small"),
+        "meta": PSpec((cfg.n_context_tokens or 128, d), (None, None),
+                      init="small"),
+        "layers": stack_tree(block_specs(cfg), cfg.n_layers),
+        "ln_f": PSpec((d,), (None,), init="zeros"),
+        "head": PSpec((d, v), ("fsdp", "vocab")),
+    }
+
+
+def _ssm_path(p: dict, x: jax.Array, state: jax.Array, cfg: ModelConfig
+              ) -> tuple[jax.Array, jax.Array]:
+    b, s, d = x.shape
+    h, dh, n = cfg.n_heads, cfg.dh, cfg.ssm_state
+    xin = (x @ p["w_in"]).reshape(b, s, h, dh)
+    xin = named(xin, "batch", "seq", "heads", None)
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    bmat = (x @ p["w_b"]).reshape(b, s, h, n)
+    cmat = (x @ p["w_c"]).reshape(b, s, h, n)
+    y, state = ops.ssm_scan(xin, dt.astype(x.dtype), p["a_log"], bmat, cmat,
+                            state)
+    y = named(y, "batch", "seq", "heads", None)
+    out = y.reshape(b, s, h * dh) @ p["w_out"]
+    return named(out, "batch", "seq", None), state
+
+
+def _fuse(lp: dict, a: jax.Array, m: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Hymba mean fusion of per-path normalized outputs."""
+    return 0.5 * (rms_norm(a, lp["ln_attn"], cfg.norm_eps)
+                  + rms_norm(m, lp["ln_ssm"], cfg.norm_eps))
+
+
+def _block_full(lp, x, state0, cfg, positions):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    a, k, v = attn.attn_full(lp["attn"], h, cfg, positions=positions,
+                             window=cfg.sliding_window)
+    m, state = _ssm_path(lp["ssm"], h, state0, cfg)
+    x = x + _fuse(lp, a, m, cfg)
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    x = named(x + mlp_apply(lp["mlp"], h, cfg.mlp), "batch", "seq", None)
+    return x, k, v, state
+
+
+def forward(params: dict, tokens: jax.Array, cfg: ModelConfig, *,
+            ctx=None, remat: bool = False,
+            train: bool = True) -> tuple[jax.Array, jax.Array]:
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    meta = jnp.broadcast_to(params["meta"][None], (b, *params["meta"].shape))
+    x = jnp.concatenate([meta.astype(x.dtype), x], axis=1)
+    x = named(x, "batch", "seq", None)
+    positions = jnp.arange(x.shape[1])
+    state0 = jnp.zeros((b, cfg.n_heads, cfg.dh, cfg.ssm_state), jnp.float32)
+
+    def body(x, lp):
+        x, _, _, _ = _block_full(lp, x, state0, cfg, positions)
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    n_meta = params["meta"].shape[0]
+    logits = lm_head(params, x[:, n_meta:], cfg)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig, *,
+            max_len: Optional[int] = None, ctx=None
+            ) -> tuple[jax.Array, dict]:
+    b, s = tokens.shape
+    n_meta = params["meta"].shape[0]
+    max_len = (max_len or s) + n_meta
+    x = jnp.take(params["embed"], tokens, axis=0)
+    meta = jnp.broadcast_to(params["meta"][None], (b, *params["meta"].shape))
+    x = jnp.concatenate([meta.astype(x.dtype), x], axis=1)
+    positions = jnp.arange(x.shape[1])
+    state0 = jnp.zeros((b, cfg.n_heads, cfg.dh, cfg.ssm_state), jnp.float32)
+    w = cfg.sliding_window
+
+    def body(x, lp):
+        x, k, v, state = _block_full(lp, x, state0, cfg, positions)
+        if w:
+            ys = (_windowed_cache(k, w, max_len),
+                  _windowed_cache(v, w, max_len), state)
+        else:
+            ys = (_full_cache(k, max_len), _full_cache(v, max_len), state)
+        return x, ys
+
+    x, (ks, vs, states) = jax.lax.scan(body, x, params["layers"])
+    logits = lm_head(params, x[:, -1:, :], cfg)[:, 0]
+    cache = {"k": ks, "v": vs, "ssm": states,
+             "pos": jnp.full((), s + n_meta, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params: dict, token: jax.Array, cache: dict,
+                cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+    w = cfg.sliding_window
+    rolled = w is not None and cache["k"].shape[2] <= w
+    positions = None  # attn_decode derives positions from pos
+
+    def body(x, xs):
+        lp, kc, vc, state = xs
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        a, kc, vc = attn.attn_decode(lp["attn"], h, kc, vc, pos, cfg,
+                                     rolled=rolled, window=w)
+        m, state = _ssm_path(lp["ssm"], h, state, cfg)
+        x = x + _fuse(lp, a, m, cfg)
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(lp["mlp"], h2, cfg.mlp)
+        return x, (kc, vc, state)
+
+    x, (kn, vn, sn) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"], cache["ssm"]))
+    logits = lm_head(params, x, cfg)[:, 0]
+    return logits, {"k": kn, "v": vn, "ssm": sn, "pos": pos + 1}

@@ -1,0 +1,180 @@
+"""Parameter specs and common layers (pure JAX, pytree params).
+
+Parameters are declared once as ``PSpec`` trees — shape, logical sharding
+names, dtype, initializer — from which we derive (a) real initialization for
+smoke tests/examples, (b) ``ShapeDtypeStruct`` trees for the dry-run (no
+allocation), and (c) ``NamedSharding`` trees for jit in_shardings.
+
+Logical names resolve against the active mesh via
+``repro.distributed.sharding`` (divisibility-aware): ``tp`` dims shard over
+the model axis, ``fsdp`` dims over the data axis, per MaxText-style 2D
+sharding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import RULES, named
+
+# Extra logical rules for parameter dims.
+RULES.setdefault("tp", ("model",))
+RULES["tp"] = ("model",)
+
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    """Declaration of one parameter tensor."""
+
+    shape: tuple[int, ...]
+    names: tuple[Optional[str], ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"  # normal | zeros | ones | small
+    scale: Optional[float] = None  # stddev override (default: 1/sqrt(fan_in))
+
+    def __post_init__(self) -> None:
+        if len(self.shape) != len(self.names):
+            raise ValueError(f"rank mismatch {self.shape} vs {self.names}")
+
+
+def is_pspec(x: Any) -> bool:
+    return isinstance(x, PSpec)
+
+
+def init_params(spec_tree: Any, key: jax.Array) -> Any:
+    """Materialize real parameters from a PSpec tree."""
+    leaves, treedef = jax.tree_util.tree_flatten(spec_tree, is_leaf=is_pspec)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(spec: PSpec, k: jax.Array) -> jax.Array:
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, spec.dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, spec.dtype)
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = spec.scale if spec.scale is not None else 1.0 / math.sqrt(fan_in)
+        if spec.init == "small":
+            std = 0.02
+        return (jax.random.normal(k, spec.shape, jnp.float32) * std).astype(
+            spec.dtype)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(s, k) for s, k in zip(leaves, keys)])
+
+
+def abstract_params(spec_tree: Any) -> Any:
+    """PSpec tree -> ShapeDtypeStruct tree (dry-run, no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        spec_tree, is_leaf=is_pspec)
+
+
+def param_logical_names(spec_tree: Any) -> Any:
+    """PSpec tree -> logical-name-tuple tree (same structure)."""
+    return jax.tree_util.tree_map(lambda s: s.names, spec_tree,
+                                  is_leaf=is_pspec)
+
+
+def param_count(spec_tree: Any) -> int:
+    return sum(math.prod(s.shape) for s in
+               jax.tree_util.tree_leaves(spec_tree, is_leaf=is_pspec))
+
+
+def stack_layers(spec: PSpec, n: int) -> PSpec:
+    """Add a leading stacked-layers dim (for lax.scan over layers)."""
+    return PSpec(shape=(n, *spec.shape), names=("layers", *spec.names),
+                 dtype=spec.dtype, init=spec.init, scale=spec.scale)
+
+
+def stack_tree(spec_tree: Any, n: int) -> Any:
+    return jax.tree_util.tree_map(lambda s: stack_layers(s, n), spec_tree,
+                                  is_leaf=is_pspec)
+
+
+# --------------------------------------------------------------------------
+# Normalization / activations / positional encodings
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+               eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(dh: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: (B, S, H, D); positions: (S,) or (B, S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    if angles.ndim == 2:  # (S, D/2) -> broadcast over batch
+        angles = angles[None]
+    cos = jnp.cos(angles)[:, :, None, :]  # (B, S, 1, D/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-math.log(1e4) / d))
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# --------------------------------------------------------------------------
+# MLP block
+# --------------------------------------------------------------------------
+
+
+def mlp_specs(d: int, f: int, kind: str) -> dict[str, PSpec]:
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": PSpec((d, f), ("fsdp", "tp")),
+            "w_up": PSpec((d, f), ("fsdp", "tp")),
+            "w_down": PSpec((f, d), ("tp", "fsdp")),
+        }
+    return {
+        "w_up": PSpec((d, f), ("fsdp", "tp")),
+        "b_up": PSpec((f,), ("tp",), init="zeros"),
+        "w_down": PSpec((f, d), ("tp", "fsdp")),
+        "b_down": PSpec((d,), (None,), init="zeros"),
+    }
+
+
+def mlp_apply(params: dict, x: jax.Array, kind: str) -> jax.Array:
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else \
+            (lambda g: jax.nn.gelu(g, approximate=True))
+        gate = x @ params["w_gate"]
+        up = x @ params["w_up"]
+        h = act(gate.astype(jnp.float32)).astype(x.dtype) * up
+        h = named(h, "batch", "seq", "d_ff")
+        return h @ params["w_down"]
+    h = x @ params["w_up"] + params["b_up"]
+    h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(x.dtype)
+    h = named(h, "batch", "seq", "d_ff")
+    return h @ params["w_down"] + params["b_down"]

@@ -1,0 +1,231 @@
+"""Model registry: family dispatch, cache factories, dry-run input specs."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, hybrid, rwkv6, transformer
+from repro.models.config import ModelConfig
+from repro.models.layers import (abstract_params, init_params,
+                                 param_count, param_logical_names)
+
+_FAMILY = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "encdec": encdec,
+    "rwkv": rwkv6,
+    "hybrid": hybrid,
+}
+
+
+def _specs_for(cfg: ModelConfig) -> Any:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer.decoder_specs(cfg)
+    if cfg.family == "encdec":
+        return encdec.encdec_specs(cfg)
+    if cfg.family == "rwkv":
+        return rwkv6.rwkv_specs(cfg)
+    if cfg.family == "hybrid":
+        return hybrid.hybrid_specs(cfg)
+    raise ValueError(cfg.family)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    @functools.cached_property
+    def specs(self) -> Any:
+        return _specs_for(self.cfg)
+
+    # -- params -----------------------------------------------------------
+
+    def init(self, key: jax.Array) -> Any:
+        return init_params(self.specs, key)
+
+    def abstract_params(self) -> Any:
+        return abstract_params(self.specs)
+
+    def param_names(self) -> Any:
+        return param_logical_names(self.specs)
+
+    def n_params(self) -> int:
+        return param_count(self.specs)
+
+    # -- steps ---------------------------------------------------------------
+
+    def forward(self, params, tokens, *, ctx=None, remat=False,
+                train=True):
+        return _FAMILY[self.cfg.family].forward(params, tokens, self.cfg,
+                                                ctx=ctx, remat=remat,
+                                                train=train)
+
+    def prefill(self, params, tokens, *, max_len=None, ctx=None):
+        return _FAMILY[self.cfg.family].prefill(params, tokens, self.cfg,
+                                                max_len=max_len, ctx=ctx)
+
+    def decode_step(self, params, token, cache):
+        return _FAMILY[self.cfg.family].decode_step(params, token, cache,
+                                                    self.cfg)
+
+    # -- caches ------------------------------------------------------------------
+
+    def cache_shapes(self, batch: int, max_len: int
+                     ) -> dict[str, jax.ShapeDtypeStruct]:
+        """Abstract decode-cache tree for a cache holding ``max_len`` tokens."""
+        cfg = self.cfg
+        l, kv, dh = cfg.n_layers, cfg.n_kv_heads, cfg.dh
+        f32, bf16, i32 = jnp.float32, jnp.bfloat16, jnp.int32
+        sds = jax.ShapeDtypeStruct
+        if cfg.family == "rwkv":
+            h, rdh = cfg.d_model // 64, 64
+            return {
+                "wkv": sds((l, batch, h, rdh, rdh), f32),
+                "tm_x": sds((l, batch, cfg.d_model), bf16),
+                "cm_x": sds((l, batch, cfg.d_model), bf16),
+                "pos": sds((), i32),
+            }
+        if cfg.family == "hybrid":
+            n_meta = cfg.n_context_tokens or 128
+            c = transformer.local_cache_len(cfg, max_len + n_meta)
+            return {
+                "k": sds((l, batch, c, kv, dh), bf16),
+                "v": sds((l, batch, c, kv, dh), bf16),
+                "ssm": sds((l, batch, cfg.n_heads, dh, cfg.ssm_state), f32),
+                "pos": sds((), i32),
+            }
+        if cfg.family == "encdec":
+            ctx_len = cfg.n_context_tokens
+            return {
+                "k": sds((l, batch, max_len, kv, dh), bf16),
+                "v": sds((l, batch, max_len, kv, dh), bf16),
+                "cross_k": sds((l, batch, ctx_len, kv, dh), bf16),
+                "cross_v": sds((l, batch, ctx_len, kv, dh), bf16),
+                "pos": sds((), i32),
+            }
+        if cfg.family == "vlm":
+            g = cfg.n_layers // cfg.cross_attn_every
+            ctx_len = cfg.n_context_tokens
+            return {
+                "k": sds((l, batch, max_len, kv, dh), bf16),
+                "v": sds((l, batch, max_len, kv, dh), bf16),
+                "cross_k": sds((g, batch, ctx_len, kv, dh), bf16),
+                "cross_v": sds((g, batch, ctx_len, kv, dh), bf16),
+                "pos": sds((), i32),
+            }
+        # dense / moe
+        from repro.models.attention import kv_int8_enabled
+        c = transformer.local_cache_len(cfg, max_len)
+        if kv_int8_enabled(cfg):
+            return {
+                "k": sds((l, batch, c, kv, dh), jnp.int8),
+                "v": sds((l, batch, c, kv, dh), jnp.int8),
+                "k_scale": sds((l, batch, c, kv, 1), bf16),
+                "v_scale": sds((l, batch, c, kv, 1), bf16),
+                "pos": sds((), i32),
+            }
+        tree = {
+            "k": sds((l, batch, c, kv, dh), bf16),
+            "v": sds((l, batch, c, kv, dh), bf16),
+            "pos": sds((), i32),
+        }
+        if cfg.local_global_ratio > 0 and cfg.sliding_window:
+            g = transformer.n_global_layers(cfg)
+            tree["global_k"] = sds((g, batch, max_len, kv, dh), bf16)
+            tree["global_v"] = sds((g, batch, max_len, kv, dh), bf16)
+        return tree
+
+    def cache_names(self, batch: int, max_len: int) -> dict[str, tuple]:
+        """Logical dimension names matching cache_shapes (for shardings)."""
+        kvnames = ("layers", "batch", "seq", "kv_heads", None)
+        cfg = self.cfg
+        if cfg.family == "rwkv":
+            return {
+                "wkv": ("layers", "batch", "heads", None, None),
+                "tm_x": ("layers", "batch", None),
+                "cm_x": ("layers", "batch", None),
+                "pos": (),
+            }
+        names: dict[str, tuple] = {}
+        for key in self.cache_shapes(batch, max_len):
+            if key == "pos":
+                names[key] = ()
+            elif key == "ssm":
+                names[key] = ("layers", "batch", "heads", None, None)
+            else:
+                names[key] = kvnames
+        return names
+
+    def init_cache(self, batch: int, max_len: int) -> Any:
+        """Real zeroed cache (engine / smoke tests)."""
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.cache_shapes(batch, max_len))
+
+    # -- stubbed modality frontends -----------------------------------------
+
+    def needs_ctx(self) -> bool:
+        return self.cfg.family in ("encdec", "vlm")
+
+    def ctx_shape(self, batch: int) -> Optional[jax.ShapeDtypeStruct]:
+        if not self.needs_ctx():
+            return None
+        return jax.ShapeDtypeStruct(
+            (batch, self.cfg.n_context_tokens, self.cfg.d_model),
+            jnp.bfloat16)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg=cfg)
+
+
+# --------------------------------------------------------------------------
+# Dry-run input specs (ShapeDtypeStruct stand-ins, no allocation)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    """One assigned input-shape cell."""
+
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPE_CASES = {
+    "train_4k": ShapeCase("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCase("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCase("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCase("long_500k", "decode", 524288, 1),
+}
+
+
+def input_specs(model: Model, case: ShapeCase
+                ) -> tuple[dict[str, Any], dict[str, Any]]:
+    """Returns (ShapeDtypeStruct tree, logical-names tree) for the step."""
+    sds = jax.ShapeDtypeStruct
+    b, s = case.global_batch, case.seq_len
+    i32 = jnp.int32
+    if case.kind == "train":
+        specs = {"tokens": sds((b, s), i32), "labels": sds((b, s), i32)}
+        names = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+    elif case.kind == "prefill":
+        specs = {"tokens": sds((b, s), i32)}
+        names = {"tokens": ("batch", "seq")}
+    else:  # decode
+        specs = {"token": sds((b,), i32),
+                 "cache": model.cache_shapes(b, s)}
+        names = {"token": ("batch",),
+                 "cache": model.cache_names(b, s)}
+    if model.needs_ctx() and case.kind != "decode":
+        specs["ctx"] = model.ctx_shape(b)
+        names["ctx"] = ("batch", "seq", None)
+    return specs, names

@@ -1,0 +1,516 @@
+"""Decoder-only transformer stack: dense / MoE / VLM families.
+
+One implementation covers qwen2-7b, gemma3-27b, starcoder2-15b,
+qwen1.5-110b, mixtral-8x7b, qwen2-moe-a2.7b and llama-3.2-vision-11b:
+
+* **scan-over-layers** keeps HLO size O(1) in depth (512-device compiles);
+* **local:global interleave** (gemma3): one uniform layer stack with a
+  per-layer ``is_global`` flag; ``lax.cond`` selects windowed vs. full
+  attention.  Decode uses a *dual cache*: rolled (B, W, K, Dh) buffers for
+  every layer (xs of the scan) plus full-length caches for the few global
+  layers (carry, indexed by a per-layer global-slot);
+* **sliding-window everywhere** (mixtral): single rolled cache of size W;
+* **cross-attention interleave** (llama-vision): self layers grouped, one
+  gated cross-attn layer after every ``cross_attn_every`` self layers.
+
+Simplifications recorded in DESIGN.md: RMSNorm for all archs (starcoder2
+ships LayerNorm), no QK-norm (gemma3), single rope base.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import named
+from repro.models import attention as attn
+from repro.models.config import ModelConfig
+from repro.models.layers import (PSpec, mlp_apply, mlp_specs, rms_norm,
+                                 stack_tree)
+from repro.models.moe import moe_apply, moe_specs
+
+
+# --------------------------------------------------------------------------
+# Specs
+# --------------------------------------------------------------------------
+
+
+def block_specs(cfg: ModelConfig) -> dict[str, Any]:
+    d = cfg.d_model
+    s: dict[str, Any] = {
+        "ln1": PSpec((d,), (None,), init="zeros"),
+        "attn": attn.attn_specs(cfg),
+        "ln2": PSpec((d,), (None,), init="zeros"),
+    }
+    if cfg.family == "moe":
+        s["moe"] = moe_specs(cfg)
+    else:
+        s["mlp"] = mlp_specs(d, cfg.d_ff, cfg.mlp)
+    return s
+
+
+def cross_block_specs(cfg: ModelConfig) -> dict[str, Any]:
+    d = cfg.d_model
+    return {
+        "ln1": PSpec((d,), (None,), init="zeros"),
+        "attn": attn.attn_specs(cfg, cross=True),
+        "gate_attn": PSpec((), (), init="zeros"),
+        "ln2": PSpec((d,), (None,), init="zeros"),
+        "mlp": mlp_specs(d, cfg.d_ff, cfg.mlp),
+        "gate_mlp": PSpec((), (), init="zeros"),
+    }
+
+
+def decoder_specs(cfg: ModelConfig) -> dict[str, Any]:
+    d, v, l = cfg.d_model, cfg.padded_vocab, cfg.n_layers
+    specs: dict[str, Any] = {
+        "embed": PSpec((v, d), ("vocab", "fsdp"), init="small"),
+        "ln_f": PSpec((d,), (None,), init="zeros"),
+        "layers": stack_tree(block_specs(cfg), l),
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = PSpec((d, v), ("fsdp", "vocab"))
+    if cfg.family == "vlm":
+        if l % cfg.cross_attn_every:
+            raise ValueError("n_layers must divide cross_attn_every groups")
+        g = l // cfg.cross_attn_every
+        specs["cross_layers"] = stack_tree(cross_block_specs(cfg), g)
+    return specs
+
+
+# --------------------------------------------------------------------------
+# Blocks
+# --------------------------------------------------------------------------
+
+
+def _ffn(lp: dict, x: jax.Array, cfg: ModelConfig, train: bool
+         ) -> tuple[jax.Array, jax.Array]:
+    if cfg.family == "moe":
+        cf = cfg.moe_cf_train if train else cfg.moe_cf_eval
+        return moe_apply(lp["moe"], x, cfg, capacity_factor=cf)
+    return mlp_apply(lp["mlp"], x, cfg.mlp), jnp.zeros((), jnp.float32)
+
+
+def block_full(lp: dict, x: jax.Array, cfg: ModelConfig, *,
+               positions: jax.Array, window: Optional[int],
+               train: bool = True
+               ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Full-sequence block. Returns (x, k, v, aux_loss)."""
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    a, k, v = attn.attn_full(lp["attn"], h, cfg, positions=positions,
+                             window=window)
+    x = named(x + a, "batch", "seq", None)
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    m, aux = _ffn(lp, h, cfg, train)
+    x = named(x + m, "batch", "seq", None)
+    return x, k, v, aux
+
+
+def block_decode(lp: dict, x: jax.Array, kc: jax.Array, vc: jax.Array,
+                 pos: jax.Array, cfg: ModelConfig, *, rolled: bool,
+                 window: Optional[int]
+                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    a, kc, vc = attn.attn_decode(lp["attn"], h, kc, vc, pos, cfg,
+                                 rolled=rolled, window=window)
+    x = x + a
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    m, _ = _ffn(lp, h, cfg, train=False)
+    return x + m, kc, vc
+
+
+def block_decode_quant(lp: dict, x: jax.Array, kc, vc, ksc, vsc,
+                       pos: jax.Array, cfg: ModelConfig):
+    """block_decode against int8 caches (§Perf D)."""
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    a, kc, vc, ksc, vsc = attn.attn_decode_quant(lp["attn"], h, kc, vc,
+                                                 ksc, vsc, pos, cfg)
+    x = x + a
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    m, _ = _ffn(lp, h, cfg, train=False)
+    return x + m, kc, vc, ksc, vsc
+
+
+def cross_block_full(lp: dict, x: jax.Array, ctx: jax.Array,
+                     cfg: ModelConfig
+                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Gated cross-attention block (llama-3.2-vision style).
+
+    Returns (x, ck, cv) — the projected context cache for decode reuse.
+    """
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    ck, cv = attn.context_kv(lp["attn"], ctx, cfg)
+    a = attn.cross_attn_full(lp["attn"], h, (ck, cv), cfg)
+    x = x + jnp.tanh(lp["gate_attn"].astype(jnp.float32)).astype(x.dtype) * a
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    m = mlp_apply(lp["mlp"], h, cfg.mlp)
+    x = x + jnp.tanh(lp["gate_mlp"].astype(jnp.float32)).astype(x.dtype) * m
+    return x, ck, cv
+
+
+def cross_block_decode(lp: dict, x: jax.Array, ck: jax.Array, cv: jax.Array,
+                       cfg: ModelConfig) -> jax.Array:
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    a = attn.cross_attn_decode(lp["attn"], h, ck, cv, cfg)
+    x = x + jnp.tanh(lp["gate_attn"].astype(jnp.float32)).astype(x.dtype) * a
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    m = mlp_apply(lp["mlp"], h, cfg.mlp)
+    return x + jnp.tanh(lp["gate_mlp"].astype(jnp.float32)).astype(x.dtype) * m
+
+
+# --------------------------------------------------------------------------
+# Embedding / head
+# --------------------------------------------------------------------------
+
+
+def embed_tokens(params: dict, tokens: jax.Array, cfg: ModelConfig
+                 ) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return named(x, "batch", "seq", None)
+
+
+def lm_head(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = (x @ w).astype(jnp.float32)
+    return named(logits, "batch", "seq", "vocab")
+
+
+# --------------------------------------------------------------------------
+# Layer-pattern helpers
+# --------------------------------------------------------------------------
+
+
+def _layer_flags(cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    """(is_global (L,), global_slot (L,)) for local:global interleaves."""
+    flags = [cfg.is_global_layer(i) for i in range(cfg.n_layers)]
+    slots, c = [], 0
+    for f in flags:
+        slots.append(c)
+        c += int(f)
+    return jnp.asarray(flags), jnp.asarray(slots, jnp.int32)
+
+
+def n_global_layers(cfg: ModelConfig) -> int:
+    return sum(cfg.is_global_layer(i) for i in range(cfg.n_layers))
+
+
+def _dual(cfg: ModelConfig) -> bool:
+    return cfg.local_global_ratio > 0 and cfg.sliding_window is not None
+
+
+def local_cache_len(cfg: ModelConfig, max_len: int) -> int:
+    w = cfg.sliding_window
+    return min(w, max_len) if w else max_len
+
+
+# --------------------------------------------------------------------------
+# Forward (training) — logits over the full sequence
+# --------------------------------------------------------------------------
+
+
+def forward(params: dict, tokens: jax.Array, cfg: ModelConfig, *,
+            ctx: Optional[jax.Array] = None, remat: bool = False,
+            train: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Returns (logits (B,S,V) fp32, moe aux loss)."""
+    b, s = tokens.shape
+    x = embed_tokens(params, tokens, cfg)
+    positions = jnp.arange(s)
+
+    def self_body(x, lp, flag):
+        if _dual(cfg):
+            def global_fn(args):
+                lp_, x_ = args
+                xo, _, _, aux = block_full(lp_, x_, cfg, positions=positions,
+                                           window=None, train=train)
+                return xo, aux
+
+            def local_fn(args):
+                lp_, x_ = args
+                xo, _, _, aux = block_full(lp_, x_, cfg, positions=positions,
+                                           window=cfg.sliding_window,
+                                           train=train)
+                return xo, aux
+
+            x, aux = jax.lax.cond(flag, global_fn, local_fn, (lp, x))
+        else:
+            x, _, _, aux = block_full(lp, x, cfg, positions=positions,
+                                      window=cfg.sliding_window, train=train)
+        return x, aux
+
+    if remat:
+        self_body = jax.checkpoint(
+            self_body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    flags, _ = _layer_flags(cfg)
+
+    if cfg.family == "vlm":
+        assert ctx is not None, "vlm forward needs context embeddings"
+        every = cfg.cross_attn_every
+        g = cfg.n_layers // every
+        grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape(g, every, *a.shape[1:]), params["layers"])
+
+        def group_body(carry, xs):
+            x, aux = carry
+            glp, clp = xs
+
+            def inner(carry2, lp):
+                x2, aux2 = carry2
+                x2, a2 = self_body(x2, lp, jnp.asarray(True))
+                return (x2, aux2 + a2), None
+
+            (x, aux), _ = jax.lax.scan(inner, (x, aux), glp)
+            x, _, _ = cross_block_full(clp, x, ctx, cfg)
+            return (x, aux), None
+
+        (x, aux), _ = jax.lax.scan(
+            group_body, (x, jnp.zeros((), jnp.float32)),
+            (grouped, params["cross_layers"]))
+    else:
+        def body(carry, xs):
+            x, aux = carry
+            lp, flag = xs
+            x, a = self_body(x, lp, flag)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), (params["layers"], flags))
+
+    return lm_head(params, x, cfg), aux
+
+
+# --------------------------------------------------------------------------
+# Prefill — forward + emit decode caches
+# --------------------------------------------------------------------------
+
+
+def _windowed_cache(k: jax.Array, w: int, max_len: int) -> jax.Array:
+    """Extract a rolled (B, C, K, Dh) cache from full-seq k (B, S, K, Dh)."""
+    b, s, kv, dh = k.shape
+    c = min(w, max_len)
+    if s <= c:
+        out = jnp.zeros((b, c, kv, dh), k.dtype)
+        return jax.lax.dynamic_update_slice(out, k, (0, 0, 0, 0))
+    last = jax.lax.dynamic_slice_in_dim(k, s - c, c, axis=1)
+    # slot of position p is p % c; positions [s-c, s) -> roll by s % c.
+    return jnp.roll(last, shift=s % c, axis=1)
+
+
+def _full_cache(k: jax.Array, max_len: int) -> jax.Array:
+    b, s, kv, dh = k.shape
+    if s == max_len:
+        return k
+    out = jnp.zeros((b, max_len, kv, dh), k.dtype)
+    return jax.lax.dynamic_update_slice(out, k, (0, 0, 0, 0))
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig, *,
+            max_len: Optional[int] = None, ctx: Optional[jax.Array] = None
+            ) -> tuple[jax.Array, dict]:
+    """Run the prompt; returns (last-position logits (B,V), cache dict)."""
+    b, s = tokens.shape
+    max_len = max_len or s
+    x = embed_tokens(params, tokens, cfg)
+    positions = jnp.arange(s)
+    flags, gslots = _layer_flags(cfg)
+    dual = _dual(cfg)
+    w = cfg.sliding_window
+
+    if cfg.family == "vlm":
+        assert ctx is not None
+        every = cfg.cross_attn_every
+        g = cfg.n_layers // every
+        grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape(g, every, *a.shape[1:]), params["layers"])
+
+        def group_body(x, xs):
+            glp, clp = xs
+
+            def inner(x2, lp):
+                x2, k, v, _ = block_full(lp, x2, cfg, positions=positions,
+                                         window=None, train=False)
+                return x2, (_full_cache(k, max_len), _full_cache(v, max_len))
+
+            x, (ks, vs) = jax.lax.scan(inner, x, glp)
+            x, ck, cv = cross_block_full(clp, x, ctx, cfg)
+            return x, (ks, vs, ck, cv)
+
+        x, (ks, vs, cks, cvs) = jax.lax.scan(
+            group_body, x, (grouped, params["cross_layers"]))
+        lk = ks.reshape(cfg.n_layers, *ks.shape[2:])
+        lv = vs.reshape(cfg.n_layers, *vs.shape[2:])
+        cache = {"k": lk, "v": lv, "cross_k": cks, "cross_v": cvs,
+                 "pos": jnp.full((), s, jnp.int32)}
+        return lm_head(params, x[:, -1:, :], cfg)[:, 0], cache
+
+    n_glob = n_global_layers(cfg) if dual else 0
+    gk0 = jnp.zeros((max(n_glob, 1), b, max_len, cfg.n_kv_heads, cfg.dh),
+                    jnp.bfloat16)
+
+    def body(carry, xs):
+        x, gk, gv = carry
+        lp, flag, gslot = xs
+        if dual:
+            def global_fn(ops_in):
+                x_, gk_, gv_ = ops_in
+                xo, k, v, _ = block_full(lp, x_, cfg, positions=positions,
+                                         window=None, train=False)
+                gk_ = jax.lax.dynamic_update_slice(
+                    gk_, _full_cache(k, max_len)[None].astype(gk_.dtype),
+                    (gslot, 0, 0, 0, 0))
+                gv_ = jax.lax.dynamic_update_slice(
+                    gv_, _full_cache(v, max_len)[None].astype(gv_.dtype),
+                    (gslot, 0, 0, 0, 0))
+                return xo, k, v, gk_, gv_
+
+            def local_fn(ops_in):
+                x_, gk_, gv_ = ops_in
+                xo, k, v, _ = block_full(lp, x_, cfg, positions=positions,
+                                         window=w, train=False)
+                return xo, k, v, gk_, gv_
+
+            x, k, v, gk, gv = jax.lax.cond(flag, global_fn, local_fn,
+                                           (x, gk, gv))
+            lc = local_cache_len(cfg, max_len)
+            ys = (_windowed_cache(k, lc, max_len),
+                  _windowed_cache(v, lc, max_len))
+        else:
+            x, k, v, _ = block_full(lp, x, cfg, positions=positions,
+                                    window=w, train=False)
+            if w:
+                ys = (_windowed_cache(k, w, max_len),
+                      _windowed_cache(v, w, max_len))
+            elif quant:
+                k8, ksn = attn.kv_quantize(k)
+                v8, vsn = attn.kv_quantize(v)
+                ys = (_full_cache(k8, max_len), _full_cache(v8, max_len),
+                      _full_cache(ksn, max_len), _full_cache(vsn, max_len))
+            else:
+                ys = (_full_cache(k, max_len), _full_cache(v, max_len))
+        return (x, gk, gv), ys
+
+    quant = attn.kv_int8_enabled(cfg)
+    (x, gk, gv), ys = jax.lax.scan(
+        body, (x, gk0, gk0), (params["layers"], flags, gslots))
+    if quant:
+        ks, vs, kss, vss = ys
+        cache = {"k": ks, "v": vs, "k_scale": kss, "v_scale": vss,
+                 "pos": jnp.full((), s, jnp.int32)}
+    else:
+        ks, vs = ys
+        cache = {"k": ks, "v": vs, "pos": jnp.full((), s, jnp.int32)}
+    if dual:
+        cache["global_k"], cache["global_v"] = gk, gv
+    logits = lm_head(params, x[:, -1:, :], cfg)[:, 0]
+    return logits, cache
+
+
+# --------------------------------------------------------------------------
+# Decode — one token against the cache
+# --------------------------------------------------------------------------
+
+
+def decode_step(params: dict, token: jax.Array, cache: dict,
+                cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    """token: (B,) int32. Returns (logits (B,V), updated cache)."""
+    b = token.shape[0]
+    pos = cache["pos"]  # scalar absolute position of the new token
+    x = embed_tokens(params, token[:, None], cfg)
+    flags, gslots = _layer_flags(cfg)
+    dual = _dual(cfg)
+    w = cfg.sliding_window
+    rolled = w is not None and cache["k"].shape[2] <= w
+
+    if cfg.family == "vlm":
+        every = cfg.cross_attn_every
+        g = cfg.n_layers // every
+        grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape(g, every, *a.shape[1:]), params["layers"])
+        kg = cache["k"].reshape(g, every, *cache["k"].shape[1:])
+        vg = cache["v"].reshape(g, every, *cache["v"].shape[1:])
+
+        def group_body(x, xs):
+            glp, clp, kge, vge, ck, cv = xs
+
+            def inner(x2, lxs):
+                lp, kc, vc = lxs
+                x2, kc, vc = block_decode(lp, x2, kc, vc, pos, cfg,
+                                          rolled=False, window=None)
+                return x2, (kc, vc)
+
+            x, (kc, vc) = jax.lax.scan(inner, x, (glp, kge, vge))
+            x = cross_block_decode(clp, x, ck, cv, cfg)
+            return x, (kc, vc)
+
+        x, (kn, vn) = jax.lax.scan(
+            group_body, x,
+            (grouped, params["cross_layers"], kg, vg,
+             cache["cross_k"], cache["cross_v"]))
+        new_cache = dict(cache)
+        new_cache["k"] = kn.reshape(cfg.n_layers, *kn.shape[2:])
+        new_cache["v"] = vn.reshape(cfg.n_layers, *vn.shape[2:])
+        new_cache["pos"] = pos + 1
+        return lm_head(params, x, cfg)[:, 0], new_cache
+
+    gk = cache.get("global_k", jnp.zeros((1,) + cache["k"].shape[1:],
+                                         cache["k"].dtype))
+    gv = cache.get("global_v", gk)
+
+    if attn.kv_int8_enabled(cfg):
+        def qbody(x, xs):
+            lp, kc, vc, ksc, vsc = xs
+            x, kc, vc, ksc, vsc = block_decode_quant(lp, x, kc, vc, ksc,
+                                                     vsc, pos, cfg)
+            return x, (kc, vc, ksc, vsc)
+
+        x, (kn, vn, ksn, vsn) = jax.lax.scan(
+            qbody, x, (params["layers"], cache["k"], cache["v"],
+                       cache["k_scale"], cache["v_scale"]))
+        new_cache = dict(cache, k=kn, v=vn, k_scale=ksn, v_scale=vsn,
+                         pos=pos + 1)
+        return lm_head(params, x, cfg)[:, 0], new_cache
+
+    def body(carry, xs):
+        x, gk, gv = carry
+        lp, flag, gslot, kc, vc = xs
+        if dual:
+            def global_fn(ops_in):
+                x_, gk_, gv_, kc_, vc_ = ops_in
+                gkl = jax.lax.dynamic_index_in_dim(gk_, gslot, 0,
+                                                   keepdims=False)
+                gvl = jax.lax.dynamic_index_in_dim(gv_, gslot, 0,
+                                                   keepdims=False)
+                xo, gkl, gvl = block_decode(lp, x_, gkl, gvl, pos, cfg,
+                                            rolled=False, window=None)
+                gk_ = jax.lax.dynamic_update_slice(
+                    gk_, gkl[None], (gslot, 0, 0, 0, 0))
+                gv_ = jax.lax.dynamic_update_slice(
+                    gv_, gvl[None], (gslot, 0, 0, 0, 0))
+                return xo, gk_, gv_, kc_, vc_
+
+            def local_fn(ops_in):
+                x_, gk_, gv_, kc_, vc_ = ops_in
+                xo, kc_, vc_ = block_decode(lp, x_, kc_, vc_, pos, cfg,
+                                            rolled=True, window=w)
+                return xo, gk_, gv_, kc_, vc_
+
+            x, gk, gv, kc, vc = jax.lax.cond(flag, global_fn, local_fn,
+                                             (x, gk, gv, kc, vc))
+        else:
+            x, kc, vc = block_decode(lp, x, kc, vc, pos, cfg,
+                                     rolled=rolled, window=w)
+        return (x, gk, gv), (kc, vc)
+
+    (x, gk, gv), (kn, vn) = jax.lax.scan(
+        body, (x, gk, gv), (params["layers"], flags, gslots,
+                            cache["k"], cache["v"]))
+    new_cache = dict(cache, k=kn, v=vn, pos=pos + 1)
+    if dual:
+        new_cache["global_k"], new_cache["global_v"] = gk, gv
+    return lm_head(params, x, cfg)[:, 0], new_cache

@@ -1,0 +1,4 @@
+from repro.serving.engine import (FunctionInstance, ServeRequest,
+                                  ServingEngine)
+
+__all__ = ["ServingEngine", "FunctionInstance", "ServeRequest"]

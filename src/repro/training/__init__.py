@@ -1,0 +1,6 @@
+from repro.training.optimizer import AdamW, AdamWState
+from repro.training.train_loop import (TrainStepConfig, cross_entropy,
+                                       make_train_step, train)
+
+__all__ = ["AdamW", "AdamWState", "TrainStepConfig", "cross_entropy",
+           "make_train_step", "train"]

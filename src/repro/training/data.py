@@ -1,0 +1,48 @@
+"""Synthetic LM data pipeline: deterministic, seekable, shard-aware.
+
+A structured synthetic language (repeating n-gram templates + noise) so a
+~100M model shows a real, monotonic loss curve in a few hundred steps —
+pure-uniform tokens would pin the loss at log(V).
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_batch(vocab: int, batch: int, seq: int, step: int, *,
+               seed: int = 0, structure: int = 64) -> dict:
+    """Deterministic batch for a given step (seekable -> restart-safe)."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step]))
+    # Markov-ish structure: next token = (a*tok + b) % structure, with noise.
+    a = 2 * rng.integers(1, structure // 2) + 1
+    b = rng.integers(0, structure)
+    toks = np.empty((batch, seq + 1), np.int64)
+    toks[:, 0] = rng.integers(0, structure, batch)
+    for t in range(seq):
+        nxt = (a * toks[:, t] + b) % structure
+        noise = rng.random(batch) < 0.1
+        nxt = np.where(noise, rng.integers(0, structure, batch), nxt)
+        toks[:, t + 1] = nxt
+    toks = toks % vocab
+    return {
+        "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+        "labels": jnp.asarray(toks[:, 1:], jnp.int32),
+    }
+
+
+def batch_iterator(vocab: int, batch: int, seq: int, *, seed: int = 0,
+                   start_step: int = 0, ctx_shape: Optional[tuple] = None
+                   ) -> Iterator[dict]:
+    step = start_step
+    rng = np.random.default_rng(seed + 1)
+    while True:
+        out = make_batch(vocab, batch, seq, step, seed=seed)
+        if ctx_shape is not None:
+            out["ctx"] = jnp.asarray(
+                rng.normal(size=ctx_shape) * 0.02, jnp.bfloat16)
+        yield out
+        step += 1

@@ -1,0 +1,138 @@
+"""Train-step factory and loop: microbatch accumulation, remat, optional
+bf16 gradient compression, checkpoint/restart fault tolerance."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.training.optimizer import AdamW, AdamWState
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token NLL.  logits fp32 (B,S,V); labels (B,S) int32."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    return nll.mean()
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    microbatches: int = 1
+    remat: bool = True
+    grad_compress: bool = False  # bf16 gradient accumulation/all-reduce
+    aux_weight: float = 0.01  # MoE load-balance loss weight
+
+
+def make_train_step(model: Model, opt: AdamW,
+                    cfg: TrainStepConfig = TrainStepConfig()
+                    ) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params', state', metrics).
+
+    ``batch``: {"tokens": (B,S), "labels": (B,S)[, "ctx": (B,Sc,D)]}.
+    With ``microbatches > 1`` the global batch is split along the batch dim
+    and gradients accumulated in a lax.scan (activation memory / n).
+    ``grad_compress`` accumulates (and therefore cross-device-reduces)
+    gradients in bf16 — halves the gradient-reduction collective bytes at
+    ~1 ulp cost, a standard distributed-training trick (DESIGN.md §5).
+    """
+
+    def loss_fn(params, tokens, labels, ctx):
+        logits, aux = model.forward(params, tokens, ctx=ctx, remat=cfg.remat)
+        return cross_entropy(logits, labels) + cfg.aux_weight * aux
+
+    grad_dtype = jnp.bfloat16 if cfg.grad_compress else jnp.float32
+
+    def train_step(params, opt_state: AdamWState, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        ctx = batch.get("ctx")
+        n_mb = cfg.microbatches
+        if n_mb == 1:
+            (loss, grads) = jax.value_and_grad(loss_fn)(params, tokens,
+                                                        labels, ctx)
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(grad_dtype), grads)
+        else:
+            b = tokens.shape[0]
+            if b % n_mb:
+                raise ValueError(f"batch {b} not divisible by {n_mb}")
+            mb = lambda x: x.reshape(n_mb, b // n_mb, *x.shape[1:])
+            toks, labs = mb(tokens), mb(labels)
+            ctxs = mb(ctx) if ctx is not None else None
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, grad_dtype), params)
+
+            def acc_body(carry, xs):
+                loss_acc, gacc = carry
+                if ctxs is None:
+                    t, l = xs
+                    c = None
+                else:
+                    t, l, c = xs
+                loss, grads = jax.value_and_grad(loss_fn)(params, t, l, c)
+                gacc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(grad_dtype), gacc, grads)
+                return (loss_acc + loss, gacc), None
+
+            xs = (toks, labs) if ctxs is None else (toks, labs, ctxs)
+            (loss, grads), _ = jax.lax.scan(
+                acc_body, (jnp.zeros(()), zeros), xs)
+            loss = loss / n_mb
+            grads = jax.tree_util.tree_map(lambda g: g / n_mb, grads)
+        new_params, new_state, metrics = opt.update(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+@dataclasses.dataclass
+class TrainResult:
+    losses: list[float]
+    steps: int
+    wall_time: float
+
+
+def train(model: Model, params, batches: Iterator[dict], *,
+          opt: Optional[AdamW] = None, steps: int = 100,
+          step_cfg: TrainStepConfig = TrainStepConfig(),
+          checkpoint_dir: Optional[str] = None, checkpoint_every: int = 50,
+          log_every: int = 10,
+          on_step: Optional[Callable[[int, dict], None]] = None
+          ) -> tuple[Any, AdamWState, TrainResult]:
+    """Simple single-process training loop with checkpoint/restart."""
+    from repro.training import checkpoint as ckpt
+
+    opt = opt or AdamW(total_steps=steps)
+    opt_state = opt.init(params)
+    start_step = 0
+    if checkpoint_dir:
+        restored = ckpt.restore_latest(checkpoint_dir, params, opt_state)
+        if restored is not None:
+            start_step, params, opt_state = restored
+
+    step_fn = jax.jit(make_train_step(model, opt, step_cfg),
+                      donate_argnums=(0, 1))
+    losses: list[float] = []
+    t0 = time.perf_counter()
+    for step in range(start_step, steps):
+        batch = next(batches)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if on_step:
+            on_step(step, metrics)
+        if log_every and step % log_every == 0:
+            print(f"step {step:5d}  loss {loss:.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}")
+        if checkpoint_dir and (step + 1) % checkpoint_every == 0:
+            ckpt.save(checkpoint_dir, step + 1, params, opt_state)
+    return params, opt_state, TrainResult(
+        losses=losses, steps=steps - start_step,
+        wall_time=time.perf_counter() - t0)

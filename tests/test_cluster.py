@@ -1,0 +1,172 @@
+"""Integration tests: the full FaST-GShare control plane in simulation."""
+
+import pytest
+
+from repro.core import (Cluster, PAPER_ZOO, ProfilePoint, poisson_arrivals,
+                        simulate_trial)
+
+
+def resnet_point(sm=0.24, quota=1.0):
+    c = PAPER_ZOO["resnet"]
+    return ProfilePoint(sm=sm, quota=quota, throughput=c.rate(sm, quota))
+
+
+def test_single_pod_throughput_matches_service_curve():
+    c = PAPER_ZOO["resnet"]
+    tr = simulate_trial(c, sm=0.12, quota=0.6, duration=20.0)
+    assert tr.throughput == pytest.approx(c.rate(0.12, 0.6), rel=0.1)
+
+
+def test_temporal_throughput_proportionality():
+    """Paper §5.2: throughput scales ~proportionally with time quota."""
+    c = PAPER_ZOO["rnnt"]
+    t40 = simulate_trial(c, sm=0.24, quota=0.4, duration=20.0).throughput
+    t80 = simulate_trial(c, sm=0.24, quota=0.8, duration=20.0).throughput
+    assert t80 / t40 == pytest.approx(2.0, rel=0.15)
+
+
+def test_spatial_saturation():
+    """Paper §5.2: beyond sm_sat, more SMs give no extra throughput."""
+    c = PAPER_ZOO["resnet"]  # saturates at 24%
+    t24 = simulate_trial(c, sm=0.24, quota=1.0, duration=20.0).throughput
+    t50 = simulate_trial(c, sm=0.50, quota=1.0, duration=20.0).throughput
+    assert t50 == pytest.approx(t24, rel=0.05)
+
+
+def test_isolation_under_contention():
+    """Paper Fig. 9: with spatial partitions, a greedy co-tenant cannot
+    degrade a victim's throughput below its entitlement."""
+    c = PAPER_ZOO["resnet"]
+    # Victim alone at (0.24, 0.5).
+    cluster = Cluster(n_nodes=1)
+    cluster.register_function("victim", c)
+    cluster.deploy("victim", resnet_point(0.24, 0.5))
+    cluster.submit_all(poisson_arrivals("victim", c.rate(0.24, 0.5) * 2, 30.0))
+    cluster.run(32.0)
+    alone = cluster.recorders["victim"].throughput(5.0, 30.0)
+
+    # Victim + aggressive co-tenant with its own partition.
+    cluster2 = Cluster(n_nodes=1)
+    cluster2.register_function("victim", c)
+    cluster2.register_function("noisy", PAPER_ZOO["rnnt"])
+    cluster2.deploy("victim", resnet_point(0.24, 0.5))
+    noisy_c = PAPER_ZOO["rnnt"]
+    cluster2.deploy("noisy", ProfilePoint(sm=0.24, quota=0.5,
+                                          throughput=noisy_c.rate(0.24, 0.5)))
+    cluster2.submit_all(poisson_arrivals("victim", c.rate(0.24, 0.5) * 2, 30.0))
+    cluster2.submit_all(poisson_arrivals("noisy", noisy_c.rate(0.24, 0.5) * 3,
+                                         30.0, seed=7))
+    cluster2.run(32.0)
+    contended = cluster2.recorders["victim"].throughput(5.0, 30.0)
+    assert contended >= 0.9 * alone  # isolation: <=10% degradation
+
+
+def test_spatial_sharing_beats_single_racing_pod():
+    """Paper §5.3 headline: N partitioned pods >> one racing pod."""
+    c = PAPER_ZOO["resnet"]
+    # Racing: one pod with the whole node.
+    racing = simulate_trial(c, sm=1.0, quota=1.0, duration=20.0).throughput
+    # Spatial sharing: 8 pods at 12%.
+    cluster = Cluster(n_nodes=1)
+    cluster.register_function("f", c)
+    for _ in range(8):
+        assert cluster.deploy("f", resnet_point(0.12, 1.0)) is not None
+    cluster.submit_all(poisson_arrivals("f", c.rate(0.12) * 8 * 1.3, 30.0))
+    cluster.run(32.0)
+    shared = cluster.recorders["f"].throughput(5.0, 30.0)
+    assert shared / racing > 3.0  # paper: 3.15x for ResNet
+
+
+def test_autoscaler_meets_slo_under_load_step():
+    """Paper Fig. 12: heuristic autoscaling keeps violations ~<=1-5%.
+
+    Profile points carry measured p99s (a pod with temporal quota q idles
+    (1-q) of each window, bounding its tail latency from below), and the
+    scheduler's SLO filter must avoid quota points incompatible with the SLO.
+    """
+    c = PAPER_ZOO["resnet"]
+    slo = {"f": 0.5}
+    profile = []
+    for sm in (0.06, 0.12, 0.24):
+        for q in (0.2, 0.4, 0.6, 0.8, 1.0):
+            p99 = (1.0 - q) + 3.0 / c.rate(sm, 1.0)  # window gap + steps
+            profile.append(ProfilePoint(sm=sm, quota=q,
+                                        throughput=c.rate(sm, q),
+                                        p99_latency=p99))
+    cluster = Cluster(n_nodes=4, max_batch=1)
+    cluster.register_function("f", c, slo_latency=slo["f"])
+    # Initial deployment for 20 rps, then load steps to 60 rps at t=20.
+    cluster.autoscale({"f": 20.0}, {"f": profile}, slo_latency=slo)
+    cluster.submit_all(poisson_arrivals("f", 20.0, 20.0, seed=1))
+    cluster.submit_all(poisson_arrivals("f", 60.0, 40.0, seed=2, start=20.0))
+
+    def rescale():
+        cluster.autoscale({"f": 60.0}, {"f": profile}, slo_latency=slo)
+
+    cluster.sim.at(20.0, rescale)  # scaling reacts at the step
+    cluster.run(62.0)
+    rec = cluster.recorders["f"]
+    # Steady-state after the scale event must meet the SLO.
+    assert rec.violation_ratio(since=25.0) <= 0.05
+    assert rec.throughput(25.0, 60.0) == pytest.approx(60.0, rel=0.15)
+
+
+def test_scale_down_releases_nodes():
+    c = PAPER_ZOO["resnet"]
+    profile = [resnet_point(0.12, 1.0)]
+    cluster = Cluster(n_nodes=4)
+    cluster.register_function("f", c)
+    cluster.autoscale({"f": 200.0}, {"f": profile})
+    n_up = len(cluster.pods)
+    cluster.autoscale({"f": -150.0 + 0.0}, {"f": profile})
+    cluster.run(1.0)  # allow drains
+    assert len(cluster.pods) < n_up
+
+
+def test_node_failure_requeues_and_replaces():
+    c = PAPER_ZOO["resnet"]
+    cluster = Cluster(n_nodes=2)
+    cluster.register_function("f", c)
+    for _ in range(4):
+        cluster.deploy("f", resnet_point(0.12, 1.0))
+    cluster.submit_all(poisson_arrivals("f", 60.0, 30.0))
+
+    def kill():
+        cluster.fail_node(0)
+
+    cluster.sim.at(10.0, kill)
+    cluster.run(35.0)
+    rec = cluster.recorders["f"]
+    # Service continues after the failure; no stranded requests.
+    assert rec.throughput(12.0, 30.0) > 0.0
+    assert all(not n.pods for n in cluster.nodes if not n.alive)
+    inflight = sum(len(p.queue) + len(p.in_flight) for p in cluster.pods.values())
+    assert inflight == 0
+
+
+def test_straggler_mitigation_moves_pods():
+    c = PAPER_ZOO["resnet"]
+    cluster = Cluster(n_nodes=3)
+    cluster.register_function("f", c)
+    cluster.deploy("f", resnet_point(0.12, 1.0))
+    cluster.deploy("f", resnet_point(0.12, 1.0))
+    cluster.nodes[0].slowdown = 4.0  # node 0 degrades
+    stragglers = cluster.detect_stragglers(threshold=2.0)
+    assert stragglers == [0]
+    moved = cluster.mitigate_stragglers(threshold=2.0)
+    assert moved >= 1
+    assert all(p.placement.node != 0 for p in cluster.pods.values())
+
+
+def test_memory_admission_blocks_overcommit():
+    c = PAPER_ZOO["vit_huge"]
+    cluster = Cluster(n_nodes=1, mem_bytes=6 * 1024**3, sharing=False)
+    cluster.register_function("f", c)
+    assert cluster.deploy("f", ProfilePoint(0.12, 1.0, c.rate(0.12))) is not None
+    # Second instance exceeds 6G without sharing (2 x 4735M).
+    assert cluster.deploy("f", ProfilePoint(0.12, 1.0, c.rate(0.12))) is None
+    # With sharing it fits (weights stored once).
+    cluster2 = Cluster(n_nodes=1, mem_bytes=8 * 1024**3, sharing=True)
+    cluster2.register_function("f", c)
+    assert cluster2.deploy("f", ProfilePoint(0.12, 1.0, c.rate(0.12))) is not None
+    assert cluster2.deploy("f", ProfilePoint(0.12, 1.0, c.rate(0.12))) is not None

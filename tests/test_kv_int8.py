@@ -1,0 +1,63 @@
+"""int8 KV-cache quantization (§Perf D): correctness vs the bf16 path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models.attention import kv_dequantize, kv_int8_enabled, kv_quantize
+
+
+def _run_decode(model, params, toks, forced, steps=5):
+    """Teacher-forced decode: both paths see identical token histories, so
+    logit differences isolate the cache quantization error (greedy feedback
+    would diverge chaotically at the first argmax tie-flip)."""
+    logits, cache = model.prefill(params, toks,
+                                  max_len=toks.shape[1] + steps + 2)
+    outs = [logits]
+    for i in range(steps):
+        logits, cache = model.decode_step(params, forced[:, i], cache)
+        outs.append(logits)
+    return outs, cache
+
+
+def test_quantize_roundtrip_error_bounded():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 7, 3, 16)) * 3,
+                    jnp.bfloat16)
+    q, s = kv_quantize(x)
+    assert q.dtype == jnp.int8 and s.shape == (2, 7, 3, 1)
+    back = kv_dequantize(q, s)
+    rel = float(jnp.abs(back.astype(jnp.float32) - x.astype(jnp.float32)
+                        ).max() / jnp.abs(x.astype(jnp.float32)).max())
+    assert rel < 0.02  # <=1/127 + rounding
+
+
+def test_int8_cache_matches_bf16_decode(monkeypatch):
+    cfg = get_config("qwen2-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 10)), jnp.int32)
+    forced = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 6)), jnp.int32)
+
+    monkeypatch.delenv("REPRO_KV_INT8", raising=False)
+    fp, _ = _run_decode(model, params, toks, forced)
+    monkeypatch.setenv("REPRO_KV_INT8", "1")
+    assert kv_int8_enabled(cfg)
+    q8, cache = _run_decode(model, params, toks, forced)
+
+    assert cache["k"].dtype == jnp.int8 and "k_scale" in cache
+    for a, b in zip(fp, q8):
+        d = float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max())
+        assert d < 0.25, d  # quantization-only error, small vs logit std ~1
+
+
+def test_int8_gate_excludes_windowed_and_hybrid(monkeypatch):
+    monkeypatch.setenv("REPRO_KV_INT8", "1")
+    assert not kv_int8_enabled(get_config("mixtral-8x7b"))  # SWA
+    assert not kv_int8_enabled(get_config("gemma3-27b"))  # local:global
+    assert not kv_int8_enabled(get_config("hymba-1.5b"))  # hybrid
+    assert kv_int8_enabled(get_config("qwen1.5-110b"))
+    assert kv_int8_enabled(get_config("qwen2-moe-a2.7b"))

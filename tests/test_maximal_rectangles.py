@@ -1,0 +1,189 @@
+"""Unit + property tests for the Maximal Rectangles Algorithm (paper Alg. 2)."""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.maximal_rectangles import (MaxRectsNode, MaxRectsPool,
+                                           _prune_contained, _subdivide)
+from repro.core.resources import FULL_NODE, SCALE, Alloc, Rect, total_free_area
+
+
+def alloc(sm=0.24, q=0.4):
+    return Alloc(sm=sm, quota_request=q, quota_limit=q)
+
+
+# -- subdivide -------------------------------------------------------------
+
+
+def test_subdivide_no_overlap_yields_original():
+    r = Rect(0, 0, 100, 100)
+    assert _subdivide(r, Rect(200, 200, 10, 10)) == [r]
+
+
+def test_subdivide_interior_hole_gives_four_maximal():
+    r = Rect(0, 0, 100, 100)
+    parts = _subdivide(r, Rect(40, 40, 20, 20))
+    assert len(parts) == 4
+    # Each part is maximal: strips keep full height/width of the parent.
+    assert Rect(0, 0, 40, 100) in parts  # left, full height
+    assert Rect(60, 0, 40, 100) in parts  # right, full height
+    assert Rect(0, 0, 100, 40) in parts  # bottom, full width
+    assert Rect(0, 60, 100, 40) in parts  # top, full width
+    for p in parts:
+        assert not p.intersects(Rect(40, 40, 20, 20))
+
+
+def test_prune_contained_removes_subsets_keeps_duplicates_once():
+    big = Rect(0, 0, 50, 50)
+    small = Rect(10, 10, 5, 5)
+    assert _prune_contained([big, small, big]) == [big]
+
+
+# -- node-level placement ----------------------------------------------------
+
+
+def test_first_placement_bottom_left_and_two_maximal_complements():
+    node = MaxRectsNode(0)
+    pod = node.place_in(FULL_NODE, "p", 400, 240)
+    assert pod == Rect(0, 0, 400, 240)
+    assert Rect(400, 0, SCALE - 400, SCALE) in node.free  # right strip
+    assert Rect(0, 240, SCALE, SCALE - 240) in node.free  # top strip
+
+
+def test_free_area_conservation_after_place_and_release():
+    node = MaxRectsNode(0)
+    r = node.best_fit(300, 300)
+    node.place_in(r, "a", 300, 300)
+    assert node.free_area() == SCALE * SCALE - 300 * 300
+    node.release("a")
+    assert node.free_area() == SCALE * SCALE
+
+
+def test_restructure_triggered_and_preserves_placements():
+    node = MaxRectsNode(0, restructure_threshold=3)
+    for i in range(4):
+        r = node.best_fit(200, 200)
+        node.place_in(r, f"p{i}", 200, 200)
+    live = dict(node.placements)
+    node.release("p1")
+    node.release("p2")  # free list growth forces a restructure eventually
+    node.restructure()
+    assert set(node.placements) == set(live) - {"p1", "p2"}
+    # Free rects must not overlap any live pod.
+    for fr in node.free:
+        for pod in node.placements.values():
+            assert not fr.intersects(pod)
+
+
+# -- pool-level scheduling (Alg. 2 global best matching) ---------------------
+
+
+def test_best_area_fit_prefers_occupied_node():
+    pool = MaxRectsPool(3, allow_grow=False)
+    p1 = pool.schedule(alloc(), "p1")
+    p2 = pool.schedule(alloc(), "p2")
+    # Second pod should co-locate: the split rectangles on node 0 are smaller
+    # than a fresh node's full rectangle.
+    assert p1.node == p2.node == 0
+    assert pool.nodes_in_use() == 1
+
+
+def test_no_fit_returns_none_without_growth():
+    pool = MaxRectsPool(1, allow_grow=False)
+    assert pool.schedule(Alloc(sm=1.0, quota_request=1.0, quota_limit=1.0),
+                         "big") is not None
+    assert pool.schedule(alloc(), "overflow") is None
+
+
+def test_growth_adds_node_when_needed():
+    pool = MaxRectsPool(1, allow_grow=True)
+    pool.schedule(Alloc(sm=1.0, quota_request=1.0, quota_limit=1.0), "big")
+    p = pool.schedule(alloc(), "next")
+    assert p is not None and p.node == 1
+
+
+def test_paper_fig11_packing_single_node():
+    """§5.4: 4 resnet (12%,40%) + 2 rnnt (24%,40%) + 2 bert (50%,60%) pods
+    fit on ONE node under MRA, versus 4 nodes with whole-GPU time sharing."""
+    pool = MaxRectsPool(4, allow_grow=False)
+    pods = (
+        [("resnet", Alloc(0.12, 0.4, 0.4))] * 4
+        + [("rnnt", Alloc(0.24, 0.4, 0.4))] * 2
+        + [("bert", Alloc(0.5, 0.6, 0.6))] * 2
+    )
+    placements = pool.schedule_batch(
+        [(a, f"{fn}-{i}") for i, (fn, a) in enumerate(pods)])
+    assert all(p is not None for p in placements)
+    # Σ secondCores = 4*.048 + 2*.096 + 2*.3 = 0.984 <= 1.0: packable, and
+    # MRA must actually achieve it (time sharing would need 4 nodes).
+    assert pool.nodes_in_use() == 1
+
+
+# -- property tests -----------------------------------------------------------
+
+
+@st.composite
+def placement_sequences(draw):
+    n_ops = draw(st.integers(2, 24))
+    ops = []
+    for i in range(n_ops):
+        w = draw(st.integers(1, 20)) * 50  # 5%..100% in 5% steps
+        h = draw(st.integers(1, 20)) * 50
+        release_idx = draw(st.integers(-1, max(0, len(ops) - 1)))
+        ops.append((w, h, release_idx))
+    return ops
+
+
+@settings(max_examples=60, deadline=None)
+@given(placement_sequences())
+def test_invariants_under_random_place_release(ops):
+    node = MaxRectsNode(0, restructure_threshold=12)
+    placed: list[str] = []
+    for i, (w, h, rel) in enumerate(ops):
+        if rel >= 0 and placed:
+            victim = placed[rel % len(placed)]
+            node.release(victim)
+            placed.remove(victim)
+        r = node.best_fit(w, h)
+        if r is not None:
+            node.place_in(r, f"p{i}", w, h)
+            placed.append(f"p{i}")
+        # Invariant 1: no free rectangle overlaps any placed pod.
+        for fr in node.free:
+            for pod_id in placed:
+                assert not fr.intersects(node.placements[pod_id]), (
+                    fr, node.placements[pod_id])
+        # Invariant 2: placed pods are mutually disjoint.
+        rects = [node.placements[p] for p in placed]
+        for a in range(len(rects)):
+            for b in range(a + 1, len(rects)):
+                assert not rects[a].intersects(rects[b])
+        # Invariant 3: free area + used area == total capacity.
+        assert node.free_area() + node.used_area() == SCALE * SCALE
+        # Invariant 4: everything stays in bounds.
+        for fr in node.free + rects:
+            assert 0 <= fr.x <= fr.x2 <= SCALE
+            assert 0 <= fr.y <= fr.y2 <= SCALE
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 10), st.integers(1, 10)),
+                min_size=1, max_size=30))
+def test_pool_never_loses_capacity(sizes):
+    pool = MaxRectsPool(2, allow_grow=False)
+    placements = []
+    for i, (wi, hi) in enumerate(sizes):
+        a = Alloc(sm=hi / 10, quota_request=wi / 10, quota_limit=wi / 10)
+        p = pool.schedule(a, f"p{i}")
+        if p is not None:
+            placements.append(p)
+    for p in placements:
+        pool.release(p)
+    # After releasing everything, the exact free area must be fully restored
+    # (keep-restructure keeps fragments verbatim), and a restructure must
+    # re-coalesce each node into its single W x H rectangle.
+    for node in pool.nodes:
+        assert node.free_area() == SCALE * SCALE
+        node.restructure()
+        assert node.free == [FULL_NODE]
+        assert node.best_fit(SCALE, SCALE) is not None

@@ -1,0 +1,111 @@
+"""Tests for the model sharing store and memory model (paper §3.5, Fig. 13)."""
+
+import numpy as np
+import pytest
+
+from repro.core.model_sharing import (SERVER_CONTEXT_OVERHEAD, MemoryModel,
+                                      ModelStore, pytree_nbytes)
+
+MB = 1024 * 1024
+
+
+def make_params(kb=4):
+    return {"w": np.zeros((kb * 256,), np.float32),  # kb KiB
+            "b": {"x": np.zeros((4,), np.float32)}}
+
+
+def test_get_returns_same_object_zero_copy():
+    store = ModelStore()
+    params = make_params()
+    store.store("f", params)
+    t1 = store.get("f")
+    t2 = store.get("f")
+    assert t1 is params and t2 is params  # by-reference, no copies
+    assert store.refcount("f") == 2
+    store.put_back("f")
+    assert store.refcount("f") == 1
+
+
+def test_get_miss_triggers_store_via_loader():
+    store = ModelStore()
+    calls = []
+
+    def loader():
+        calls.append(1)
+        return make_params()
+
+    t1 = store.get("f", loader)
+    t2 = store.get("f", loader)
+    assert t1 is t2 and len(calls) == 1  # STORE once, GET thereafter
+    assert store.misses == 1 and store.hits == 1
+
+
+def test_refcount_underflow_raises():
+    store = ModelStore()
+    store.store("f", make_params())
+    with pytest.raises(RuntimeError):
+        store.put_back("f")
+
+
+def test_eviction_frees_unreferenced_largest_first():
+    store = ModelStore(capacity_bytes=pytree_nbytes(make_params(8)) + 64)
+    store.store("big", make_params(8))
+    store.store("small", make_params(1))  # evicts "big"
+    assert store.refcount("big") == 0
+    with pytest.raises(KeyError):
+        store.get("big")
+
+
+def test_eviction_never_removes_referenced():
+    params = make_params(8)
+    store = ModelStore(capacity_bytes=pytree_nbytes(params) + 64)
+    store.store("f", params)
+    store.get("f")  # pin
+    with pytest.raises(MemoryError):
+        store.store("g", make_params(8))
+
+
+def test_pytree_nbytes_counts_all_leaves():
+    assert pytree_nbytes(make_params(4)) == 4 * 1024 + 16
+
+
+# -- Fig. 13 memory model ----------------------------------------------------
+
+
+def vit_huge():
+    # Calibrated to the paper: 4735M no-share single pod; shared pod 2101M;
+    # server = weights + 345M context ≈ 2979M.
+    return MemoryModel(weight_bytes=2634 * MB, framework_bytes=2101 * MB,
+                       server_overhead=345 * MB)
+
+
+def test_vit_huge_paper_numbers():
+    mm = vit_huge()
+    assert mm.footprint(1, sharing=False) == 4735 * MB
+    assert mm.footprint(3, sharing=False) == 14205 * MB
+    shared3 = mm.footprint(3, sharing=True)
+    assert shared3 == (2634 + 345 + 3 * 2101) * MB  # 9282M: paper §5.5
+    # Paper: "resulting in a 4.8G reduction"
+    assert (mm.footprint(3, False) - shared3) / MB == pytest.approx(4923, abs=1)
+
+
+def test_sharing_reduction_grows_with_instances_and_model_size():
+    mm = vit_huge()
+    assert mm.reduction(3) > mm.reduction(2) > mm.reduction(1)
+    small = MemoryModel(weight_bytes=98 * MB, framework_bytes=1427 * MB)
+    assert mm.reduction(3) > small.reduction(3)  # larger models gain more
+
+
+def test_single_instance_sharing_can_cost_memory():
+    """Paper: with one pod, sharing may be slightly *higher* (server ctx)."""
+    mm = vit_huge()
+    assert mm.footprint(1, sharing=True) > mm.footprint(1, sharing=False)
+
+
+def test_max_instances_resnext_7_vs_4():
+    """Paper §5.5: 16G V100 fits 7 ResNeXt pods with sharing vs 4 without."""
+    resnext = MemoryModel(weight_bytes=2100 * MB, framework_bytes=1900 * MB,
+                          server_overhead=300 * MB)
+    cap = 16 * 1024 * MB
+    assert resnext.max_instances(cap, sharing=False) == 4
+    assert resnext.max_instances(cap, sharing=True) == 7

@@ -1,0 +1,138 @@
+"""Unit tests for the trip-count-exact HLO roofline analyzer.
+
+A hand-written miniature HLO module exercises every accounting rule:
+while-trip multipliers, dot FLOPs from contracting dims, in-place
+dynamic-update-slice windows, fused dynamic-slice reads, collective ring
+costs, and the FloatNormalization bf16-width correction.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.roofline import (HloAnalysis, analyze_hlo, model_flops,
+                                     parse_module, roofline_terms)
+from repro.configs import get_config
+from repro.models.model import SHAPE_CASES
+
+MINI_HLO = """
+HloModule mini
+
+%add_f32 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body.1 (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %d = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%d), replica_groups={}, to_apply=%add_f32
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16]) tuple(%ip, %ar)
+}
+
+%cond.1 (p2: (s32[], f32[8,16])) -> pred[] {
+  %p2 = (s32[], f32[8,16]) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(4)
+  ROOT %lt = pred[] compare(%i2, %n), direction=LT
+}
+
+ENTRY %main (x0: f32[8,16]) -> f32[8,16] {
+  %x0 = f32[8,16]{1,0} parameter(0)
+  %c0 = s32[] constant(0)
+  %t0 = (s32[], f32[8,16]) tuple(%c0, %x0)
+  %w1 = (s32[], f32[8,16]) while(%t0), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"4"}}
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%w1), index=1
+}
+"""
+
+
+def test_while_trip_multiplier_and_dot_flops():
+    a = analyze_hlo(MINI_HLO)
+    # dot: 2 * 8*16 (result) * 16 (contraction) = 4096 FLOPs, x4 trips.
+    assert a.flops == pytest.approx(4 * 4096)
+    assert a.flops_uncorrected == pytest.approx(4096)
+    assert a.n_dots == 1
+    assert a.unknown_trip_whiles == 0
+
+
+def test_collective_ring_cost_and_trip_weighting():
+    a = analyze_hlo(MINI_HLO)
+    # all-reduce of f32[8,16] = 512 B -> ring cost 2x, x4 trips = 4096 B.
+    assert a.collective_wire == {"all-reduce": pytest.approx(4 * 1024.0)}
+
+
+def test_parse_module_structure():
+    comps, entry, types = parse_module(MINI_HLO)
+    assert entry == "main"
+    assert {"add_f32", "body.1", "cond.1", "main"} <= set(comps)
+    assert types["d"].startswith("f32[8,16]")
+
+
+def test_bf16_width_correction():
+    hlo = """
+HloModule w
+%add_f32 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+ENTRY %main (x: bf16[32,32]) -> f32[32,32] {
+  %x = bf16[32,32]{1,0} parameter(0)
+  %cv = f32[32,32]{1,0} convert(%x)
+  ROOT %ar = f32[32,32]{1,0} all-reduce(%cv), replica_groups={}, to_apply=%add_f32
+}
+"""
+    a = analyze_hlo(hlo)
+    # f32 payload 4096 B, ring 2x, but convert-from-bf16 producer -> x0.5.
+    assert a.collective_wire["all-reduce"] == pytest.approx(4096.0)
+
+
+def test_dus_counts_window_not_buffer():
+    hlo = """
+HloModule d
+ENTRY %main (buf: f32[1024,64], upd: f32[1,64]) -> f32[1024,64] {
+  %buf = f32[1024,64]{1,0} parameter(0)
+  %upd = f32[1,64]{1,0} parameter(1)
+  %z = s32[] constant(0)
+  ROOT %w = f32[1024,64]{1,0} dynamic-update-slice(%buf, %upd, %z, %z)
+}
+"""
+    a = analyze_hlo(hlo)
+    # 2 x window (256 B), never the 256 KiB aliased buffer.
+    assert a.hbm_bytes == pytest.approx(2 * 256.0)
+
+
+def test_roofline_terms_and_dominance():
+    a = HloAnalysis(flops=197e12, hbm_bytes=819e9 * 2,
+                    collective_wire={"all-reduce": 50e9 * 3})
+    r = roofline_terms(a, n_chips=4, model_flops=197e12 * 2)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(2.0)
+    assert r.collective_s == pytest.approx(3.0)
+    assert r.dominant == "collective"
+    assert r.bound_s == pytest.approx(3.0)
+    assert r.useful_ratio == pytest.approx(2.0 / 4.0)
+
+
+def test_model_flops_sanity():
+    cfg = get_config("qwen2-7b")
+    train = model_flops(cfg, SHAPE_CASES["train_4k"])
+    prefill = model_flops(cfg, SHAPE_CASES["prefill_32k"])
+    decode = model_flops(cfg, SHAPE_CASES["decode_32k"])
+    tokens = 256 * 4096
+    n = cfg.active_param_count() - cfg.padded_vocab * cfg.d_model
+    assert train > 6.0 * n * tokens  # 6ND plus attention
+    assert prefill > 2.0 * n * tokens
+    # decode: 2N per token x batch 128, plus attention reads.
+    assert decode > 2.0 * n * 128
+    assert decode < train / 100
+    # MoE counts active params only.
+    moe = get_config("mixtral-8x7b")
+    assert moe.active_param_count() < 0.45 * moe.param_count()

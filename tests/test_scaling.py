@@ -1,0 +1,109 @@
+"""Tests for the Heuristic Scaling Algorithm (paper Alg. 1)."""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.scaling import (FunctionPodQueue, ProfilePoint,
+                                heuristic_scale, processing_gap)
+
+
+POINTS = [
+    ProfilePoint(sm=0.06, quota=0.2, throughput=4.0),   # rpr 333
+    ProfilePoint(sm=0.12, quota=0.4, throughput=15.0),  # rpr 312
+    ProfilePoint(sm=0.12, quota=1.0, throughput=37.0),  # rpr 308
+    ProfilePoint(sm=0.24, quota=1.0, throughput=71.0),  # rpr 296
+    ProfilePoint(sm=0.50, quota=1.0, throughput=71.4),  # rpr 143 (saturated)
+]
+
+
+def rpr(p):
+    return p.throughput / (p.sm * p.quota)
+
+
+def test_scale_up_uses_p_eff_bulk_plus_p_ideal_residual():
+    queues = {}
+    decisions = heuristic_scale({"f": 11.0}, {"f": POINTS}, queues)
+    ups = [d for d in decisions if d.direction > 0]
+    p_eff = max(POINTS, key=rpr)
+    # n = floor(11 / 4) = 2 pods of p_eff, residual 3 -> smallest point with
+    # T > 3 minimizing T - r is p_eff itself (T=4).
+    assert [d.point for d in ups] == [p_eff, p_eff, p_eff]
+    assert queues["f"].capacity() == pytest.approx(12.0)
+
+
+def test_scale_up_residual_picks_minimal_sufficient():
+    queues = {}
+    decisions = heuristic_scale({"f": 71.5}, {"f": POINTS}, queues)
+    ups = [d for d in decisions if d.direction > 0]
+    p_eff = max(POINTS, key=rpr)  # T=4
+    assert ups[:-1] == [d for d in ups[:-1]]  # 17 p_eff pods (68 rps)
+    assert len(ups) == 18
+    assert all(d.point == p_eff for d in ups[:-1])
+    # residual = 71.5 - 17*4 = 3.5 -> minimal sufficient is T=4 (p_eff).
+    assert ups[-1].point.throughput == 4.0
+
+
+def test_scale_down_pops_lowest_rpr_first():
+    queues = {"f": FunctionPodQueue()}
+    low = ProfilePoint(sm=0.5, quota=1.0, throughput=20.0)   # rpr 40
+    high = ProfilePoint(sm=0.12, quota=0.4, throughput=15.0)  # rpr 312
+    queues["f"].push("pod-low", low)
+    queues["f"].push("pod-high", high)
+    decisions = heuristic_scale({"f": -20.0}, {"f": POINTS}, queues)
+    downs = [d for d in decisions if d.direction < 0]
+    assert [d.pod_id for d in downs] == ["pod-low"]
+    # Remaining capacity (15) still covers load (35 - 20 = 15 >= demand).
+    assert queues["f"].capacity() == pytest.approx(15.0)
+
+
+def test_scale_down_never_undershoots_capacity():
+    queues = {"f": FunctionPodQueue()}
+    p = ProfilePoint(sm=0.2, quota=0.5, throughput=10.0)
+    for i in range(3):
+        queues["f"].push(f"pod-{i}", p)
+    # Gap of -5: removing any pod would drop capacity below demand (25).
+    decisions = heuristic_scale({"f": -5.0}, {"f": POINTS}, queues)
+    assert [d for d in decisions if d.direction < 0] == []
+    assert queues["f"].capacity() == pytest.approx(30.0)
+
+
+def test_slo_filter_excludes_slow_points():
+    points = [
+        ProfilePoint(sm=0.06, quota=0.2, throughput=4.0, p99_latency=0.5),
+        ProfilePoint(sm=0.24, quota=1.0, throughput=71.0, p99_latency=0.05),
+    ]
+    queues = {}
+    decisions = heuristic_scale({"f": 10.0}, {"f": points}, queues,
+                                slo_latency={"f": 0.1})
+    assert all(d.point.p99_latency <= 0.1 for d in decisions)
+
+
+def test_processing_gap():
+    queues = {"f": FunctionPodQueue()}
+    queues["f"].push("p", ProfilePoint(sm=0.1, quota=0.5, throughput=30.0))
+    gaps = processing_gap({"f": 50.0, "g": 7.0}, queues)
+    assert gaps == {"f": 20.0, "g": 7.0}
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.floats(0.5, 500.0))
+def test_scale_up_capacity_always_covers_gap(gap):
+    """Property: after scale-up, Σ throughput of new pods >= ΔRPS."""
+    queues = {}
+    decisions = heuristic_scale({"f": gap}, {"f": POINTS}, queues)
+    total = sum(d.point.throughput for d in decisions if d.direction > 0)
+    assert total >= gap - 1e-9
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.sampled_from(POINTS), min_size=1, max_size=12),
+       st.floats(-300.0, -0.5))
+def test_scale_down_keeps_capacity_sufficient(running, gap):
+    """Property: scale-down never removes so much that remaining < demand."""
+    queues = {"f": FunctionPodQueue()}
+    for i, p in enumerate(running):
+        queues["f"].push(f"pod-{i}", p)
+    demand = queues["f"].capacity() + gap  # current load implied by the gap
+    heuristic_scale({"f": gap}, {"f": POINTS}, queues)
+    assert queues["f"].capacity() >= max(demand, 0.0) - 1e-9

@@ -1,0 +1,162 @@
+"""End-to-end system tests: the full FaST-GShare loop wired together.
+
+Each test exercises a multi-component path (profiler -> scheduler ->
+manager -> SLO accounting; failures; elasticity), not a single unit.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core.cluster import Cluster
+from repro.core.profiler import ProfileDB, simulate_trial
+from repro.core.scaling import ProfilePoint
+from repro.core.workload import (PAPER_ZOO, diurnal_trace, poisson_arrivals,
+                                 trace_arrivals)
+
+SLO = 0.069
+
+
+def _profile_resnet() -> ProfileDB:
+    db = ProfileDB()
+    for sm in (0.12, 0.24, 0.5):
+        cap = simulate_trial(PAPER_ZOO["resnet"], sm, 1.0, duration=10.0)
+        lat = simulate_trial(PAPER_ZOO["resnet"], sm, 1.0, duration=10.0,
+                             overload_factor=0.8)
+        db.add("resnet", dataclasses.replace(cap, p99=lat.p99))
+    return db
+
+
+def test_profile_scale_serve_slo_pipeline():
+    """Profiler -> Alg.1 -> MRA -> token scheduler -> <=2% SLO violations."""
+    db = _profile_resnet()
+    profiles = {"resnet": db.table("resnet")}
+    cluster = Cluster(n_nodes=4, sharing=True, max_batch=2)
+    cluster.register_function("resnet", PAPER_ZOO["resnet"], slo_latency=SLO)
+    cluster.deploy("resnet", db.best_rpr("resnet"), elastic_limit=1.0)
+    trace = diurnal_trace(10.0, 120.0, 80.0, 80.0, 5.0) + [(80.0, 0.0)]
+    arrivals = trace_arrivals("resnet", trace, seed=3)
+    cluster.submit_all(arrivals)
+
+    def control() -> None:
+        now = cluster.sim.now
+        recent = [r for r in arrivals if now - 2.0 <= r.arrival <= now]
+        cluster.autoscale({"resnet": len(recent) / 2.0}, profiles,
+                          slo_latency={"resnet": SLO}, headroom=1.8)
+        if now < 80.0:
+            cluster.sim.after(0.5, control)
+
+    cluster.sim.after(0.5, control)
+    cluster.run(90.0)
+    rec = cluster.recorders["resnet"]
+    assert rec.count() == len(arrivals), "every request served"
+    assert rec.violation_ratio(since=5.0) <= 0.02
+    assert cluster.rescheduled == 0
+    assert cluster.gpu_utilization(20) > 0.0
+
+
+def test_node_failure_no_request_loss():
+    """Kill the only loaded node mid-run: pods re-place, requests survive."""
+    cluster = Cluster(n_nodes=3, sharing=True)
+    cluster.register_function("rnnt", PAPER_ZOO["rnnt"])
+    pt = ProfilePoint(sm=0.24, quota=1.0, throughput=0.0)
+    for _ in range(2):
+        assert cluster.deploy("rnnt", pt) is not None
+    arrivals = poisson_arrivals("rnnt", 8.0, 30.0, seed=1)
+    cluster.submit_all(arrivals)
+    loaded_node = cluster.pods[next(iter(cluster.pods))].placement.node
+    cluster.sim.at(10.0, lambda: cluster.fail_node(loaded_node))
+    cluster.run(60.0)
+    rec = cluster.recorders["rnnt"]
+    assert cluster.rescheduled >= 1
+    assert rec.count() == len(arrivals), "failure must not drop requests"
+    assert all(n.node_id != loaded_node or not n.pods
+               for n in cluster.nodes)
+
+
+def test_straggler_mitigation_moves_pods():
+    cluster = Cluster(n_nodes=3, sharing=True)
+    cluster.register_function("resnet", PAPER_ZOO["resnet"])
+    pt = ProfilePoint(sm=0.12, quota=0.5, throughput=0.0)
+    pod = cluster.deploy("resnet", pt)
+    assert pod is not None
+    nid = cluster.pods[pod].placement.node
+    cluster.nodes[nid].slowdown = 4.0  # degraded node
+    assert cluster.detect_stragglers(threshold=2.0) == [nid]
+    moved = cluster.mitigate_stragglers(threshold=2.0)
+    assert moved == 1
+    new_node = cluster.pods[next(iter(cluster.pods))].placement.node
+    assert new_node != nid
+
+
+def test_elastic_quota_absorbs_bursts():
+    """Q_limit > Q_request: the same load has a far better tail."""
+
+    def p99_with(limit: float) -> float:
+        cluster = Cluster(n_nodes=1, sharing=True)
+        cluster.register_function("resnet", PAPER_ZOO["resnet"])
+        cluster.deploy("resnet",
+                       ProfilePoint(sm=0.24, quota=0.4, throughput=0.0),
+                       elastic_limit=limit)
+        # Load fits *within* Q_request on average, but is bursty.
+        rate = PAPER_ZOO["resnet"].rate(0.24, 0.4) * 0.8
+        cluster.submit_all(poisson_arrivals("resnet", rate, 30.0, seed=9))
+        cluster.run(40.0)
+        return cluster.recorders["resnet"].p99(since=3.0)
+
+    capped = p99_with(0.4)
+    elastic = p99_with(1.0)
+    assert elastic < capped, (elastic, capped)
+    assert elastic < 0.1, "elastic quota keeps the tail near service time"
+
+
+def test_memory_pressure_blocks_then_sharing_admits():
+    """The same fleet admits more pods with model sharing on."""
+    gib = 1024**3
+    cl_share = Cluster(n_nodes=1, mem_bytes=16 * gib, sharing=True)
+    cl_plain = Cluster(n_nodes=1, mem_bytes=16 * gib, sharing=False)
+    pt = ProfilePoint(sm=0.06, quota=0.25, throughput=1.0)
+    for cl in (cl_share, cl_plain):
+        cl.register_function("vit_huge", PAPER_ZOO["vit_huge"])
+    n_share = sum(cl_share.deploy("vit_huge", pt) is not None
+                  for _ in range(12))
+    n_plain = sum(cl_plain.deploy("vit_huge", pt) is not None
+                  for _ in range(12))
+    assert n_share > n_plain
+    assert n_plain == 3  # 16G / 4735M
+    assert n_share == 6  # (2634+300) + n*2101 <= 16384
+
+
+def test_scale_down_drains_before_teardown():
+    """Retiring a pod with queued work must finish that work first."""
+    cluster = Cluster(n_nodes=1, sharing=True)
+    cluster.register_function("gnmt", PAPER_ZOO["gnmt"])
+    pt = ProfilePoint(sm=0.5, quota=1.0, throughput=0.0)
+    pod = cluster.deploy("gnmt", pt)
+    # All arrivals land before the retire; the deep backlog must drain.
+    arrivals = poisson_arrivals("gnmt", 30.0, 2.0, seed=2)
+    cluster.submit_all(arrivals)
+    cluster.sim.at(2.05, lambda: cluster.retire(pod))
+    cluster.run(30.0)
+    assert cluster.recorders["gnmt"].count() == len(arrivals)
+    assert pod not in cluster.pods  # torn down after drain
+
+
+def test_multi_function_packing_and_throughput():
+    """Three functions share one GPU; each meets its own calibrated rate."""
+    cluster = Cluster(n_nodes=2, sharing=True)
+    alloc = {"resnet": (0.24, 0.4), "rnnt": (0.24, 0.4), "bert": (0.5, 0.5)}
+    for fn, (sm, q) in alloc.items():
+        cluster.register_function(fn, PAPER_ZOO[fn])
+        assert cluster.deploy(
+            fn, ProfilePoint(sm=sm, quota=q, throughput=0.0)) is not None
+    assert cluster.nodes_in_use() == 1  # MRA packs all three on one node
+    for fn, (sm, q) in alloc.items():
+        rate = PAPER_ZOO[fn].rate(sm, q) * 0.8
+        cluster.submit_all(poisson_arrivals(fn, rate, 30.0, seed=4))
+    cluster.run(40.0)
+    for fn, (sm, q) in alloc.items():
+        rec = cluster.recorders[fn]
+        served_rate = rec.throughput(6.0, 30.0)
+        want = PAPER_ZOO[fn].rate(sm, q) * 0.8
+        assert served_rate == pytest.approx(want, rel=0.25), fn
