@@ -11,7 +11,7 @@ from benchmarks import scheduler_packing, spatial_sharing
 from benchmarks.common import Row
 
 
-def run() -> list[Row]:
+def run(continuous: bool = False) -> list[Row]:
     rows: list[Row] = []
     fig10 = {r.metric: r.value for r in spatial_sharing.run()}
     fig11 = {r.metric: r.value for r in scheduler_packing.run()}
@@ -23,9 +23,19 @@ def run() -> list[Row]:
                     fig11["gpu_utilization_gain"], target=1.34, tol=0.25))
     rows.append(Row("headline", "sm_occupancy_gain",
                     fig11["sm_occupancy_gain"], target=3.13, tol=0.3))
+    if continuous:
+        # Beyond-paper: slot-level batching on top of spatial sharing.
+        fig10c = {r.metric: r.value for r in spatial_sharing.run_continuous()}
+        for fn in spatial_sharing.CONT_FNS:
+            rows.append(Row(
+                "headline", f"continuous_occupancy_gain_{fn}",
+                fig10c[f"{fn}.occupancy_gain"],
+                note="slot-level vs static batching, decode-heavy load"))
     return rows
 
 
 if __name__ == "__main__":
-    for r in run():
+    import sys
+
+    for r in run(continuous="--continuous" in sys.argv[1:]):
         print(r.csv())

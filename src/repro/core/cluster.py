@@ -73,8 +73,22 @@ class Simulator:
 
 
 @dataclasses.dataclass
+class _DecodeSlot:
+    """One occupied decode slot: a request and its remaining token rounds."""
+
+    req: Request
+    remaining: int
+
+
+@dataclasses.dataclass
 class PodRuntime:
-    """A running function instance bound to a node."""
+    """A running function instance bound to a node.
+
+    ``slots`` is the pod's decode-slot pool (slot-level batching, mirroring
+    the live engine): each entry is a request part-way through its
+    ``n_tokens`` decode rounds.  ``in_flight`` lists the requests being
+    advanced by the step currently holding a token (empty between steps).
+    """
 
     pod_id: str
     fn: str
@@ -84,10 +98,16 @@ class PodRuntime:
     placement: Placement
     max_batch: int = 1
     queue: deque = dataclasses.field(default_factory=deque)
+    slots: list = dataclasses.field(default_factory=list)
     in_flight: list = dataclasses.field(default_factory=list)
     waiting_token: bool = False
     retired: bool = False
     steps: int = 0
+    refills: int = 0  # mid-flight slot admissions (continuous only)
+
+    def pending(self) -> bool:
+        """Work exists: queued requests or slots with rounds remaining."""
+        return bool(self.queue) or any(s.remaining > 0 for s in self.slots)
 
 
 class Node:
@@ -152,10 +172,20 @@ class Cluster:
         allow_grow: bool = False,
         max_batch: int = 1,
         scheduler_period: float = 0.05,
+        continuous: bool = False,
+        batch_alpha: float = 0.5,
     ):
+        """``continuous=True`` enables slot-level batching: finished
+        requests free their decode slot immediately and queued requests are
+        admitted mid-flight, matching the live engine's continuous mode.
+        ``continuous=False`` keeps static batches that retire together.
+        ``batch_alpha`` is the weight-bound (batch-shared) fraction of a
+        decode round (``ServiceCurve.round_time``)."""
         self.sim = Simulator()
         self.window = window
         self.max_batch = max_batch
+        self.continuous = continuous
+        self.batch_alpha = batch_alpha
         self.nodes = [Node(i, mem_bytes, window, sharing) for i in range(n_nodes)]
         self.pool = MaxRectsPool(n_nodes, allow_grow=allow_grow)
         self.pods: dict[str, PodRuntime] = {}
@@ -230,7 +260,7 @@ class Cluster:
         pod.retired = True
         self.fn_pods[pod.fn].remove(pod_id)
         self.fn_queues[pod.fn].remove(pod_id)
-        if not drain or (not pod.queue and not pod.in_flight
+        if not drain or (not pod.pending() and not pod.in_flight
                          and not pod.waiting_token):
             self._teardown(pod)
 
@@ -257,15 +287,16 @@ class Cluster:
         if not pods:
             self.dropped += 1
             return
-        # Join-shortest-queue routing across the function's replicas.
+        # Join-shortest-queue routing across the function's replicas
+        # (queue depth + occupied decode slots).
         pod = min((self.pods[p] for p in pods),
-                  key=lambda p: len(p.queue) + len(p.in_flight))
+                  key=lambda p: len(p.queue) + len(p.slots))
         pod.queue.append(req)
         self._want_token(pod)
 
     def _want_token(self, pod: PodRuntime) -> None:
         node = self.nodes[pod.placement.node]
-        if not node.alive or pod.waiting_token or not pod.queue:
+        if not node.alive or pod.waiting_token or not pod.pending():
             return
         if node.scheduler.pods[pod.pod_id].holding is not None:
             return
@@ -282,27 +313,60 @@ class Cluster:
             self._start_step(node, pod)
 
     def _start_step(self, node: Node, pod: PodRuntime) -> None:
-        batch = min(len(pod.queue), pod.max_batch)
-        if batch == 0:
-            # Token granted but queue drained (e.g. rebalanced away): return it.
+        """One token-gated step: slot admission + one decode round.
+
+        Admission — continuous mode tops up free slots every step; static
+        mode only forms a new batch once the previous one has fully
+        retired.  The round then advances every live (unfinished) slot by
+        one token; its wall time comes from the calibrated service curve at
+        the *live* slot count, and its drained SM occupancy is scaled by
+        slot fill — an underfilled round cannot saturate the partition.
+        """
+        if self.continuous or not pod.slots:
+            # A refill = joining a batch that was already decoding before
+            # this step; cold-start co-admissions in the same pass aren't.
+            had_live = bool(pod.slots)
+            while pod.queue and len(pod.slots) < pod.max_batch:
+                r = pod.queue.popleft()
+                if had_live and self.continuous:
+                    pod.refills += 1
+                pod.slots.append(_DecodeSlot(r, max(1, r.n_tokens)))
+        live = [s for s in pod.slots if s.remaining > 0]
+        if not live:
+            # Token granted but work drained (e.g. rebalanced away).
             node.scheduler.complete(pod.pod_id, 0.0, self.sim.now)
             return
-        reqs = [pod.queue.popleft() for _ in range(batch)]
-        pod.in_flight = reqs
-        dur = pod.curve.step_time(pod.alloc.sm, batch) * node.slowdown
+        pod.in_flight = [s.req for s in live]
+        dur = (pod.curve.round_time(pod.alloc.sm, len(live),
+                                    alpha=self.batch_alpha)
+               * node.slowdown)
+        occ = (min(pod.alloc.sm, pod.curve.sm_sat)
+               * len(live) / max(pod.max_batch, 1))
         pod.steps += 1
-        self.sim.after(dur, lambda: self._finish_step(node, pod, reqs, dur))
+        self.sim.after(dur,
+                       lambda: self._finish_step(node, pod, live, dur, occ))
 
-    def _finish_step(self, node: Node, pod: PodRuntime, reqs: list[Request],
-                     dur: float) -> None:
+    def _finish_step(self, node: Node, pod: PodRuntime,
+                     live: list[_DecodeSlot], dur: float, occ: float) -> None:
         if not node.alive:
             return  # failure handler already re-queued them
         pod.in_flight = []
+        completed: list[Request] = []
+        for s in live:
+            s.remaining -= 1
+            if s.remaining <= 0:
+                completed.append(s.req)
+        if self.continuous:
+            # Continuous: finished requests free their slot immediately.
+            pod.slots = [s for s in pod.slots if s.remaining > 0]
+        elif all(s.remaining <= 0 for s in pod.slots):
+            # Static: the batch retires together once ALL members finish.
+            pod.slots = []
         rec = self.recorders[pod.fn]
-        for r in reqs:
+        for r in completed:
             rec.record(self.sim.now - r.arrival, self.sim.now)
-        node.scheduler.complete(pod.pod_id, dur, self.sim.now)
-        if pod.retired and not pod.queue:
+        node.scheduler.complete(pod.pod_id, dur, self.sim.now, occ=occ)
+        if pod.retired and not pod.pending():
             self._teardown(pod)
         else:
             self._want_token(pod)
@@ -315,7 +379,8 @@ class Cluster:
                 # Re-arm any pod that has work but lost its request across a
                 # window roll.
                 for pod in list(node.pods.values()):
-                    if pod.queue and not pod.waiting_token and not pod.in_flight:
+                    if (pod.pending() and not pod.waiting_token
+                            and not pod.in_flight):
                         self._want_token(pod)
             self.sim.after(period, tick)
 
@@ -371,9 +436,12 @@ class Cluster:
         displaced: list[PodRuntime] = list(node.pods.values())
         strays: list[Request] = []
         for pod in displaced:
-            strays.extend(pod.in_flight)
+            # Only unfinished slot occupants: static mode keeps completed
+            # (already-recorded) requests in their slots until the batch
+            # retires, and those must not be served twice.
+            strays.extend(s.req for s in pod.slots if s.remaining > 0)
             strays.extend(pod.queue)
-            pod.in_flight, pod.queue = [], deque()
+            pod.slots, pod.in_flight, pod.queue = [], [], deque()
             if pod.fn in self.fn_pods and pod.pod_id in self.fn_pods[pod.fn]:
                 self.fn_pods[pod.fn].remove(pod.pod_id)
             self.fn_queues[pod.fn].remove(pod.pod_id)
@@ -409,7 +477,7 @@ class Cluster:
             for pod in list(node.pods.values()):
                 if pod.retired:
                     continue
-                if pod.in_flight or pod.waiting_token:
+                if pod.in_flight or pod.slots or pod.waiting_token:
                     continue  # move only idle pods; busy ones drain first
                 node.remove_pod(pod.pod_id)
                 self.pool.release(pod.placement)

@@ -122,15 +122,22 @@ class TokenScheduler:
         self._maybe_roll(now)
         self.pods[pod_id].wants_token = True
 
-    def complete(self, pod_id: str, elapsed: float, now: float) -> None:
-        """Frontend sync point: step finished, charge ``elapsed`` to Q_used."""
+    def complete(self, pod_id: str, elapsed: float, now: float,
+                 occ: Optional[float] = None) -> None:
+        """Frontend sync point: step finished, charge ``elapsed`` to Q_used.
+
+        ``occ`` overrides the token's registered drained occupancy for this
+        step — continuous-batching callers scale it by slot fill, since an
+        underfilled decode round cannot saturate the pod's SM share.
+        """
         state = self.pods[pod_id]
         if state.holding is None:
             raise RuntimeError(f"pod {pod_id} completed without a token")
         state.q_used += elapsed
         state.total_busy += elapsed
         self._stats.busy_time += elapsed
-        self._stats.busy_area += elapsed * state.holding.occ
+        self._stats.busy_area += elapsed * (
+            state.holding.occ if occ is None else occ)
         self._maybe_roll(now)  # accrue busy-union while the token is live
         self._active = max(self._active - 1, 0)
         state.holding = None

@@ -59,6 +59,19 @@ class ServiceCurve:
         """Wall time of one dispatched step processing ``batch`` requests."""
         return batch / self.rate(sm, quota=1.0)
 
+    def round_time(self, sm: float, live: int, alpha: float = 0.5) -> float:
+        """Wall time of one decode round advancing ``live`` slots.
+
+        A round pays a fixed weight-bound cost (reading the model once,
+        fraction ``alpha``) plus a per-slot activation/KV-bound cost — the
+        standard roofline decomposition of batched decode.  Underfilled
+        rounds therefore waste the shared ``alpha`` portion, which is
+        exactly the inefficiency continuous batching removes.  With
+        ``live == 1`` this reduces to ``step_time(sm, 1)``, so single-slot
+        pods keep the paper-calibrated service rates.
+        """
+        return (alpha + (1.0 - alpha) * live) / self.rate(sm, quota=1.0)
+
 
 def _curve(name: str, r_max: float, sm_sat: float, s_ref: float, c_ref: float,
            weight_mb: int, framework_mb: int) -> ServiceCurve:
@@ -108,10 +121,16 @@ class Request:
     fn: str
     arrival: float
     req_id: int
+    # Decode steps the request needs (autoregressive output length).  1 ==
+    # the classic single-shot inference the paper benchmarks; >1 makes the
+    # request hold a decode slot for n_tokens token-gated rounds, which is
+    # what continuous batching exploits.
+    n_tokens: int = 1
 
 
 def poisson_arrivals(fn: str, rps: float, duration: float, *,
-                     seed: int = 0, start: float = 0.0) -> list[Request]:
+                     seed: int = 0, start: float = 0.0,
+                     n_tokens: int = 1) -> list[Request]:
     """Open-loop Poisson arrivals at ``rps`` for ``duration`` seconds."""
     rng = np.random.default_rng(seed)
     out: list[Request] = []
@@ -121,7 +140,7 @@ def poisson_arrivals(fn: str, rps: float, duration: float, *,
         t += rng.exponential(1.0 / rps)
         if t >= start + duration:
             break
-        out.append(Request(fn=fn, arrival=t, req_id=i))
+        out.append(Request(fn=fn, arrival=t, req_id=i, n_tokens=n_tokens))
         i += 1
     return out
 

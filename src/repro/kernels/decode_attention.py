@@ -19,6 +19,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across 0.4.x releases;
+# accept either so the kernels run on whichever toolchain is baked in.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
 NEG_INF = -1e30
 
 
@@ -149,7 +154,7 @@ def decode_attention_quant_pallas(
             pltpu.VMEM((g,), jnp.float32),
             pltpu.VMEM((g,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(dimension_semantics=(
+        compiler_params=_CompilerParams(dimension_semantics=(
             "parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(cache_len.astype(jnp.int32), qg, k_cache, v_cache, k_scale, v_scale)
@@ -196,7 +201,7 @@ def decode_attention_pallas(
             pltpu.VMEM((g,), jnp.float32),
             pltpu.VMEM((g,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(dimension_semantics=(
+        compiler_params=_CompilerParams(dimension_semantics=(
             "parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(cache_len.astype(jnp.int32), qg, k_cache, v_cache)

@@ -17,6 +17,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across 0.4.x releases;
+# accept either so the kernels run on whichever toolchain is baked in.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
 
 def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, s0_ref, y_ref, sT_ref,
             state_ref, *, block_t: int, n_blocks: int):
@@ -91,7 +96,7 @@ def ssm_scan_pallas(
             jax.ShapeDtypeStruct((bsz, h, d, n), state.dtype),
         ],
         scratch_shapes=[pltpu.VMEM((d, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(dimension_semantics=(
+        compiler_params=_CompilerParams(dimension_semantics=(
             "parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, a_log, b, c, state)

@@ -199,6 +199,16 @@ def cache_write(cache: jax.Array, new: jax.Array, slot: jax.Array) -> jax.Array:
     )(cache, new.astype(cache.dtype), slot)
 
 
+def slot_gather(leaf: jax.Array, slot: jax.Array, batch_axis: int
+                ) -> jax.Array:
+    """Extract one decode slot as a batch-1 leaf (inverse of a slot merge).
+
+    Used by the continuous-batching engine to inspect / migrate a single
+    request's cache entry out of the persistent slot pool.
+    """
+    return jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=batch_axis)
+
+
 def _rolled_decode(q, kc, vc, pos, window):
     """Attention against a rolled cache: slot s holds position
     pos - ((pos - s) mod C); invalid when that position is negative."""

@@ -168,6 +168,54 @@ class Model:
             lambda s: jnp.zeros(s.shape, s.dtype),
             self.cache_shapes(batch, max_len))
 
+    # -- slot caches (continuous batching) ---------------------------------
+
+    def slot_batch_axes(self, max_len: int) -> dict[str, int]:
+        """Index of the batch ('slot') axis for every cache leaf except
+        ``pos``, which becomes per-slot (n_slots,) in a slot cache."""
+        names = self.cache_names(1, max_len)
+        return {k: v.index("batch") for k, v in names.items() if k != "pos"}
+
+    def init_slot_cache(self, n_slots: int, max_len: int) -> Any:
+        """Persistent decode-slot pool: ``init_cache`` with a *per-slot*
+        position vector, so every slot tracks its own sequence length and
+        finished slots can be re-filled mid-flight."""
+        cache = self.init_cache(n_slots, max_len)
+        cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
+        return cache
+
+    def merge_slot(self, cache: Any, entry: Any, slot: jax.Array) -> Any:
+        """Scatter a batch-1 prefill cache ``entry`` into slot ``slot``.
+
+        ``cache`` is a slot pool from ``init_slot_cache``; ``entry`` a cache
+        returned by ``prefill`` for a single request with the same
+        ``max_len``.  jit-compatible: ``slot`` may be a traced scalar.
+        """
+        axes = self.slot_batch_axes(1)
+        out = dict(cache)
+        for key, leaf in cache.items():
+            if key == "pos":
+                out[key] = leaf.at[slot].set(
+                    entry["pos"].astype(leaf.dtype))
+            else:
+                out[key] = jax.lax.dynamic_update_slice_in_dim(
+                    leaf, entry[key].astype(leaf.dtype), slot,
+                    axis=axes[key])
+        return out
+
+    def gather_slot(self, cache: Any, slot: jax.Array) -> Any:
+        """Extract slot ``slot`` of a slot pool as a batch-1 cache (with a
+        scalar ``pos``) — the exact inverse of ``merge_slot``."""
+        from repro.models.attention import slot_gather
+        axes = self.slot_batch_axes(1)
+        out = dict(cache)
+        for key, leaf in cache.items():
+            if key == "pos":
+                out[key] = leaf[slot]
+            else:
+                out[key] = slot_gather(leaf, slot, axes[key])
+        return out
+
     # -- stubbed modality frontends -----------------------------------------
 
     def needs_ctx(self) -> bool:

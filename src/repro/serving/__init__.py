@@ -1,4 +1,6 @@
 from repro.serving.engine import (FunctionInstance, ServeRequest,
                                   ServingEngine)
+from repro.serving.frontend import ClusterFrontend, InstancePlacement
 
-__all__ = ["ServingEngine", "FunctionInstance", "ServeRequest"]
+__all__ = ["ServingEngine", "FunctionInstance", "ServeRequest",
+           "ClusterFrontend", "InstancePlacement"]

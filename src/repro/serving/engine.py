@@ -1,13 +1,29 @@
-"""Live serving engine: FaST-GShare control plane over real JAX executors.
+"""Live serving engine: FaST-GShare data plane over real JAX executors.
 
-This is the paper's data plane made real on this container: N instances of
-a function share ONE param pytree through the ``ModelStore`` (model
-sharing, §3.5), each instance's dispatch loop is gated by the node's
-``TokenScheduler`` (FaST-Manager, §3.3), and requests flow through dynamic
-batching with continuous decode.
+This is the paper's serving stack made real on this container, one engine
+per node:
 
-One engine == one node.  Wall-clock step times feed ``Q_used`` exactly as
-the paper's CUDA-event accounting does (DESIGN.md §2).
+* **Model sharing (§3.5)** — N instances of a function share ONE param
+  pytree through the ``ModelStore``; the runtime never copies weights.
+* **FaST-Manager (§3.3)** — every instance's dispatch loop is gated by the
+  node's ``TokenScheduler``; wall-clock step times feed ``Q_used`` exactly
+  as the paper's CUDA-event accounting does (DESIGN.md §2).
+* **Continuous (slot-level) batching** — each ``FunctionInstance`` owns a
+  fixed pool of ``max_batch`` decode slots backed by a persistent per-slot
+  KV cache (``Model.init_slot_cache``).  A finished request frees its slot
+  *immediately*; queued requests are admitted mid-flight by prefilling
+  them individually and merging their cache entries into the live decode
+  batch at the freed slot index (``Model.merge_slot``).  Token-granted
+  decode steps therefore stay full whenever there is queued work — the
+  property the paper's throughput wins depend on.  ``batching="static"``
+  keeps the old retire-together semantics as a reference implementation
+  (the equivalence tests decode both ways and compare token streams).
+
+Topology: a ``ServingEngine`` is one node; ``repro.serving.frontend``
+routes requests across several engines (join-shortest-queue) and places
+functions onto nodes with the same MRA + memory-model admission the
+simulator uses, so the live path mirrors ``repro.core.cluster`` end to
+end.
 """
 
 from __future__ import annotations
@@ -41,41 +57,115 @@ class ServeRequest:
 
 
 class FunctionInstance:
-    """One FaSTPod-equivalent: jitted prefill/decode with shared weights."""
+    """One FaSTPod-equivalent: jitted prefill/decode with shared weights.
+
+    ``batching="continuous"`` (default): a fixed pool of ``max_batch``
+    decode slots; every ``run_step`` first admits queued requests into free
+    slots (chunked prefill + slot merge), then advances all occupied slots
+    one token.  ``batching="static"``: the legacy batch that only re-fills
+    once every member finishes — kept as the reference semantics.
+    """
 
     def __init__(self, inst_id: str, model: Model, store: ModelStore,
                  weights_key: str, alloc: Alloc, *, max_batch: int = 4,
-                 max_len: int = 64):
+                 max_len: int = 64, batching: str = "continuous"):
+        if batching not in ("continuous", "static"):
+            raise ValueError(f"unknown batching mode {batching!r}")
         self.inst_id = inst_id
         self.model = model
         self.alloc = alloc
         self.max_batch = max_batch
         self.max_len = max_len
+        self.batching = batching
         self.store = store
         self.weights_key = weights_key
         self.params = store.get(weights_key)  # shared, zero-copy
         self.queue: deque[ServeRequest] = deque()
-        self.active: list[ServeRequest] = []
         self._prefill = jax.jit(
             lambda p, t: model.prefill(p, t, max_len=max_len))
         self._decode = jax.jit(model.decode_step)
-        self.cache: Optional[Any] = None
+        self._merge = jax.jit(model.merge_slot)
         self.steps = 0
+        # continuous state: slot i holds the request decoding in cache row i.
+        self.slots: list[Optional[ServeRequest]] = [None] * max_batch
+        self._slot_tok = np.zeros((max_batch,), np.int32)
+        self.cache: Optional[Any] = None  # slot pool / static batch cache
+        # static state
+        self.active: list[ServeRequest] = []
+        self.refills = 0  # mid-flight slot admissions (continuous only)
+        self.last_fill = 0  # slots that did work in the latest run_step
 
     def close(self) -> None:
         self.store.put_back(self.weights_key)
 
     def has_work(self) -> bool:
-        return bool(self.queue or self.active)
+        return bool(self.queue) or self.n_active() > 0
 
-    def run_step(self) -> list[ServeRequest]:
-        """One token-gated step: batch prefill or one decode round.
+    def n_active(self) -> int:
+        if self.batching == "static":
+            return len(self.active)
+        return sum(1 for r in self.slots if r is not None)
 
-        Returns requests completed by this step.
-        """
-        self.steps += 1
-        if self.active:
-            return self._decode_round()
+    def load(self) -> int:
+        """Queue depth + occupied slots (join-shortest-queue metric)."""
+        return len(self.queue) + self.n_active()
+
+    def _clip_tok(self, tok: np.ndarray) -> np.ndarray:
+        return np.minimum(tok, self.model.cfg.vocab_size - 1)
+
+    # -- continuous path ---------------------------------------------------
+
+    def _admit(self) -> list[ServeRequest]:
+        """Chunked admission: prefill queued requests one at a time into
+        free slots and merge their caches into the live decode batch."""
+        finished = []
+        # A refill = joining a batch that was already decoding before this
+        # step; cold-start co-admissions in the same pass don't count.
+        had_live = self.n_active() > 0
+        for slot in range(self.max_batch):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            logits, entry = self._prefill(
+                self.params, jnp.asarray(req.prompt[None], jnp.int32))
+            tok = int(self._clip_tok(
+                np.asarray(jnp.argmax(logits, axis=-1), np.int32))[0])
+            req.tokens_out.append(tok)
+            if len(req.tokens_out) >= req.max_new_tokens:
+                req.done = True
+                finished.append(req)
+                continue  # slot stays free for the next queued request
+            if self.cache is None:
+                self.cache = self.model.init_slot_cache(self.max_batch,
+                                                        self.max_len)
+            if had_live:
+                self.refills += 1  # joined a live decode batch mid-flight
+            self.cache = self._merge(self.cache, entry, jnp.int32(slot))
+            self.slots[slot] = req
+            self._slot_tok[slot] = tok
+        return finished
+
+    def _decode_round_continuous(self) -> list[ServeRequest]:
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(self._slot_tok), self.cache)
+        next_tok = self._clip_tok(
+            np.asarray(jnp.argmax(logits, axis=-1), np.int32))
+        finished = []
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue  # free slot decoded garbage; ignore it
+            tok = int(next_tok[slot])
+            req.tokens_out.append(tok)
+            self._slot_tok[slot] = tok
+            if len(req.tokens_out) >= req.max_new_tokens:
+                req.done = True
+                finished.append(req)
+                self.slots[slot] = None  # freed immediately for refill
+        return finished
+
+    # -- static reference path ---------------------------------------------
+
+    def _admit_static(self) -> list[ServeRequest]:
         batch = []
         while self.queue and len(batch) < self.max_batch:
             batch.append(self.queue.popleft())
@@ -84,32 +174,65 @@ class FunctionInstance:
         prompts = np.stack([r.prompt for r in batch])
         logits, cache = self._prefill(self.params,
                                       jnp.asarray(prompts, jnp.int32))
-        next_tok = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-        next_tok = np.minimum(next_tok, self.model.cfg.vocab_size - 1)
-        for r, t in zip(batch, next_tok):
-            r.tokens_out.append(int(t))
-        self.active = batch
-        self.cache = cache
-        return []
-
-    def _decode_round(self) -> list[ServeRequest]:
-        toks = jnp.asarray([r.tokens_out[-1] for r in self.active], jnp.int32)
-        logits, self.cache = self._decode(self.params, toks, self.cache)
-        next_tok = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-        next_tok = np.minimum(next_tok, self.model.cfg.vocab_size - 1)
+        next_tok = self._clip_tok(
+            np.asarray(jnp.argmax(logits, axis=-1), np.int32))
         finished = []
-        for r, t in zip(self.active, next_tok):
+        for r, t in zip(batch, next_tok):
             r.tokens_out.append(int(t))
             if len(r.tokens_out) >= r.max_new_tokens:
                 r.done = True
                 finished.append(r)
-        if any(r.done for r in self.active):
-            # Static-batch semantics: the batch retires together once all
-            # members finish (continuous batching would re-fill slots; kept
-            # simple here — the cluster sim models slot-level batching).
-            if all(r.done for r in self.active):
-                self.active = []
-                self.cache = None
+        self.active = batch
+        self.cache = cache
+        self._retire_static_if_done()
+        return finished
+
+    def _decode_round_static(self) -> list[ServeRequest]:
+        # Finished members keep their row in the batch (that is the point
+        # of static batching) but stop accumulating tokens.
+        toks = jnp.asarray([r.tokens_out[-1] for r in self.active], jnp.int32)
+        logits, self.cache = self._decode(self.params, toks, self.cache)
+        next_tok = self._clip_tok(
+            np.asarray(jnp.argmax(logits, axis=-1), np.int32))
+        finished = []
+        for r, t in zip(self.active, next_tok):
+            if r.done:
+                continue
+            r.tokens_out.append(int(t))
+            if len(r.tokens_out) >= r.max_new_tokens:
+                r.done = True
+                finished.append(r)
+        self._retire_static_if_done()
+        return finished
+
+    def _retire_static_if_done(self) -> None:
+        # Static-batch semantics: the batch retires together once ALL
+        # members finish; no slot is re-filled mid-flight.
+        if self.active and all(r.done for r in self.active):
+            self.active = []
+            self.cache = None
+
+    # -- one token-gated step ----------------------------------------------
+
+    def run_step(self) -> list[ServeRequest]:
+        """One token-gated step; returns requests completed by it.
+
+        Continuous: admit queued requests into free slots, then one decode
+        round over all occupied slots.  Static: batch prefill OR one decode
+        round, never both.
+        """
+        self.steps += 1
+        if self.batching == "static":
+            if self.active:
+                self.last_fill = sum(1 for r in self.active if not r.done)
+                return self._decode_round_static()
+            finished = self._admit_static()
+            self.last_fill = len(self.active) or len(finished)
+            return finished
+        finished = self._admit()
+        self.last_fill = self.n_active() + len(finished)
+        if self.n_active() > 0:
+            finished += self._decode_round_continuous()
         return finished
 
 
@@ -128,8 +251,8 @@ class ServingEngine:
         return time.perf_counter() - self._t0
 
     def deploy(self, fn: str, model: Model, params: Any, alloc: Alloc, *,
-               n_instances: int = 1, max_batch: int = 4, max_len: int = 64
-               ) -> list[str]:
+               n_instances: int = 1, max_batch: int = 4, max_len: int = 64,
+               batching: str = "continuous") -> list[str]:
         if fn not in self.recorders:
             self.recorders[fn] = SLORecorder(fn=fn)
         if not self.store.contains(fn):
@@ -139,7 +262,8 @@ class ServingEngine:
         for i in range(n_instances):
             inst_id = f"{fn}/{base + i}"
             inst = FunctionInstance(inst_id, model, self.store, fn, alloc,
-                                    max_batch=max_batch, max_len=max_len)
+                                    max_batch=max_batch, max_len=max_len,
+                                    batching=batching)
             self.instances[inst_id] = inst
             self.scheduler.register(inst_id, alloc)
             ids.append(inst_id)
@@ -155,9 +279,12 @@ class ServingEngine:
                       if k.startswith(fn + "/")]
         if not candidates:
             raise KeyError(f"function {fn} has no instances")
-        inst = min(candidates, key=lambda i: len(i.queue) + len(i.active))
+        inst = min(candidates, key=lambda i: i.load())
         inst.queue.append(req)
         return req
+
+    def has_work(self) -> bool:
+        return any(i.has_work() for i in self.instances.values())
 
     def pump(self, budget_s: float = 1.0) -> int:
         """Run token-gated dispatch until idle or budget exhausted."""
@@ -180,7 +307,11 @@ class ServingEngine:
                 t0 = time.perf_counter()
                 finished = inst.run_step()
                 elapsed = time.perf_counter() - t0
-                self.scheduler.complete(token.pod_id, elapsed, self.now())
+                # Drained occupancy scales with slot fill: an underfilled
+                # decode round cannot saturate the instance's SM share.
+                occ = token.occ * min(inst.last_fill / inst.max_batch, 1.0)
+                self.scheduler.complete(token.pod_id, elapsed, self.now(),
+                                        occ=occ)
                 fn = token.pod_id.split("/")[0]
                 for r in finished:
                     r.finished_at = self.now()

@@ -1,0 +1,174 @@
+"""Multi-engine frontend: the live analogue of ``repro.core.cluster``.
+
+``ClusterFrontend`` routes requests across N ``ServingEngine`` nodes so the
+real JAX data plane finally exercises the simulator's full stack:
+
+* **Placement** — function instances are bound to nodes by the same
+  ``MaxRectsPool`` (paper Alg. 2) the simulator uses: each instance's
+  ``Alloc`` rectangle is packed best-area-fit across the fleet, and a
+  candidate node must also pass ``MemoryModel`` admission (model-sharing
+  footprints, paper Fig. 13 / §3.5) before the engine deploys there.
+* **Routing** — ``submit`` joins the shortest queue across all nodes
+  hosting the function (queue depth + occupied decode slots), mirroring
+  ``Cluster._arrive``.
+* **Dispatch** — ``pump`` interleaves the per-node token schedulers
+  (FaST-Manager, one per engine) until the fleet is idle.
+
+Weights are shared *per node*: deploying the same function on two nodes
+stores one param pytree in each node's ``ModelStore``; instances within a
+node alias it zero-copy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.maximal_rectangles import MaxRectsPool, Placement
+from repro.core.model_sharing import MemoryModel, pytree_nbytes
+from repro.core.resources import Alloc
+from repro.models.model import Model
+from repro.serving.engine import ServeRequest, ServingEngine
+
+# Per-instance runtime footprint (jit executables, slot KV pool, host
+# bookkeeping) charged by admission when the caller gives no measurement.
+DEFAULT_FRAMEWORK_BYTES = 64 * 1024 * 1024
+
+
+@dataclasses.dataclass
+class InstancePlacement:
+    """One live instance: which node it landed on and its MRA rectangle."""
+
+    fn: str
+    inst_id: str
+    node: int
+    placement: Placement
+
+
+class ClusterFrontend:
+    """Join-shortest-queue router over N token-scheduled engine nodes."""
+
+    def __init__(self, n_nodes: int = 2, *,
+                 mem_bytes: int = 16 * 1024**3, window: float = 0.2):
+        if n_nodes <= 0:
+            raise ValueError("need at least one node")
+        self.engines = [ServingEngine(window=window) for _ in range(n_nodes)]
+        self.pool = MaxRectsPool(n_nodes, allow_grow=False)
+        self.mem_bytes = mem_bytes
+        self.placements: list[InstancePlacement] = []
+        self._fn_mm: dict[str, MemoryModel] = {}
+        self._pod_seq = itertools.count()
+
+    # -- memory admission (same closed form as core.cluster.Node) ---------
+
+    def _fn_instances_on(self, node: int) -> dict[str, int]:
+        counts: dict[str, int] = {}
+        for p in self.placements:
+            if p.node == node:
+                counts[p.fn] = counts.get(p.fn, 0) + 1
+        return counts
+
+    def mem_used(self, node: int) -> int:
+        return sum(self._fn_mm[fn].footprint(n, sharing=True)
+                   for fn, n in self._fn_instances_on(node).items() if n > 0)
+
+    def admits(self, node: int, fn: str, mm: MemoryModel) -> bool:
+        n = self._fn_instances_on(node).get(fn, 0)
+        projected = (self.mem_used(node)
+                     - mm.footprint(n, sharing=True)
+                     + mm.footprint(n + 1, sharing=True))
+        return projected <= self.mem_bytes
+
+    # -- deployment --------------------------------------------------------
+
+    def deploy(self, fn: str, model: Model, params: Any, alloc: Alloc, *,
+               n_instances: int = 1, max_batch: int = 4, max_len: int = 64,
+               batching: str = "continuous",
+               framework_bytes: int = DEFAULT_FRAMEWORK_BYTES) -> list[str]:
+        """Place ``n_instances`` of ``fn`` across the fleet via MRA +
+        memory admission; returns ``node:inst_id`` handles."""
+        mm = self._fn_mm.setdefault(
+            fn, MemoryModel(weight_bytes=pytree_nbytes(params),
+                            framework_bytes=framework_bytes))
+        handles = []
+        for _ in range(n_instances):
+            pod_id = f"{fn}-{next(self._pod_seq)}"
+            excluded: set[int] = set()
+            while True:
+                placement = self.pool.schedule(alloc, pod_id,
+                                               exclude=excluded)
+                if placement is None:
+                    raise RuntimeError(
+                        f"no node can host {fn} at alloc {alloc} "
+                        f"(rectangles or memory exhausted)")
+                if self.admits(placement.node, fn, mm):
+                    break
+                self.pool.release(placement)
+                excluded.add(placement.node)
+            inst_id = self.engines[placement.node].deploy(
+                fn, model, params, alloc, n_instances=1,
+                max_batch=max_batch, max_len=max_len, batching=batching)[0]
+            self.placements.append(InstancePlacement(
+                fn=fn, inst_id=inst_id, node=placement.node,
+                placement=placement))
+            handles.append(f"{placement.node}:{inst_id}")
+        return handles
+
+    def nodes_for(self, fn: str) -> list[int]:
+        return sorted({p.node for p in self.placements if p.fn == fn})
+
+    # -- request path ------------------------------------------------------
+
+    def _fn_load(self, node: int, fn: str) -> int:
+        eng = self.engines[node]
+        return sum(inst.load() for key, inst in eng.instances.items()
+                   if key.startswith(fn + "/"))
+
+    def submit(self, fn: str, prompt: np.ndarray, max_new_tokens: int = 8
+               ) -> ServeRequest:
+        nodes = self.nodes_for(fn)
+        if not nodes:
+            raise KeyError(f"function {fn} is not deployed")
+        # Join-shortest-queue across nodes, then again across the chosen
+        # node's instances (ServingEngine.submit).
+        node = min(nodes, key=lambda n: self._fn_load(n, fn))
+        return self.engines[node].submit(fn, prompt, max_new_tokens)
+
+    def has_work(self) -> bool:
+        return any(e.has_work() for e in self.engines)
+
+    def pump(self, budget_s: float = 1.0, slice_s: float = 0.02) -> int:
+        """Interleave the per-node schedulers until idle or out of budget."""
+        import time
+
+        completed = 0
+        deadline = time.perf_counter() + budget_s
+        while time.perf_counter() < deadline and self.has_work():
+            for eng in self.engines:
+                if eng.has_work():
+                    completed += eng.pump(budget_s=slice_s)
+        return completed
+
+    # -- metrics -----------------------------------------------------------
+
+    def occupancy(self, last_n: int = 10) -> float:
+        live = [e for e in self.engines if e.instances]
+        if not live:
+            return 0.0
+        return sum(e.scheduler.occupancy(last_n) for e in live) / len(live)
+
+    def utilization(self, last_n: int = 10) -> float:
+        live = [e for e in self.engines if e.instances]
+        if not live:
+            return 0.0
+        return sum(e.scheduler.utilization(last_n) for e in live) / len(live)
+
+    def memory_bytes(self) -> int:
+        return sum(e.memory_bytes() for e in self.engines)
+
+    def recorder(self, fn: str):
+        """Merged view is unnecessary: latency records live per node."""
+        return [e.recorders[fn] for e in self.engines if fn in e.recorders]

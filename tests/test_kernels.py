@@ -12,6 +12,9 @@ from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.ssm_scan import ssm_scan_pallas
 from repro.kernels.wkv6 import wkv6_pallas
 
+# JAX-compile-heavy (Pallas-interpret kernel sweeps): excluded from tier-1, run via `-m slow`.
+pytestmark = pytest.mark.slow
+
 
 def _rand(rng, shape, dtype):
     return jnp.asarray(rng.normal(size=shape), jnp.float32).astype(dtype)

@@ -9,6 +9,9 @@ from repro.configs import get_config
 from repro.models import build_model
 from repro.models.attention import kv_dequantize, kv_int8_enabled, kv_quantize
 
+# JAX-compile-heavy (full decode-path compiles): excluded from tier-1, run via `-m slow`.
+pytestmark = pytest.mark.slow
+
 
 def _run_decode(model, params, toks, forced, steps=5):
     """Teacher-forced decode: both paths see identical token histories, so

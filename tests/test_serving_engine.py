@@ -4,17 +4,16 @@ import jax
 import numpy as np
 import pytest
 
-from repro.configs import get_config
 from repro.core.resources import Alloc
-from repro.models import build_model
 from repro.serving import ServingEngine
 
 
 @pytest.fixture(scope="module")
-def served():
-    model = build_model(get_config("qwen2-7b", reduced=True))
-    params = model.init(jax.random.key(1))
-    return model, params
+def served(tiny_model, tiny_params):
+    # Tiny deterministic config (conftest) keeps this module tier-1-fast;
+    # the full qwen2-7b-reduced engine path runs under `-m slow` in
+    # test_smoke_archs / test_system coverage.
+    return tiny_model, tiny_params
 
 
 def test_end_to_end_generation_with_shared_weights(served):

@@ -9,6 +9,9 @@ import pytest
 from repro.configs import all_arch_ids, get_config
 from repro.models import build_model
 
+# JAX-compile-heavy (per-arch jit compiles dominate): excluded from tier-1, run via `-m slow`.
+pytestmark = pytest.mark.slow
+
 ARCHS = all_arch_ids()
 
 

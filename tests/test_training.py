@@ -15,6 +15,9 @@ from repro.training import (AdamW, TrainStepConfig, cross_entropy,
 from repro.training import checkpoint as ckpt
 from repro.training.data import batch_iterator, make_batch
 
+# JAX-compile-heavy (real optimizer/train-loop jit steps): excluded from tier-1, run via `-m slow`.
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def _tiny_shared():
