@@ -17,8 +17,9 @@ purely reactive scaler necessarily violates during the detection lag.
 from __future__ import annotations
 
 from benchmarks.common import Row
+from repro.control import ControlPlane, FunctionSpec, SimBackend
 from repro.core.cluster import Cluster
-from repro.core.profiler import ProfileDB, simulate_trial
+from repro.core.profiler import profile_points
 from repro.core.workload import PAPER_ZOO, diurnal_trace, trace_arrivals
 
 SLO_S = 0.069
@@ -30,37 +31,24 @@ STEP_TRACE = [(0.0, 30.0), (30.0, 120.0), (60.0, 240.0), (100.0, 90.0),
               (130.0, 20.0), (160.0, 0.0)]
 
 
-def _profile() -> ProfileDB:
-    db = ProfileDB()
-    for sm in (0.12, 0.24, 0.5):
-        for quota in (0.4, 1.0):
-            cap = simulate_trial(PAPER_ZOO["resnet"], sm, quota,
-                                 duration=15.0, overload_factor=1.5)
-            lat = simulate_trial(PAPER_ZOO["resnet"], sm, quota,
-                                 duration=15.0, overload_factor=0.8)
-            import dataclasses
-            db.add("resnet", dataclasses.replace(cap, p99=lat.p99))
-    return db
-
-
 def _run_trace(trace, profiles) -> tuple[float, float, float, int]:
     cluster = Cluster(n_nodes=8, sharing=True, max_batch=2)
-    cluster.register_function("resnet", PAPER_ZOO["resnet"],
-                              slo_latency=SLO_S)
-    best = max(profiles["resnet"], key=lambda p: p.rpr)
-    cluster.deploy("resnet", best, elastic_limit=1.0)
+    plane = ControlPlane(SimBackend(cluster))
+    plane.register(FunctionSpec(
+        name="resnet", profile=tuple(profiles["resnet"]),
+        slo_latency=SLO_S, rps_window=HORIZON, headroom=HEADROOM,
+        min_instances=1, max_instances=64, elastic_limit=1.0,
+        curve=PAPER_ZOO["resnet"]))
     arrivals = trace_arrivals("resnet", trace, seed=5)
     cluster.submit_all(arrivals)
     peak_pods = [1]
 
     def control() -> None:
-        now = cluster.sim.now
-        recent = [r for r in arrivals if now - HORIZON <= r.arrival <= now]
-        predicted = len(recent) / HORIZON
-        cluster.autoscale({"resnet": predicted}, profiles,
-                          slo_latency={"resnet": SLO_S}, headroom=HEADROOM)
-        peak_pods[0] = max(peak_pods[0], len(cluster.fn_pods["resnet"]))
-        if now < DURATION:
+        # Observed-RPS mode: the reconciler predicts demand from the
+        # cluster's trailing arrival window (gateway-style).
+        plane.reconcile()
+        peak_pods[0] = max(peak_pods[0], plane.instances("resnet"))
+        if cluster.sim.now < DURATION:
             cluster.sim.after(CONTROL_PERIOD, control)
 
     cluster.sim.after(CONTROL_PERIOD, control)
@@ -73,7 +61,9 @@ def _run_trace(trace, profiles) -> tuple[float, float, float, int]:
 
 
 def run() -> list[Row]:
-    profiles = {"resnet": _profile().table("resnet")}
+    profiles = {"resnet": profile_points(
+        PAPER_ZOO["resnet"], spatial=(0.12, 0.24, 0.5), temporal=(0.4, 1.0),
+        duration=15.0)}
     ramp = diurnal_trace(base_rps=20.0, peak_rps=240.0, period=DURATION,
                          duration=DURATION, step=5.0) + [(DURATION, 0.0)]
     v, served, p99, pods = _run_trace(ramp, profiles)

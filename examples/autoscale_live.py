@@ -1,0 +1,110 @@
+"""Live autoscaling: one declarative spec drives real JAX engines AND the
+simulator, producing the identical scale-decision sequence.
+
+A ``FunctionSpec`` declares a tiny chat model with a latency SLO, a
+profile table, and a deterministic RPS ramp (1 -> burst -> 1 req/s).  The
+``ControlPlane`` reconciles the live fleet (``ClusterFrontend`` over two
+``ServingEngine`` nodes) once per virtual tick: Alg. 1 scales the function
+from 1 instance up to several at the burst and back down to the floor,
+placing via MRA + memory admission and evicting with graceful drain — the
+run asserts **zero dropped in-flight requests**.  The same spec is then
+replayed through the simulator backend and the two decision logs are
+compared entry for entry.
+
+Run:  PYTHONPATH=src python examples/autoscale_live.py
+"""
+
+import jax
+import numpy as np
+
+from repro.control import (ControlPlane, FunctionSpec, LiveBackend,
+                           SimBackend, decision_signature, ramp)
+from repro.core.cluster import Cluster
+from repro.core.scaling import ProfilePoint
+from repro.core.workload import ServiceCurve
+from repro.models import build_model
+from repro.models.config import ModelConfig
+from repro.serving import ClusterFrontend
+
+# Profile table for the tiny model: throughputs are in ticks of the
+# reconcile loop, so the decision arithmetic is easy to follow by hand.
+PROFILE = (
+    ProfilePoint(sm=0.25, quota=0.4, throughput=2.0, p99_latency=0.05),
+    ProfilePoint(sm=0.45, quota=0.8, throughput=5.0, p99_latency=0.03),
+    ProfilePoint(sm=0.45, quota=0.8, throughput=4.0, p99_latency=0.30),  # SLO-infeasible
+)
+
+RAMP = ramp([(0.0, 1.0), (3.0, 12.0), (7.0, 1.0)])
+TICKS = 11
+
+
+def make_model():
+    model = build_model(ModelConfig(
+        name="tiny-chat", family="dense", n_layers=2, d_model=32, n_heads=4,
+        n_kv_heads=2, d_ff=64, vocab_size=64, vocab_pad_multiple=32))
+    return model, model.init(jax.random.key(0))
+
+
+def make_spec() -> FunctionSpec:
+    return FunctionSpec(
+        name="chat", profile=PROFILE, slo_latency=0.1, target_rps=RAMP,
+        headroom=1.2, min_instances=1, max_instances=6,
+        model_factory=make_model, max_batch=2, max_len=32,
+        framework_bytes=32 * 1024 * 1024,
+        curve=ServiceCurve(name="chat", r_max=5.0, sm_sat=0.45, p=1.0,
+                           weight_bytes=1 << 20, framework_bytes=32 << 20))
+
+
+def main() -> None:
+    # -- live fleet ------------------------------------------------------
+    frontend = ClusterFrontend(n_nodes=2, window=0.1)
+    live = ControlPlane(LiveBackend(frontend))
+    live.register(make_spec())
+    print(f"[live] registered: {live.instances('chat')} instance(s)")
+
+    rng = np.random.default_rng(0)
+    reqs = []
+    for tick in range(TICKS):
+        live.reconcile(now=float(tick))
+        n_inst = live.instances("chat")
+        # Offer load matching the declared ramp; prompts of varying length
+        # exercise the bucketed prefill (one compile per bucket).
+        for _ in range(int(RAMP(float(tick)))):
+            prompt = rng.integers(0, 64, int(rng.integers(4, 12)),
+                                  dtype=np.int32)
+            reqs.append(frontend.submit("chat", prompt, max_new_tokens=3))
+        frontend.pump(budget_s=5.0)
+        print(f"  t={tick:2d} target={RAMP(float(tick)):5.1f} rps  "
+              f"instances={n_inst}  inflight={frontend.inflight('chat')}")
+    frontend.pump(budget_s=30.0)
+
+    peak = max(e.instances_before for e in live.events)
+    assert peak > 1, "burst must scale the function out"
+    assert live.instances("chat") == 1, "ramp-down must return to the floor"
+    done = sum(1 for r in reqs if r.done)
+    assert done == len(reqs), f"dropped {len(reqs) - done} in-flight requests"
+    print(f"[live] served {done}/{len(reqs)} requests "
+          f"(zero dropped across scale-up AND drain-down), peak "
+          f"instances={peak}")
+
+    # -- simulator replay of the same spec -------------------------------
+    cluster = Cluster(n_nodes=2, sharing=True)
+    sim = ControlPlane(SimBackend(cluster))
+    sim.register(make_spec())
+    for tick in range(TICKS):
+        sim.reconcile(now=float(tick))
+
+    live_sig = decision_signature(live.log)
+    sim_sig = decision_signature(sim.log)
+    assert live_sig == sim_sig, (
+        f"decision logs diverged:\n live={live_sig}\n  sim={sim_sig}")
+    print(f"[replay] simulator produced the identical "
+          f"{len(sim_sig)}-decision sequence: OK")
+    for sig in live_sig:
+        fn, direction, sm, quota = sig
+        arrow = "up" if direction > 0 else "down"
+        print(f"    {fn}: scale-{arrow} at (sm={sm}, quota={quota})")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,7 @@ Run:  PYTHONPATH=src python examples/serve_cluster.py
 """
 
 from repro.core.cluster import Cluster
-from repro.core.profiler import ProfileDB, simulate_trial
+from repro.core.profiler import profile_points
 from repro.core.workload import PAPER_ZOO, diurnal_trace, trace_arrivals
 
 SLO = {"resnet": 0.069, "bert": 0.15}
@@ -21,27 +21,21 @@ DURATION = 120.0
 
 
 def main() -> None:
-    # 1. FaST-Profiler: Experiment -> Trial grid for each function.
-    db = ProfileDB()
-    for fn in SLO:
-        for sm in (0.12, 0.24, 0.5):
-            for quota in (0.4, 1.0):
-                import dataclasses
-                cap = simulate_trial(PAPER_ZOO[fn], sm, quota, duration=12.0)
-                lat = simulate_trial(PAPER_ZOO[fn], sm, quota, duration=12.0,
-                                     overload_factor=0.8)
-                db.add(fn, dataclasses.replace(cap, p99=lat.p99))
-        best = db.best_rpr(fn)
+    # 1. FaST-Profiler: Experiment -> Trial grid for each function,
+    #    emitted as the spec-ready {<F, S, Q, T>} table.
+    profiles = {fn: profile_points(PAPER_ZOO[fn]) for fn in SLO}
+    for fn, pts in profiles.items():
+        best = max(pts, key=lambda p: p.rpr)
         print(f"[profile] {fn}: best RPR at sm={best.sm} quota={best.quota} "
               f"-> {best.throughput:.1f} req/s")
-    profiles = {fn: db.table(fn) for fn in SLO}
 
     # 2. Cluster with autoscaling control loop.
     cluster = Cluster(n_nodes=6, sharing=True, max_batch=2)
     arrivals = []
     for i, fn in enumerate(SLO):
         cluster.register_function(fn, PAPER_ZOO[fn], slo_latency=SLO[fn])
-        cluster.deploy(fn, db.best_rpr(fn), elastic_limit=1.0)
+        cluster.deploy(fn, max(profiles[fn], key=lambda p: p.rpr),
+                       elastic_limit=1.0)
         trace = diurnal_trace(15.0, 150.0, DURATION, DURATION, 5.0) + [
             (DURATION, 0.0)]
         arrivals += trace_arrivals(fn, trace, seed=10 + i)

@@ -1,0 +1,25 @@
+"""Declarative control plane: FunctionSpec + reconciler over both fleets.
+
+Declare *what* to serve (``FunctionSpec``: profile table, SLO, demand
+source); the ``ControlPlane`` reconciles the fleet with paper Alg. 1
+through a thin ``Backend`` seam — ``SimBackend`` (discrete-event
+simulator) and ``LiveBackend`` (real JAX engines) run the same scheduler
+code.  See ``src/repro/control/README.md`` for the paper-symbol mapping.
+"""
+
+from repro.control.backend import Backend, LiveBackend, SimBackend
+from repro.control.plane import (ControlPlane, ReconcileEvent,
+                                 decision_signature)
+from repro.control.spec import FunctionSpec, RPSSource, ramp
+
+__all__ = [
+    "Backend",
+    "ControlPlane",
+    "FunctionSpec",
+    "LiveBackend",
+    "RPSSource",
+    "ReconcileEvent",
+    "SimBackend",
+    "decision_signature",
+    "ramp",
+]

@@ -1,0 +1,128 @@
+"""Backend protocol: the thin seam between the reconciler and a fleet.
+
+The ``ControlPlane`` never touches nodes, rectangles, or engines directly —
+it sees a fleet through four verbs:
+
+* ``place(spec, point)``   — deploy one instance at a profile point (MRA +
+  memory admission with spillover happen inside); returns the concrete pod
+  id, or None when no node can host it.
+* ``evict(spec, pod_id)``  — gracefully retire an instance: stop routing,
+  drain its in-flight decode slots, then release its rectangle and weight
+  refcount.
+* ``observed_rps(fn, w)``  — trailing-window arrival rate (used when the
+  spec declares no target-RPS source).
+* ``inflight(fn)``         — queued + slot-occupying requests (reported in
+  reconcile telemetry).
+
+Two implementations ship: ``SimBackend`` over the discrete-event
+``repro.core.cluster.Cluster`` and ``LiveBackend`` over the real JAX
+``repro.serving.frontend.ClusterFrontend``.  Both are deliberately thin —
+every scheduling decision lives in the shared ``ControlPlane``, which is
+what lets a live fleet be replayed through the simulator decision-for-
+decision.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Protocol, runtime_checkable
+
+from repro.control.spec import FunctionSpec
+from repro.core.scaling import ProfilePoint
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """What a fleet must expose to be reconciled."""
+
+    def register(self, spec: FunctionSpec) -> None: ...
+
+    def place(self, spec: FunctionSpec,
+              point: ProfilePoint) -> Optional[str]: ...
+
+    def evict(self, spec: FunctionSpec, pod_id: str) -> None: ...
+
+    def observed_rps(self, fn: str, window: float) -> float: ...
+
+    def inflight(self, fn: str) -> int: ...
+
+    def now(self) -> float: ...
+
+
+class SimBackend:
+    """Adapter: the discrete-event ``Cluster`` as a reconciler backend.
+
+    Pod ids are the cluster's own (``fn-N``); time is virtual
+    (``cluster.sim.now``); observed RPS comes from the cluster's arrival
+    log over virtual time.
+    """
+
+    def __init__(self, cluster: Any):
+        self.cluster = cluster
+
+    def register(self, spec: FunctionSpec) -> None:
+        if spec.curve is None:
+            raise ValueError(
+                f"spec {spec.name!r} needs a ServiceCurve for the simulator")
+        self.cluster.register_function(spec.name, spec.curve,
+                                       slo_latency=spec.slo_latency)
+
+    def place(self, spec: FunctionSpec,
+              point: ProfilePoint) -> Optional[str]:
+        # track=False: the ControlPlane owns the L_j capacity queue.
+        return self.cluster.deploy(spec.name, point,
+                                   elastic_limit=spec.elastic_limit,
+                                   track=False)
+
+    def evict(self, spec: FunctionSpec, pod_id: str) -> None:
+        # The pod can be gone already if its node failed mid-window.
+        if pod_id in self.cluster.pods:
+            self.cluster.retire(pod_id, drain=True)
+
+    def observed_rps(self, fn: str, window: float) -> float:
+        return self.cluster.observed_rps(fn, window)
+
+    def inflight(self, fn: str) -> int:
+        return self.cluster.inflight(fn)
+
+    def now(self) -> float:
+        return self.cluster.sim.now
+
+
+class LiveBackend:
+    """Adapter: the real JAX ``ClusterFrontend`` as a reconciler backend.
+
+    Pod ids are ``node:inst_id`` handles; time is wall-clock.  Models are
+    built once per spec at registration (``spec.model_factory``) and their
+    params shared zero-copy across instances by the per-node ModelStore.
+    """
+
+    def __init__(self, frontend: Any):
+        self.frontend = frontend
+        self._models: dict[str, tuple[Any, Any]] = {}
+
+    def register(self, spec: FunctionSpec) -> None:
+        if spec.model_factory is None:
+            raise ValueError(
+                f"spec {spec.name!r} needs a model_factory for live serving")
+        self._models[spec.name] = spec.model_factory()
+
+    def place(self, spec: FunctionSpec,
+              point: ProfilePoint) -> Optional[str]:
+        model, params = self._models[spec.name]
+        alloc = point.to_alloc(spec.elastic_limit)
+        return self.frontend.place_instance(
+            spec.name, model, params, alloc,
+            max_batch=spec.max_batch, max_len=spec.max_len,
+            batching=spec.batching, framework_bytes=spec.framework_bytes)
+
+    def evict(self, spec: FunctionSpec, pod_id: str) -> None:
+        self.frontend.evict(pod_id)
+
+    def observed_rps(self, fn: str, window: float) -> float:
+        return self.frontend.observed_rps(fn, window)
+
+    def inflight(self, fn: str) -> int:
+        return self.frontend.inflight(fn)
+
+    def now(self) -> float:
+        return self.frontend.now()

@@ -1,0 +1,189 @@
+"""Backend-agnostic reconciler: paper Alg. 1 converging a declared fleet.
+
+One ``reconcile(now)`` tick is the paper's closed loop:
+
+1. **Demand** — per function, read ``R_j`` from the spec's target-RPS
+   source (deterministic replay) or the backend's observed trailing-window
+   arrival rate, then inflate by the spec's headroom.
+2. **Gap** — ``ΔRPS_j = R_j - Σ_i T_{j,i}`` over the L_j capacity queue
+   (``processing_gap``).
+3. **Decide** — ``heuristic_scale`` (Alg. 1) filtered to SLO-feasible
+   profile points: bulk ``p_eff`` pods + one minimal-sufficient
+   ``p_ideal`` on scale-up; lowest-RPR victims on scale-down.
+4. **Converge** — scale-ups go through ``backend.place`` (MRA + memory
+   admission with node spillover); each provisional L_j reservation is
+   settled with ``confirm``/``abort`` so capacity never drifts above
+   reality.  Scale-downs go through ``backend.evict``, which drains the
+   victim's in-flight slots before releasing its rectangle and weight
+   refcount.  ``min/max_instances`` clamps are applied here, on top of
+   Alg. 1.
+
+Because every decision is computed here — the backend only places and
+evicts — the simulator and the live JAX data plane run literally the same
+scheduler code, and a live run can be replayed through the simulator
+decision-for-decision.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Iterable, Optional
+
+from repro.control.backend import Backend
+from repro.control.spec import FunctionSpec
+from repro.core.scaling import (FunctionPodQueue, ProfilePoint, ScaleDecision,
+                                heuristic_scale, processing_gap)
+
+
+def decision_signature(decisions: Iterable[ScaleDecision]
+                       ) -> list[tuple[str, int, float, float]]:
+    """Backend-independent fingerprint of a decision sequence.
+
+    Pod ids differ between backends (``fn-3`` vs ``1:fn/0``); what must
+    match when replaying a live run through the simulator is *what* was
+    scaled: (function, direction, S_p, Q_p) per decision, in order.
+    """
+    return [(d.function, d.direction, d.point.sm, d.point.quota)
+            for d in decisions]
+
+
+@dataclasses.dataclass
+class ReconcileEvent:
+    """Telemetry for one reconcile tick of one function."""
+
+    now: float
+    fn: str
+    target_rps: float
+    capacity_before: float
+    instances_before: int
+    inflight: int
+    applied: list[ScaleDecision] = dataclasses.field(default_factory=list)
+
+
+class ControlPlane:
+    """Declarative reconciler over any :class:`Backend`.
+
+    ``history`` bounds the retained telemetry (``log`` / ``events``) so a
+    long-lived control loop doesn't grow without bound.
+    """
+
+    def __init__(self, backend: Backend, history: int = 10_000):
+        self.backend = backend
+        self.specs: dict[str, FunctionSpec] = {}
+        self.queues: dict[str, FunctionPodQueue] = {}
+        # fn -> pod_id -> profile point, for every live instance we placed.
+        self.placed: dict[str, dict[str, ProfilePoint]] = {}
+        self.log: deque[ScaleDecision] = deque(maxlen=history)
+        self.events: deque[ReconcileEvent] = deque(maxlen=history)
+
+    # -- registration ------------------------------------------------------
+
+    def register(self, spec: FunctionSpec) -> None:
+        """Declare a function and bring up its ``min_instances`` floor at
+        the most efficient SLO-feasible profile point.
+
+        All-or-nothing: a failed bring-up evicts whatever it placed and
+        unregisters the spec, so the caller can retry cleanly.
+        """
+        if spec.name in self.specs:
+            raise ValueError(f"function {spec.name!r} already registered")
+        self.backend.register(spec)
+        self.specs[spec.name] = spec
+        self.queues[spec.name] = FunctionPodQueue()
+        self.placed[spec.name] = {}
+        point = spec.best_point()
+        for _ in range(spec.min_instances):
+            if self._place(spec, point) is None:
+                for pod_id in list(self.placed[spec.name]):
+                    self.backend.evict(spec, pod_id)
+                del self.specs[spec.name]
+                del self.queues[spec.name]
+                del self.placed[spec.name]
+                raise RuntimeError(
+                    f"cannot bring up min_instances={spec.min_instances} "
+                    f"for {spec.name!r}: no node admits {point}")
+
+    def _place(self, spec: FunctionSpec,
+               point: ProfilePoint) -> Optional[str]:
+        real = self.backend.place(spec, point)
+        if real is not None:
+            self.queues[spec.name].push(real, point)
+            self.placed[spec.name][real] = point
+        return real
+
+    # -- introspection -----------------------------------------------------
+
+    def instances(self, fn: str) -> int:
+        return len(self.placed[fn])
+
+    def capacity(self, fn: str) -> float:
+        return self.queues[fn].capacity()
+
+    # -- the loop ----------------------------------------------------------
+
+    def reconcile(self, now: Optional[float] = None) -> list[ScaleDecision]:
+        """One Alg.-1 tick over every registered function.
+
+        ``now`` defaults to the backend clock; pass explicit ticks to make
+        live and simulated runs comparable (their clocks differ, their
+        decisions must not).
+        """
+        if now is None:
+            now = self.backend.now()
+        demand: dict[str, float] = {}
+        pre: dict[str, ReconcileEvent] = {}
+        for fn, spec in self.specs.items():
+            rps = (spec.target_rps(now) if spec.target_rps is not None
+                   else self.backend.observed_rps(fn, spec.rps_window))
+            demand[fn] = rps * spec.headroom
+            pre[fn] = ReconcileEvent(
+                now=now, fn=fn, target_rps=rps,
+                capacity_before=self.queues[fn].capacity(),
+                instances_before=len(self.placed[fn]),
+                inflight=self.backend.inflight(fn))
+        gaps = processing_gap(demand, self.queues)
+        # SLO feasibility is filtered once, by the spec (the same filter
+        # best_point() used at registration) — heuristic_scale's own
+        # slo_latency re-filter stays for legacy Cluster.autoscale callers.
+        profiles = {fn: s.feasible_points() for fn, s in self.specs.items()}
+        decisions = heuristic_scale(gaps, profiles, self.queues)
+        applied: list[ScaleDecision] = []
+        for d in decisions:
+            spec = self.specs[d.function]
+            queue = self.queues[d.function]
+            live = self.placed[d.function]
+            if d.direction > 0:
+                if len(live) >= spec.max_instances:
+                    queue.abort(d.pod_id)  # fleet-size ceiling
+                    continue
+                real = self.backend.place(spec, d.point)
+                if real is None:
+                    queue.abort(d.pod_id)  # no node admits it
+                    continue
+                queue.confirm(d.pod_id, real)
+                live[real] = d.point
+                applied.append(dataclasses.replace(d, pod_id=real))
+            else:
+                assert d.pod_id is not None
+                if len(live) <= spec.min_instances:
+                    # Alg. 1 popped the victim; fleet floor puts it back.
+                    queue.push(d.pod_id, d.point)
+                    continue
+                self.backend.evict(spec, d.pod_id)
+                live.pop(d.pod_id, None)
+                applied.append(d)
+        # Heal below-floor fleets (a pod died, or an earlier bring-up was
+        # capacity-starved): the floor is declared state, not a one-shot.
+        for fn, spec in self.specs.items():
+            while len(self.placed[fn]) < spec.min_instances:
+                point = spec.best_point()
+                real = self._place(spec, point)
+                if real is None:
+                    break  # still no capacity; retry next tick
+                applied.append(ScaleDecision(fn, point, +1, pod_id=real))
+        for d in applied:
+            pre[d.function].applied.append(d)
+        self.events.extend(pre.values())
+        self.log.extend(applied)
+        return applied

@@ -1,0 +1,121 @@
+"""Declarative per-function serving contract (``FunctionSpec``).
+
+A spec is everything the control plane needs to serve one function — the
+paper's per-function inputs to Alg. 1 gathered into a single declarative
+object instead of imperative ``deploy()`` arguments:
+
+* the **profile table** ``P_j = {<F_j, S_p, Q_p, T_p>}`` from the
+  FaST-Profiler (``ProfilePoint``s, each with a measured p99),
+* the **latency SLO** used to filter profile points to the feasible set,
+* the **target-RPS source** ``R_j`` (a trace / predictor callable, or None
+  to observe arrivals from the backend),
+* data-plane options (model factory, batching mode, slot pool size) for
+  the live backend, and the calibrated ``ServiceCurve`` for the simulator.
+
+The same spec object drives both backends; that is what makes the
+"replay the live fleet through the simulator" workflow possible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence
+
+from repro.core.scaling import ProfilePoint
+from repro.core.workload import ServiceCurve
+
+# A target-RPS source: virtual-or-wall time -> offered requests/second.
+RPSSource = Callable[[float], float]
+
+DEFAULT_FRAMEWORK_BYTES = 64 * 1024 * 1024
+
+
+def ramp(steps: Sequence[tuple[float, float]]) -> RPSSource:
+    """Piecewise-constant RPS schedule ``[(t_start, rps), ...]``.
+
+    The canonical deterministic target-RPS source: both backends see the
+    identical demand signal, so their scale-decision sequences can be
+    compared bit-for-bit.
+    """
+    ordered = sorted(steps)
+
+    def source(now: float) -> float:
+        rps = 0.0
+        for t0, r in ordered:
+            if now >= t0:
+                rps = r
+            else:
+                break
+        return rps
+
+    return source
+
+
+@dataclasses.dataclass(frozen=True)
+class FunctionSpec:
+    """Declarative serving contract for one function.
+
+    Attributes:
+      name: function id ``F_j``.
+      profile: FaST-Profiler table ``P_j`` — one ``ProfilePoint`` per
+        profiled ``(S_p, Q_p)`` allocation, with measured throughput
+        ``T_p`` and p99 latency.
+      slo_latency: latency SLO ``L_j`` in seconds; profile points whose
+        measured p99 exceeds it are infeasible for Alg. 1.  None =
+        best-effort.
+      target_rps: demand source ``R_j(t)``; None means the reconciler asks
+        the backend for the observed trailing-window arrival rate.
+      rps_window: trailing horizon (seconds) for observed-RPS estimation.
+      headroom: capacity over-provisioning factor (target utilization
+        ``1/headroom``) so queueing delay stays bounded at the SLO.
+      min_instances / max_instances: fleet-size clamps enforced by the
+        reconciler on top of Alg. 1's decisions.
+      elastic_limit: ``Q_limit`` for scaled-up pods (§3.3.2 elastic quota);
+        None keeps ``Q_limit == Q_request``.
+      model_factory: live backend only — builds ``(model, params)`` once at
+        registration; instances share the params via the node ModelStore.
+      max_batch / max_len / batching: live instance decode-slot options.
+      framework_bytes: per-instance runtime footprint charged by memory
+        admission on the live path.
+      curve: simulator backend only — the calibrated ``ServiceCurve``.
+    """
+
+    name: str
+    profile: tuple[ProfilePoint, ...]
+    slo_latency: Optional[float] = None
+    target_rps: Optional[RPSSource] = None
+    rps_window: float = 2.0
+    headroom: float = 1.2
+    min_instances: int = 1
+    max_instances: int = 32
+    elastic_limit: Optional[float] = 1.0
+    model_factory: Optional[Callable[[], tuple[Any, Any]]] = None
+    max_batch: int = 4
+    max_len: int = 64
+    batching: str = "continuous"
+    framework_bytes: int = DEFAULT_FRAMEWORK_BYTES
+    curve: Optional[ServiceCurve] = None
+
+    def __post_init__(self) -> None:
+        if not self.profile:
+            raise ValueError(f"spec {self.name!r} needs a profile table")
+        if not (0 <= self.min_instances <= self.max_instances):
+            raise ValueError(
+                f"need 0 <= min_instances <= max_instances, got "
+                f"{self.min_instances}, {self.max_instances}")
+        if self.batching not in ("continuous", "static"):
+            raise ValueError(f"unknown batching mode {self.batching!r}")
+        if self.headroom < 1.0:
+            raise ValueError("headroom < 1 provisions below offered load")
+
+    def feasible_points(self) -> list[ProfilePoint]:
+        """Profile points meeting the SLO (all points when none do, so the
+        scaler can degrade gracefully instead of dropping traffic)."""
+        if self.slo_latency is None:
+            return list(self.profile)
+        ok = [p for p in self.profile if p.p99_latency <= self.slo_latency]
+        return ok or list(self.profile)
+
+    def best_point(self) -> ProfilePoint:
+        """Most efficient SLO-feasible point: ``argmax_p RPR``."""
+        return max(self.feasible_points(), key=lambda p: p.rpr)

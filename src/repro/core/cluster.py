@@ -21,6 +21,7 @@ Fault-tolerance features exercised here (large-scale runnability):
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import heapq
 import itertools
@@ -34,7 +35,7 @@ from repro.core.model_sharing import MemoryModel
 from repro.core.resources import Alloc
 from repro.core.scaling import (FunctionPodQueue, ProfilePoint, ScaleDecision,
                                 heuristic_scale, processing_gap)
-from repro.core.slo import SLORecorder
+from repro.core.slo import SLORecorder, observed_rate, record_arrival
 from repro.core.workload import Request, ServiceCurve
 
 
@@ -195,6 +196,8 @@ class Cluster:
         self.recorders: dict[str, SLORecorder] = {}
         self._rr: dict[str, int] = {}
         self._pod_seq = itertools.count()
+        self._arrival_log: dict[str, list[float]] = {}
+        self._rps_horizon: dict[str, float] = {}
         self.dropped = 0
         self.rescheduled = 0
         # Periodic scheduler pump so window rolls release blocked pods.
@@ -282,6 +285,13 @@ class Cluster:
             self.submit(r)
 
     def _arrive(self, req: Request) -> None:
+        record_arrival(self._arrival_log, self._rps_horizon, req.fn,
+                       self.sim.now)
+        self._route(req)
+
+    def _route(self, req: Request) -> None:
+        """Route without logging an arrival (re-injection after failures
+        must not inflate the observed-RPS signal)."""
         pods = [p for p in self.fn_pods.get(req.fn, ())
                 if not self.pods[p].retired]
         if not pods:
@@ -409,15 +419,16 @@ class Cluster:
         applied: list[ScaleDecision] = []
         for d in decisions:
             if d.direction > 0:
-                # Alg. 1 pushed a provisional entry under d.pod_id; swap it
-                # for the real pod (or drop it when placement fails).
+                # Alg. 1 reserved capacity under a provisional id; settle the
+                # reservation against the deployer's outcome so L_j capacity
+                # never drifts above what is actually running.
                 queue = self.fn_queues[d.function]
-                queue.remove(d.pod_id)
                 real = self.deploy(d.function, d.point,
                                    elastic_limit=elastic_limit, track=False)
                 if real is None:
+                    queue.abort(d.pod_id)
                     continue
-                queue.push(real, d.point)
+                queue.confirm(d.pod_id, real)
                 applied.append(d)
             else:
                 assert d.pod_id is not None
@@ -455,9 +466,10 @@ class Cluster:
             if new_id is not None:
                 replaced += 1
         self.rescheduled += len(displaced)
-        # Re-inject stranded requests at the current time.
+        # Re-inject stranded requests at the current time (no arrival log:
+        # they were already counted when they first arrived).
         for r in strays:
-            self._arrive(dataclasses.replace(r, arrival=r.arrival))
+            self._route(dataclasses.replace(r, arrival=r.arrival))
         return replaced
 
     def detect_stragglers(self, threshold: float = 2.0) -> list[int]:
@@ -488,13 +500,28 @@ class Cluster:
                 if self.deploy(pod.fn, pod.point) is not None:
                     moved += 1
                 for r in strays:
-                    self._arrive(r)
+                    self._route(r)
         return moved
 
     # -- metrics ---------------------------------------------------------------
 
     def run(self, until: float) -> None:
         self.sim.run(until)
+
+    def observed_rps(self, fn: str, window: float) -> float:
+        """Arrival rate over the trailing ``window`` of virtual time — the
+        simulator's analogue of gateway-side RPS observation."""
+        return observed_rate(self._arrival_log, self._rps_horizon,
+                             fn, window, self.sim.now)
+
+    def inflight(self, fn: str) -> int:
+        """Queued + live slot-occupying requests across the function's
+        pods, draining (retired) ones included — matching the live
+        frontend's count.  Finished members lingering in a static batch
+        don't count."""
+        return sum(len(pod.queue)
+                   + sum(1 for s in pod.slots if s.remaining > 0)
+                   for pod in self.pods.values() if pod.fn == fn)
 
     def gpu_utilization(self, last_n: int = 10) -> float:
         live = [n for n in self.nodes if n.alive and n.pods]

@@ -140,3 +140,34 @@ def profile_function(
             db.add(curve.name, simulate_trial(curve, sm, quota,
                                               duration=duration))
     return db
+
+
+def profile_points(
+    curve: ServiceCurve,
+    *,
+    spatial: Sequence[float] = (0.12, 0.24, 0.5),
+    temporal: Sequence[float] = (0.4, 1.0),
+    duration: float = 12.0,
+    loaded_factor: float = 0.8,
+    seed: int = 0,
+) -> list[ProfilePoint]:
+    """Spec-ready profile table: ``{<F_j, S_p, Q_p, T_p>}`` with SLO p99s.
+
+    Per grid cell, two Trials: a *saturating* probe for capacity ``T_p``
+    (the throughput Alg. 1 budgets with) and a *loaded* probe at
+    ``loaded_factor`` of the analytic rate for the p99 latency (the SLO
+    filter must see service latency under realistic load, not the queueing
+    blow-up of the saturation probe).  The merged points feed
+    ``repro.control.FunctionSpec.profile`` directly.
+    """
+    points: list[ProfilePoint] = []
+    for sm in spatial:
+        for quota in temporal:
+            cap = simulate_trial(curve, sm, quota, duration=duration,
+                                 seed=seed)
+            lat = simulate_trial(curve, sm, quota, duration=duration,
+                                 overload_factor=loaded_factor, seed=seed)
+            points.append(ProfilePoint(sm=sm, quota=quota,
+                                       throughput=cap.throughput,
+                                       p99_latency=lat.p99))
+    return points

@@ -66,19 +66,53 @@ class _RunningPod:
 
 
 class FunctionPodQueue:
-    """Per-function priority queue L_j, ascending RPR (Alg. 1 input)."""
+    """Per-function priority queue L_j, ascending RPR (Alg. 1 input).
+
+    Scale-up entries start *provisional*: Alg. 1 reserves capacity under a
+    fresh pod id before any deployer has run, so repeated gap computations
+    don't double-provision.  The deployer then settles each reservation with
+    :meth:`confirm` (placement succeeded — re-key to the real pod id) or
+    :meth:`abort` (placement failed — drop the reservation), keeping
+    ``capacity()`` from drifting above what is actually running.
+    """
 
     def __init__(self) -> None:
         self._heap: list[_RunningPod] = []
+        self._ids: set[str] = set()  # pushed and not yet removed/popped
         self._dead: set[str] = set()
         self._seq = itertools.count()
+        self._provisional: dict[str, ProfilePoint] = {}
 
     def push(self, pod_id: str, point: ProfilePoint) -> None:
+        self._ids.add(pod_id)
         heapq.heappush(self._heap, _RunningPod(point.rpr, next(self._seq),
                                                pod_id, point))
 
+    def push_provisional(self, pod_id: str, point: ProfilePoint) -> None:
+        """Reserve capacity for a pod the deployer has not placed yet."""
+        self._provisional[pod_id] = point
+        self.push(pod_id, point)
+
+    def confirm(self, provisional_id: str, real_id: str) -> None:
+        """Placement succeeded: swap the reservation for the real pod id."""
+        point = self._provisional.pop(provisional_id)
+        self.remove(provisional_id)
+        self.push(real_id, point)
+
+    def abort(self, provisional_id: str) -> None:
+        """Placement failed: release the reserved capacity."""
+        self._provisional.pop(provisional_id)
+        self.remove(provisional_id)
+
+    def provisional_ids(self) -> set[str]:
+        return set(self._provisional)
+
     def remove(self, pod_id: str) -> None:
-        self._dead.add(pod_id)
+        # No-op for ids never pushed (e.g. untracked pods a shared teardown
+        # path retires) — a lazy tombstone for them would never be GC'd.
+        if pod_id in self._ids:
+            self._ids.discard(pod_id)
+            self._dead.add(pod_id)
 
     def _gc(self) -> None:
         while self._heap and self._heap[0].pod_id in self._dead:
@@ -90,7 +124,9 @@ class FunctionPodQueue:
 
     def pop(self) -> _RunningPod:
         self._gc()
-        return heapq.heappop(self._heap)
+        pod = heapq.heappop(self._heap)
+        self._ids.discard(pod.pod_id)
+        return pod
 
     def __len__(self) -> int:
         self._gc()
@@ -113,6 +149,12 @@ def heuristic_scale(
     ``slo_latency`` optionally filters profile points whose measured p99
     exceeds the function's SLO — a point that violates latency cannot be used
     no matter how efficient (FaST-Profiler records latency for exactly this).
+
+    Scale-up entries are pushed as *provisional* reservations; the caller
+    must settle each one with ``queue.confirm(pod_id, real_id)`` once the
+    deployer places the pod, or ``queue.abort(pod_id)`` when placement
+    fails, before the next scaling pass reads ``capacity()``.  Scale-down
+    decisions pop concrete running pods; the caller evicts them.
     """
     cfgs: list[ScaleDecision] = []
     for fn, gap in delta_rps.items():
@@ -133,7 +175,7 @@ def heuristic_scale(
             for _ in range(n):
                 pid = _fresh_pod_id(fn)
                 cfgs.append(ScaleDecision(fn, p_eff, +1, pod_id=pid))
-                queue.push(pid, p_eff)
+                queue.push_provisional(pid, p_eff)
             if r > 0:
                 # Minimal sufficient residual config: argmin (T_p - r), T_p > r.
                 candidates = [p for p in points if p.throughput > r]
@@ -143,7 +185,7 @@ def heuristic_scale(
                     p_ideal = p_eff
                 pid = _fresh_pod_id(fn)
                 cfgs.append(ScaleDecision(fn, p_ideal, +1, pod_id=pid))
-                queue.push(pid, p_ideal)
+                queue.push_provisional(pid, p_ideal)
         else:
             delta_r = gap
             while delta_r < 0 and len(queue) > 0:

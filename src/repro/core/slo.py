@@ -9,6 +9,43 @@ from typing import Optional
 import numpy as np
 
 
+def record_arrival(log: dict[str, list[float]], horizons: dict[str, float],
+                   fn: str, now: float, retention: float = 60.0) -> None:
+    """Append an arrival timestamp with append-side pruning.
+
+    Entries older than the largest observation window asked of ``fn`` (or
+    ``retention``, whichever is larger) are dropped opportunistically, so
+    the log stays bounded even when nobody ever polls ``observed_rate``
+    (e.g. a spec with an explicit target-RPS source).
+    """
+    ts = log.setdefault(fn, [])
+    ts.append(now)
+    horizon = max(horizons.get(fn, 0.0), retention)
+    if len(ts) > 1024 and ts[0] < now - 2 * horizon:
+        del ts[:bisect.bisect_right(ts, now - horizon)]
+
+
+def observed_rate(log: dict[str, list[float]], horizons: dict[str, float],
+                  fn: str, window: float, now: float) -> float:
+    """Trailing-window event rate over a per-function timestamp log.
+
+    Prunes opportunistically: timestamps older than the largest window
+    ever asked of ``fn`` are dropped, so long-lived gateways don't grow
+    their arrival logs without bound.
+    """
+    if window <= 0:
+        return 0.0
+    ts = log.get(fn)
+    if not ts:
+        return 0.0
+    horizons[fn] = max(window, horizons.get(fn, 0.0))
+    cut = bisect.bisect_right(ts, now - horizons[fn])
+    if cut:
+        del ts[:cut]
+    lo = bisect.bisect_right(ts, now - window)
+    return (len(ts) - lo) / window
+
+
 @dataclasses.dataclass
 class SLORecorder:
     """Streaming latency recorder for one function."""

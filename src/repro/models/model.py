@@ -66,9 +66,17 @@ class Model:
                                                 ctx=ctx, remat=remat,
                                                 train=train)
 
-    def prefill(self, params, tokens, *, max_len=None, ctx=None):
+    def prefill(self, params, tokens, *, max_len=None, ctx=None, length=None):
+        kw = {} if length is None else {"length": length}
         return _FAMILY[self.cfg.family].prefill(params, tokens, self.cfg,
-                                                max_len=max_len, ctx=ctx)
+                                                max_len=max_len, ctx=ctx,
+                                                **kw)
+
+    def supports_bucketed_prefill(self) -> bool:
+        """Whether ``prefill(..., length=n)`` can consume right-padded
+        prompts (full per-position caches only; see transformer.prefill)."""
+        return (self.cfg.family in ("dense", "moe")
+                and self.cfg.sliding_window is None)
 
     def decode_step(self, params, token, cache):
         return _FAMILY[self.cfg.family].decode_step(params, token, cache,

@@ -311,11 +311,24 @@ def _full_cache(k: jax.Array, max_len: int) -> jax.Array:
 
 
 def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig, *,
-            max_len: Optional[int] = None, ctx: Optional[jax.Array] = None
-            ) -> tuple[jax.Array, dict]:
-    """Run the prompt; returns (last-position logits (B,V), cache dict)."""
+            max_len: Optional[int] = None, ctx: Optional[jax.Array] = None,
+            length: Optional[jax.Array] = None) -> tuple[jax.Array, dict]:
+    """Run the prompt; returns (last-position logits (B,V), cache dict).
+
+    ``length`` (traced scalar) enables *length-masked* prefill for bucketed
+    padding: ``tokens`` may be right-padded beyond the true prompt length,
+    logits are read at position ``length - 1`` and the cache position is set
+    to ``length``.  Pad rows write garbage K/V beyond ``length``, but decode
+    masks the cache at ``pos + 1`` and overwrites those rows token by token,
+    so they are never attended.  Only full (non-windowed) caches support
+    this: a rolled sliding-window cache folds pad rows into real ones.
+    """
     b, s = tokens.shape
     max_len = max_len or s
+    if length is not None and (cfg.family == "vlm"
+                               or cfg.sliding_window is not None):
+        raise NotImplementedError(
+            "length-masked prefill requires full (non-windowed) caches")
     x = embed_tokens(params, tokens, cfg)
     positions = jnp.arange(s)
     flags, gslots = _layer_flags(cfg)
@@ -407,7 +420,13 @@ def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig, *,
         cache = {"k": ks, "v": vs, "pos": jnp.full((), s, jnp.int32)}
     if dual:
         cache["global_k"], cache["global_v"] = gk, gv
-    logits = lm_head(params, x[:, -1:, :], cfg)[:, 0]
+    if length is None:
+        last = x[:, -1:, :]
+    else:
+        n = jnp.asarray(length, jnp.int32)
+        last = jax.lax.dynamic_slice_in_dim(x, n - 1, 1, axis=1)
+        cache["pos"] = jnp.asarray(n, jnp.int32)
+    logits = lm_head(params, last, cfg)[:, 0]
     return logits, cache
 
 

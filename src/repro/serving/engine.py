@@ -45,6 +45,11 @@ from repro.core.slo import SLORecorder
 from repro.models.model import Model
 
 
+def _bucket_len(n: int) -> int:
+    """Smallest power of two >= n (prefill padding bucket)."""
+    return 1 << max(n - 1, 0).bit_length()
+
+
 @dataclasses.dataclass
 class ServeRequest:
     req_id: int
@@ -68,7 +73,8 @@ class FunctionInstance:
 
     def __init__(self, inst_id: str, model: Model, store: ModelStore,
                  weights_key: str, alloc: Alloc, *, max_batch: int = 4,
-                 max_len: int = 64, batching: str = "continuous"):
+                 max_len: int = 64, batching: str = "continuous",
+                 prefill_buckets: bool = True):
         if batching not in ("continuous", "static"):
             raise ValueError(f"unknown batching mode {batching!r}")
         self.inst_id = inst_id
@@ -83,9 +89,18 @@ class FunctionInstance:
         self.queue: deque[ServeRequest] = deque()
         self._prefill = jax.jit(
             lambda p, t: model.prefill(p, t, max_len=max_len))
+        # Bucketed chunked admission: prompts are right-padded to power-of-
+        # two buckets so the jitted prefill sees O(log max_len) distinct
+        # shapes instead of one per prompt length (each a recompile).
+        self.bucketed = (batching == "continuous" and prefill_buckets
+                         and model.supports_bucketed_prefill())
+        self._prefill_len = jax.jit(
+            lambda p, t, n: model.prefill(p, t, max_len=max_len, length=n)
+        ) if self.bucketed else None
         self._decode = jax.jit(model.decode_step)
         self._merge = jax.jit(model.merge_slot)
         self.steps = 0
+        self.retired = False  # draining: no new routing, slots finish
         # continuous state: slot i holds the request decoding in cache row i.
         self.slots: list[Optional[ServeRequest]] = [None] * max_batch
         self._slot_tok = np.zeros((max_batch,), np.int32)
@@ -115,6 +130,20 @@ class FunctionInstance:
 
     # -- continuous path ---------------------------------------------------
 
+    def _prefill_one(self, prompt: np.ndarray):
+        """Prefill one prompt, right-padded to its bucket when enabled."""
+        n = int(prompt.shape[0])
+        if self.bucketed and n < self.max_len:
+            pl = min(_bucket_len(n), self.max_len)
+            if pl > n:
+                padded = np.zeros((pl,), np.int32)
+                padded[:n] = prompt
+                prompt = padded
+            return self._prefill_len(self.params,
+                                     jnp.asarray(prompt[None], jnp.int32),
+                                     jnp.int32(n))
+        return self._prefill(self.params, jnp.asarray(prompt[None], jnp.int32))
+
     def _admit(self) -> list[ServeRequest]:
         """Chunked admission: prefill queued requests one at a time into
         free slots and merge their caches into the live decode batch."""
@@ -126,8 +155,7 @@ class FunctionInstance:
             if self.slots[slot] is not None or not self.queue:
                 continue
             req = self.queue.popleft()
-            logits, entry = self._prefill(
-                self.params, jnp.asarray(req.prompt[None], jnp.int32))
+            logits, entry = self._prefill_one(req.prompt)
             tok = int(self._clip_tok(
                 np.asarray(jnp.argmax(logits, axis=-1), np.int32))[0])
             req.tokens_out.append(tok)
@@ -245,38 +273,75 @@ class ServingEngine:
         self.instances: dict[str, FunctionInstance] = {}
         self.recorders: dict[str, SLORecorder] = {}
         self._req_ids = itertools.count()
+        self._inst_seq = itertools.count()
         self._t0 = time.perf_counter()
+        # Scale-down hook: called with the instance id once a retired
+        # instance has fully drained and released its resources (the
+        # frontend uses it to release the MRA rectangle).
+        self.on_instance_closed: Optional[Any] = None
 
     def now(self) -> float:
         return time.perf_counter() - self._t0
 
     def deploy(self, fn: str, model: Model, params: Any, alloc: Alloc, *,
                n_instances: int = 1, max_batch: int = 4, max_len: int = 64,
-               batching: str = "continuous") -> list[str]:
+               batching: str = "continuous",
+               prefill_buckets: bool = True) -> list[str]:
         if fn not in self.recorders:
             self.recorders[fn] = SLORecorder(fn=fn)
         if not self.store.contains(fn):
             self.store.store(fn, params)
         ids = []
-        base = sum(1 for k in self.instances if k.startswith(fn + "/"))
-        for i in range(n_instances):
-            inst_id = f"{fn}/{base + i}"
+        for _ in range(n_instances):
+            inst_id = f"{fn}/{next(self._inst_seq)}"
             inst = FunctionInstance(inst_id, model, self.store, fn, alloc,
                                     max_batch=max_batch, max_len=max_len,
-                                    batching=batching)
+                                    batching=batching,
+                                    prefill_buckets=prefill_buckets)
             self.instances[inst_id] = inst
             self.scheduler.register(inst_id, alloc)
             ids.append(inst_id)
         return ids
+
+    # -- scale-down (graceful drain) ---------------------------------------
+
+    def retire(self, inst_id: str,
+               strip_queue: bool = True) -> list[ServeRequest]:
+        """Stop routing to an instance; returns its queued (not yet
+        admitted) requests for the caller to re-route.  Occupied decode
+        slots keep decoding under the token scheduler until they finish;
+        the instance then closes (weights refcount released, scheduler
+        deregistered) and ``on_instance_closed`` fires.
+
+        ``strip_queue=False`` keeps queued requests with the instance — for
+        the last replica of a function, which must drain its own queue
+        before closing (there is nowhere to re-route)."""
+        inst = self.instances[inst_id]
+        inst.retired = True
+        strays: list[ServeRequest] = []
+        if strip_queue:
+            strays = list(inst.queue)
+            inst.queue.clear()
+        if not inst.has_work():
+            self._close(inst_id)
+        return strays
+
+    def _close(self, inst_id: str) -> None:
+        inst = self.instances.pop(inst_id)
+        self.scheduler.deregister(inst_id)
+        inst.close()
+        if self.on_instance_closed is not None:
+            self.on_instance_closed(inst_id)
 
     def submit(self, fn: str, prompt: np.ndarray, max_new_tokens: int = 8
                ) -> ServeRequest:
         req = ServeRequest(req_id=next(self._req_ids), prompt=prompt,
                            max_new_tokens=max_new_tokens,
                            submitted_at=self.now())
-        # Join-shortest-queue across the function's instances.
+        # Join-shortest-queue across the function's live instances
+        # (retired ones are draining and take no new work).
         candidates = [v for k, v in self.instances.items()
-                      if k.startswith(fn + "/")]
+                      if k.startswith(fn + "/") and not v.retired]
         if not candidates:
             raise KeyError(f"function {fn} has no instances")
         inst = min(candidates, key=lambda i: i.load())
@@ -292,7 +357,7 @@ class ServingEngine:
         deadline = time.perf_counter() + budget_s
         while time.perf_counter() < deadline:
             any_work = False
-            for inst_id, inst in self.instances.items():
+            for inst_id, inst in list(self.instances.items()):
                 if inst.has_work():
                     any_work = True
                     self.scheduler.request_token(inst_id, self.now())
@@ -318,6 +383,8 @@ class ServingEngine:
                     self.recorders[fn].record(r.finished_at - r.submitted_at,
                                               r.finished_at)
                     completed += 1
+                if inst.retired and not inst.has_work():
+                    self._close(token.pod_id)  # drained: release resources
         return completed
 
     def memory_bytes(self) -> int:

@@ -1,7 +1,7 @@
 """Multi-engine frontend: the live analogue of ``repro.core.cluster``.
 
 ``ClusterFrontend`` routes requests across N ``ServingEngine`` nodes so the
-real JAX data plane finally exercises the simulator's full stack:
+real JAX data plane exercises the simulator's full stack:
 
 * **Placement** — function instances are bound to nodes by the same
   ``MaxRectsPool`` (paper Alg. 2) the simulator uses: each instance's
@@ -13,6 +13,15 @@ real JAX data plane finally exercises the simulator's full stack:
   ``Cluster._arrive``.
 * **Dispatch** — ``pump`` interleaves the per-node token schedulers
   (FaST-Manager, one per engine) until the fleet is idle.
+* **Scale-down** — ``evict`` retires one instance: its queued requests are
+  re-routed to surviving replicas, its occupied decode slots drain under
+  the token scheduler, and only then are its MRA rectangle and weight
+  refcount released (zero dropped in-flight requests).
+
+The frontend is one of the two ``repro.control`` backends: the
+``ControlPlane`` reconciler drives ``place_instance`` / ``evict`` /
+``observed_rps`` / ``inflight`` so the live fleet and the simulator run
+literally the same Alg.-1 scheduler code.
 
 Weights are shared *per node*: deploying the same function on two nodes
 stores one param pytree in each node's ``ModelStore``; instances within a
@@ -22,7 +31,9 @@ node alias it zero-copy.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
+import time
 from typing import Any, Optional
 
 import numpy as np
@@ -30,6 +41,7 @@ import numpy as np
 from repro.core.maximal_rectangles import MaxRectsPool, Placement
 from repro.core.model_sharing import MemoryModel, pytree_nbytes
 from repro.core.resources import Alloc
+from repro.core.slo import observed_rate, record_arrival
 from repro.models.model import Model
 from repro.serving.engine import ServeRequest, ServingEngine
 
@@ -56,11 +68,20 @@ class ClusterFrontend:
         if n_nodes <= 0:
             raise ValueError("need at least one node")
         self.engines = [ServingEngine(window=window) for _ in range(n_nodes)]
+        for i, eng in enumerate(self.engines):
+            eng.on_instance_closed = functools.partial(
+                self._instance_closed, i)
         self.pool = MaxRectsPool(n_nodes, allow_grow=False)
         self.mem_bytes = mem_bytes
         self.placements: list[InstancePlacement] = []
         self._fn_mm: dict[str, MemoryModel] = {}
         self._pod_seq = itertools.count()
+        self._arrival_log: dict[str, list[float]] = {}
+        self._rps_horizon: dict[str, float] = {}
+        self._t0 = time.perf_counter()
+
+    def now(self) -> float:
+        return time.perf_counter() - self._t0
 
     # -- memory admission (same closed form as core.cluster.Node) ---------
 
@@ -84,37 +105,72 @@ class ClusterFrontend:
 
     # -- deployment --------------------------------------------------------
 
+    def place_instance(self, fn: str, model: Model, params: Any,
+                       alloc: Alloc, *, max_batch: int = 4, max_len: int = 64,
+                       batching: str = "continuous",
+                       framework_bytes: int = DEFAULT_FRAMEWORK_BYTES
+                       ) -> Optional[str]:
+        """Place ONE instance via MRA + memory admission with spillover.
+
+        Returns a ``node:inst_id`` handle, or None when no node has both a
+        free rectangle and the memory headroom.  On engine failure after a
+        successful rectangle reservation, the rectangle (and a freshly
+        created ``MemoryModel`` entry) is rolled back instead of leaking.
+        """
+        created_mm = fn not in self._fn_mm
+        mm = self._fn_mm.setdefault(
+            fn, MemoryModel(weight_bytes=pytree_nbytes(params),
+                            framework_bytes=framework_bytes))
+
+        def rollback_mm() -> None:
+            if created_mm and not any(p.fn == fn for p in self.placements):
+                del self._fn_mm[fn]
+
+        pod_id = f"{fn}-{next(self._pod_seq)}"
+        excluded: set[int] = set()
+        while True:
+            placement = self.pool.schedule(alloc, pod_id, exclude=excluded)
+            if placement is None:
+                rollback_mm()
+                return None
+            if self.admits(placement.node, fn, mm):
+                break
+            # Spillover: rectangle fit but memory admission failed on this
+            # node — release and retry the remaining nodes.
+            self.pool.release(placement)
+            excluded.add(placement.node)
+        try:
+            inst_id = self.engines[placement.node].deploy(
+                fn, model, params, alloc, n_instances=1,
+                max_batch=max_batch, max_len=max_len, batching=batching)[0]
+        except Exception:
+            # The rectangle was reserved before the engine ran; a failed
+            # deploy must not leak it (or a provisional memory-model entry).
+            self.pool.release(placement)
+            rollback_mm()
+            raise
+        self.placements.append(InstancePlacement(
+            fn=fn, inst_id=inst_id, node=placement.node,
+            placement=placement))
+        return f"{placement.node}:{inst_id}"
+
     def deploy(self, fn: str, model: Model, params: Any, alloc: Alloc, *,
                n_instances: int = 1, max_batch: int = 4, max_len: int = 64,
                batching: str = "continuous",
                framework_bytes: int = DEFAULT_FRAMEWORK_BYTES) -> list[str]:
         """Place ``n_instances`` of ``fn`` across the fleet via MRA +
         memory admission; returns ``node:inst_id`` handles."""
-        mm = self._fn_mm.setdefault(
-            fn, MemoryModel(weight_bytes=pytree_nbytes(params),
-                            framework_bytes=framework_bytes))
         handles = []
         for _ in range(n_instances):
-            pod_id = f"{fn}-{next(self._pod_seq)}"
-            excluded: set[int] = set()
-            while True:
-                placement = self.pool.schedule(alloc, pod_id,
-                                               exclude=excluded)
-                if placement is None:
-                    raise RuntimeError(
-                        f"no node can host {fn} at alloc {alloc} "
-                        f"(rectangles or memory exhausted)")
-                if self.admits(placement.node, fn, mm):
-                    break
-                self.pool.release(placement)
-                excluded.add(placement.node)
-            inst_id = self.engines[placement.node].deploy(
-                fn, model, params, alloc, n_instances=1,
-                max_batch=max_batch, max_len=max_len, batching=batching)[0]
-            self.placements.append(InstancePlacement(
-                fn=fn, inst_id=inst_id, node=placement.node,
-                placement=placement))
-            handles.append(f"{placement.node}:{inst_id}")
+            handle = self.place_instance(
+                fn, model, params, alloc, max_batch=max_batch,
+                max_len=max_len, batching=batching,
+                framework_bytes=framework_bytes)
+            if handle is None:
+                raise RuntimeError(
+                    f"no node can host {fn} at alloc {alloc} "
+                    f"(rectangles or memory exhausted)")
+            handles.append(handle)
         return handles
 
     def nodes_for(self, fn: str) -> list[int]:
@@ -127,14 +183,37 @@ class ClusterFrontend:
         return sum(inst.load() for key, inst in eng.instances.items()
                    if key.startswith(fn + "/"))
 
-    def submit(self, fn: str, prompt: np.ndarray, max_new_tokens: int = 8
-               ) -> ServeRequest:
-        nodes = self.nodes_for(fn)
+    def _live_nodes(self, fn: str) -> list[int]:
+        """Nodes with at least one non-retired instance of ``fn``."""
+        out = []
+        for node in self.nodes_for(fn):
+            eng = self.engines[node]
+            if any(k.startswith(fn + "/") and not inst.retired
+                   for k, inst in eng.instances.items()):
+                out.append(node)
+        return out
+
+    def _pick_node(self, fn: str) -> int:
+        """Join-shortest-queue node selection over live instances."""
+        nodes = self._live_nodes(fn)
         if not nodes:
             raise KeyError(f"function {fn} is not deployed")
-        # Join-shortest-queue across nodes, then again across the chosen
-        # node's instances (ServingEngine.submit).
-        node = min(nodes, key=lambda n: self._fn_load(n, fn))
+        return min(nodes, key=lambda n: self._fn_load(n, fn))
+
+    def _enqueue(self, fn: str, req: ServeRequest) -> None:
+        """Route an EXISTING request (drain re-route) the same way submit
+        routes new ones: JSQ node, then JSQ live instance."""
+        eng = self.engines[self._pick_node(fn)]
+        cands = [v for k, v in eng.instances.items()
+                 if k.startswith(fn + "/") and not v.retired]
+        min(cands, key=lambda i: i.load()).queue.append(req)
+
+    def submit(self, fn: str, prompt: np.ndarray, max_new_tokens: int = 8
+               ) -> ServeRequest:
+        node = self._pick_node(fn)
+        record_arrival(self._arrival_log, self._rps_horizon, fn, self.now())
+        # Second JSQ level across the chosen node's instances happens in
+        # ServingEngine.submit.
         return self.engines[node].submit(fn, prompt, max_new_tokens)
 
     def has_work(self) -> bool:
@@ -142,8 +221,6 @@ class ClusterFrontend:
 
     def pump(self, budget_s: float = 1.0, slice_s: float = 0.02) -> int:
         """Interleave the per-node schedulers until idle or out of budget."""
-        import time
-
         completed = 0
         deadline = time.perf_counter() + budget_s
         while time.perf_counter() < deadline and self.has_work():
@@ -152,7 +229,50 @@ class ClusterFrontend:
                     completed += eng.pump(budget_s=slice_s)
         return completed
 
+    # -- scale-down --------------------------------------------------------
+
+    def evict(self, handle: str) -> None:
+        """Gracefully retire the instance behind ``node:inst_id``.
+
+        Queued (not yet admitted) requests are immediately re-routed to the
+        function's surviving instances; occupied decode slots keep decoding
+        until they finish.  The MRA rectangle and weight refcount are only
+        released once the instance has fully drained (``on_instance_closed``
+        fires from the engine pump)."""
+        node_s, inst_id = handle.split(":", 1)
+        node = int(node_s)
+        fn = inst_id.split("/")[0]
+        victim = self.engines[node].instances[inst_id]
+        survivors = any(
+            inst is not victim and not inst.retired
+            for eng in self.engines for k, inst in eng.instances.items()
+            if k.startswith(fn + "/"))
+        # Last replica: keep its queue — it drains everything (queued AND
+        # in-flight) before closing, so nothing is dropped.
+        strays = self.engines[node].retire(inst_id,
+                                           strip_queue=survivors)
+        for req in strays:
+            self._enqueue(fn, req)
+
+    def _instance_closed(self, node: int, inst_id: str) -> None:
+        """Engine callback: a retired instance finished draining."""
+        for p in self.placements:
+            if p.node == node and p.inst_id == inst_id:
+                self.pool.release(p.placement)
+                self.placements.remove(p)
+                return
+
     # -- metrics -----------------------------------------------------------
+
+    def observed_rps(self, fn: str, window: float) -> float:
+        """Submit rate over the trailing wall-clock ``window`` seconds."""
+        return observed_rate(self._arrival_log, self._rps_horizon,
+                             fn, window, self.now())
+
+    def inflight(self, fn: str) -> int:
+        """Queued + slot-occupying requests across the function's
+        instances (draining ones included)."""
+        return sum(self._fn_load(node, fn) for node in self.nodes_for(fn))
 
     def occupancy(self, last_n: int = 10) -> float:
         live = [e for e in self.engines if e.instances]

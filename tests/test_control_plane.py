@@ -1,0 +1,359 @@
+"""Reconciler loop: one declarative spec, two backends, same decisions.
+
+Covers the ``repro.control`` tentpole: a synthetic RPS ramp driven through
+the simulator and the live JAX backend must yield identical
+``ScaleDecision`` sequences; scale-down must drain in-flight slots before
+releasing MRA rectangles and ModelStore refcounts; failed placements must
+settle their provisional L_j reservations (no capacity drift).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.control import (ControlPlane, FunctionSpec, LiveBackend,
+                           SimBackend, decision_signature, ramp)
+from repro.core.cluster import Cluster
+from repro.core.scaling import ProfilePoint
+from repro.core.workload import ServiceCurve, poisson_arrivals
+from repro.serving import ClusterFrontend
+
+PROFILE = (
+    ProfilePoint(sm=0.25, quota=0.4, throughput=2.0, p99_latency=0.05),
+    ProfilePoint(sm=0.45, quota=0.8, throughput=5.0, p99_latency=0.03),
+    # SLO-infeasible decoy: best throughput-per-resource if the filter broke.
+    ProfilePoint(sm=0.1, quota=0.1, throughput=3.0, p99_latency=0.5),
+)
+
+RAMP = ramp([(0.0, 1.0), (2.0, 11.0), (5.0, 1.0)])
+
+
+def tiny_curve() -> ServiceCurve:
+    return ServiceCurve(name="chat", r_max=5.0, sm_sat=0.45, p=1.0,
+                        weight_bytes=1 << 20, framework_bytes=32 << 20)
+
+
+def make_spec(factory=None, **overrides) -> FunctionSpec:
+    kw = dict(name="chat", profile=PROFILE, slo_latency=0.1, target_rps=RAMP,
+              headroom=1.2, min_instances=1, max_instances=5,
+              model_factory=factory, max_batch=2, max_len=32,
+              framework_bytes=32 * 1024 * 1024, curve=tiny_curve())
+    kw.update(overrides)
+    return FunctionSpec(**kw)
+
+
+def model_factory_from(tiny_model, tiny_params):
+    return lambda: (tiny_model, tiny_params)
+
+
+# -------------------------------------------------------------------------
+# Identical decisions across backends
+# -------------------------------------------------------------------------
+
+
+def test_sim_and_live_identical_decision_sequences(tiny_model, tiny_params):
+    frontend = ClusterFrontend(n_nodes=2, window=0.1)
+    live = ControlPlane(LiveBackend(frontend))
+    live.register(make_spec(model_factory_from(tiny_model, tiny_params)))
+
+    cluster = Cluster(n_nodes=2, sharing=True)
+    sim = ControlPlane(SimBackend(cluster))
+    sim.register(make_spec())
+
+    for tick in range(8):
+        live.reconcile(now=float(tick))
+        sim.reconcile(now=float(tick))
+
+    assert decision_signature(live.log) == decision_signature(sim.log)
+    assert len(live.log) > 0, "the ramp must trigger scaling"
+    ups = [d for d in live.log if d.direction > 0]
+    downs = [d for d in live.log if d.direction < 0]
+    assert ups and downs, "ramp must scale out AND back in"
+    # SLO filter: the infeasible decoy point must never be chosen.
+    assert all(d.point.p99_latency <= 0.1 for d in live.log)
+    # Both fleets converge to the same size.
+    assert live.instances("chat") == sim.instances("chat") == 1
+
+
+def test_max_instances_clamps_both_backends(tiny_model, tiny_params):
+    frontend = ClusterFrontend(n_nodes=2, window=0.1)
+    live = ControlPlane(LiveBackend(frontend))
+    live.register(make_spec(model_factory_from(tiny_model, tiny_params),
+                            max_instances=3))
+    live.reconcile(now=3.0)  # burst: wants ~6 pods of the 2-rps point
+    assert live.instances("chat") == 3
+    # Aborted reservations must not leave phantom capacity in L_j.
+    assert live.capacity("chat") == pytest.approx(
+        sum(p.throughput for p in live.placed["chat"].values()))
+    assert live.queues["chat"].provisional_ids() == set()
+
+
+# -------------------------------------------------------------------------
+# Scale-down: graceful drain, released rectangles, refcounts
+# -------------------------------------------------------------------------
+
+
+def test_live_scale_down_drains_and_releases(tiny_model, tiny_params):
+    frontend = ClusterFrontend(n_nodes=2, window=0.05)
+    plane = ControlPlane(LiveBackend(frontend))
+    plane.register(make_spec(model_factory_from(tiny_model, tiny_params)))
+    plane.reconcile(now=3.0)  # scale out for the burst
+    n_burst = plane.instances("chat")
+    assert n_burst > 1
+    store_refs = sum(e.store.refcount("chat") for e in frontend.engines)
+    assert store_refs == n_burst
+
+    # Put real work in flight, then scale down while it is decoding.
+    rng = np.random.default_rng(0)
+    reqs = [frontend.submit("chat", rng.integers(0, 64, 6, dtype=np.int32),
+                            max_new_tokens=4) for _ in range(6)]
+    frontend.pump(budget_s=0.05)  # start decoding; do not finish
+    plane.reconcile(now=6.0)      # ramp-down: evicts all but the floor
+    assert plane.instances("chat") == 1
+    frontend.pump(budget_s=60.0)  # drain retirees + finish survivors
+
+    assert all(r.done for r in reqs), "eviction dropped in-flight requests"
+    # Drained instances released their shared-weight refcounts...
+    assert sum(e.store.refcount("chat") for e in frontend.engines) == 1
+    # ...their scheduler registrations...
+    assert sum(len(e.scheduler.pods) for e in frontend.engines) == 1
+    # ...and their MRA rectangles.
+    assert len(frontend.placements) == 1
+    assert frontend.pool.total_used_area() == \
+        frontend.placements[0].placement.rect.area
+
+
+def test_live_scale_to_zero_zeroes_refcounts(tiny_model, tiny_params):
+    frontend = ClusterFrontend(n_nodes=1, window=0.05)
+    plane = ControlPlane(LiveBackend(frontend))
+    plane.register(make_spec(model_factory_from(tiny_model, tiny_params),
+                             min_instances=0,
+                             target_rps=ramp([(0.0, 4.0), (1.0, 0.0)])))
+    plane.reconcile(now=0.0)
+    assert plane.instances("chat") >= 1
+    plane.reconcile(now=1.0)  # zero demand: evict everything
+    frontend.pump(budget_s=5.0)
+    assert plane.instances("chat") == 0
+    eng = frontend.engines[0]
+    assert eng.store.refcount("chat") == 0
+    assert eng.store.contains("chat"), "weights stay cached (evictable)"
+    assert frontend.pool.total_used_area() == 0
+    assert frontend.placements == [] and eng.instances == {}
+
+
+def test_engine_retire_waits_for_occupied_slots(tiny_model, tiny_params):
+    from repro.core.resources import Alloc
+    from repro.serving import ServingEngine
+
+    engine = ServingEngine(window=0.05)
+    closed = []
+    engine.on_instance_closed = closed.append
+    (inst_id,) = engine.deploy("lm", tiny_model, tiny_params,
+                               Alloc(sm=0.5, quota_request=0.8,
+                                     quota_limit=0.8),
+                               max_batch=2, max_len=32)
+    inst = engine.instances[inst_id]
+    req = engine.submit("lm", np.arange(6, dtype=np.int32), max_new_tokens=4)
+    inst.run_step()  # occupy a slot mid-decode
+    assert not req.done
+
+    strays = engine.retire(inst_id)
+    assert strays == [], "admitted requests are not strays"
+    assert inst_id in engine.instances, "must drain before closing"
+    assert engine.store.refcount("lm") == 1
+    engine.pump(budget_s=30.0)
+    assert req.done and len(req.tokens_out) == 4
+    assert closed == [inst_id]
+    assert inst_id not in engine.instances
+    assert engine.store.refcount("lm") == 0
+    assert engine.scheduler.pods == {}
+
+
+def test_engine_retire_idle_instance_closes_immediately(tiny_model,
+                                                        tiny_params):
+    from repro.core.resources import Alloc
+    from repro.serving import ServingEngine
+
+    engine = ServingEngine(window=0.05)
+    closed = []
+    engine.on_instance_closed = closed.append
+    (inst_id,) = engine.deploy("lm", tiny_model, tiny_params,
+                               Alloc(sm=0.5, quota_request=0.8,
+                                     quota_limit=0.8))
+    assert engine.retire(inst_id) == []
+    assert closed == [inst_id] and engine.instances == {}
+    assert engine.store.refcount("lm") == 0
+
+
+def test_sim_scale_down_drains_before_release():
+    cluster = Cluster(n_nodes=2, sharing=True)
+    plane = ControlPlane(SimBackend(cluster))
+    plane.register(make_spec())
+    plane.reconcile(now=3.0)
+    n_burst = plane.instances("chat")
+    assert n_burst > 1
+    arrivals = poisson_arrivals("chat", rps=8.0, duration=2.0, seed=3,
+                                start=3.0)
+    cluster.submit_all(arrivals)
+    cluster.sim.at(6.0, lambda: plane.reconcile(now=6.0))
+    cluster.run(20.0)
+    assert plane.instances("chat") == 1
+    assert cluster.recorders["chat"].count() == len(arrivals)
+    assert cluster.dropped == 0
+    # Retired pods fully torn down: one pod, one rectangle.
+    assert len(cluster.pods) == 1
+    assert cluster.pool.total_used_area() == \
+        next(iter(cluster.pods.values())).placement.rect.area
+
+
+def test_evict_last_replica_with_queued_requests(tiny_model, tiny_params):
+    """Evicting the only replica while requests are queued (none admitted
+    to slots yet) must drain them, not drop them."""
+    frontend = ClusterFrontend(n_nodes=1, window=0.05)
+    plane = ControlPlane(LiveBackend(frontend))
+    plane.register(make_spec(model_factory_from(tiny_model, tiny_params),
+                             min_instances=0,
+                             target_rps=ramp([(0.0, 1.0), (1.0, 0.0)])))
+    plane.reconcile(now=0.0)  # brings up the single replica
+    assert plane.instances("chat") == 1
+    rng = np.random.default_rng(2)
+    reqs = [frontend.submit("chat", rng.integers(0, 64, 5, dtype=np.int32),
+                            max_new_tokens=3) for _ in range(3)]
+    plane.reconcile(now=1.0)  # zero demand: evict the only instance
+    assert plane.instances("chat") == 0
+    frontend.pump(budget_s=30.0)
+    assert all(r.done for r in reqs), "last-replica eviction dropped work"
+    eng = frontend.engines[0]
+    assert eng.instances == {} and eng.store.refcount("chat") == 0
+    assert frontend.pool.total_used_area() == 0
+
+
+def test_sim_failure_reinjection_does_not_inflate_observed_rps():
+    """Re-queued strays after a node failure are not new arrivals."""
+    cluster = Cluster(n_nodes=2, sharing=True)
+    plane = ControlPlane(SimBackend(cluster))
+    plane.register(make_spec(target_rps=None))
+    arrivals = poisson_arrivals("chat", rps=4.0, duration=2.0, seed=7)
+    cluster.submit_all(arrivals)
+    cluster.run(2.0)
+    before = cluster.observed_rps("chat", 2.0)
+    victim = next(n.node_id for n in cluster.nodes if n.pods)
+    cluster.fail_node(victim)  # re-injects every stranded request
+    assert cluster.observed_rps("chat", 2.0) == pytest.approx(before)
+
+
+# -------------------------------------------------------------------------
+# Failed placement: reservations settle, capacity never drifts
+# -------------------------------------------------------------------------
+
+
+def test_failed_placement_aborts_reservation():
+    # One node, fat rectangles: only two pods fit, the burst wants five.
+    fat = (ProfilePoint(sm=0.45, quota=0.45, throughput=2.0,
+                        p99_latency=0.05),)
+    cluster = Cluster(n_nodes=1, sharing=True, allow_grow=False)
+    plane = ControlPlane(SimBackend(cluster))
+    plane.register(make_spec(profile=fat, max_instances=16))
+    plane.reconcile(now=3.0)  # demand 13.2 rps -> wants 7 pods, 4 fit
+    placed = plane.instances("chat")
+    assert placed < 7
+    assert plane.capacity("chat") == pytest.approx(2.0 * placed)
+    assert plane.queues["chat"].provisional_ids() == set()
+    assert len(cluster.pods) == placed
+
+
+def test_frontend_place_instance_returns_none_when_full(tiny_model,
+                                                        tiny_params):
+    frontend = ClusterFrontend(n_nodes=1, window=0.1)
+    fat = (ProfilePoint(sm=0.6, quota=0.6, throughput=2.0,
+                        p99_latency=0.05),)
+    plane = ControlPlane(LiveBackend(frontend))
+    plane.register(make_spec(model_factory_from(tiny_model, tiny_params),
+                             profile=fat, max_instances=16))
+    plane.reconcile(now=3.0)  # only ONE 0.6x0.6 rectangle fits per node
+    assert plane.instances("chat") == 1
+    assert plane.capacity("chat") == pytest.approx(2.0)
+    assert plane.queues["chat"].provisional_ids() == set()
+
+
+def test_frontend_deploy_rollback_on_engine_failure(tiny_model, tiny_params,
+                                                    monkeypatch):
+    from repro.serving.engine import ServingEngine
+
+    frontend = ClusterFrontend(n_nodes=1, window=0.1)
+
+    def boom(*a, **kw):
+        raise RuntimeError("OOM compiling executor")
+
+    monkeypatch.setattr(ServingEngine, "deploy", boom)
+    from repro.core.resources import Alloc
+    with pytest.raises(RuntimeError, match="OOM"):
+        frontend.place_instance(
+            "chat", tiny_model, tiny_params,
+            Alloc(sm=0.5, quota_request=0.5, quota_limit=0.5))
+    # The reserved rectangle and the provisional MemoryModel entry must
+    # both be rolled back — a retry later must find a pristine pool.
+    assert frontend.pool.total_used_area() == 0
+    assert "chat" not in frontend._fn_mm
+    assert frontend.placements == []
+
+
+def test_register_rollback_on_capacity_starved_floor():
+    # One node; the 0.45x0.45 rectangle fits at most 4 times: a floor of 9
+    # cannot come up, and must leave no partial fleet behind.
+    fat = (ProfilePoint(sm=0.45, quota=0.45, throughput=2.0,
+                        p99_latency=0.05),)
+    cluster = Cluster(n_nodes=1, sharing=True, allow_grow=False)
+    plane = ControlPlane(SimBackend(cluster))
+    with pytest.raises(RuntimeError, match="min_instances"):
+        plane.register(make_spec(profile=fat, min_instances=9,
+                                 max_instances=16))
+    assert "chat" not in plane.specs
+    cluster.run(5.0)  # let evicted bring-up pods tear down
+    assert cluster.pods == {}
+    # A corrected spec can re-register cleanly afterwards.
+    plane.register(make_spec(profile=fat, min_instances=2, max_instances=16))
+    assert plane.instances("chat") == 2
+
+
+def test_reconcile_heals_fleet_back_to_floor():
+    cluster = Cluster(n_nodes=2, sharing=True)
+    plane = ControlPlane(SimBackend(cluster))
+    plane.register(make_spec(min_instances=2, target_rps=ramp([(0.0, 1.0)])))
+    assert plane.instances("chat") == 2
+    # A node failure kills a pod behind the reconciler's back.
+    victim = next(iter(plane.placed["chat"]))
+    cluster.retire(victim, drain=False)
+    plane.placed["chat"].pop(victim)
+    plane.queues["chat"].remove(victim)
+    healed = plane.reconcile(now=0.0)
+    assert plane.instances("chat") == 2
+    assert any(d.direction > 0 for d in healed)
+
+
+# -------------------------------------------------------------------------
+# Spec validation
+# -------------------------------------------------------------------------
+
+
+def test_spec_rejects_empty_profile():
+    with pytest.raises(ValueError, match="profile"):
+        FunctionSpec(name="f", profile=())
+
+
+def test_spec_slo_filter_degrades_gracefully():
+    slow = (ProfilePoint(sm=0.2, quota=0.5, throughput=3.0, p99_latency=9.9),)
+    spec = FunctionSpec(name="f", profile=slow, slo_latency=0.1)
+    assert spec.feasible_points() == list(slow)
+
+
+def test_sim_backend_requires_curve():
+    plane = ControlPlane(SimBackend(Cluster(n_nodes=1)))
+    with pytest.raises(ValueError, match="ServiceCurve"):
+        plane.register(make_spec(curve=None))
+
+
+def test_live_backend_requires_model_factory():
+    plane = ControlPlane(LiveBackend(ClusterFrontend(n_nodes=1)))
+    with pytest.raises(ValueError, match="model_factory"):
+        plane.register(make_spec())

@@ -1,0 +1,86 @@
+"""Bucketed prefill padding: recompile containment + exact equivalence.
+
+Chunked admission used to jit-compile the prefill once per distinct prompt
+length; rounding prompts up to power-of-two buckets bounds compilations at
+O(log max_len) while the length-masked prefill keeps the token stream
+bit-identical to the exact-shape path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.resources import Alloc
+from repro.serving import ServingEngine
+from repro.serving.engine import _bucket_len
+
+ALLOC = Alloc(sm=0.5, quota_request=0.8, quota_limit=0.8)
+
+
+def test_bucket_len_rounds_up_to_power_of_two():
+    assert [_bucket_len(n) for n in (1, 2, 3, 4, 5, 8, 9, 16, 17)] == \
+        [1, 2, 4, 4, 8, 8, 16, 16, 32]
+
+
+def test_prompts_in_one_bucket_share_one_compile(tiny_model, tiny_params):
+    engine = ServingEngine(window=0.1)
+    (inst_id,) = engine.deploy("lm", tiny_model, tiny_params, ALLOC,
+                               max_batch=2, max_len=32)
+    inst = engine.instances[inst_id]
+    assert inst.bucketed
+    rng = np.random.default_rng(0)
+    for n in (5, 6, 7, 8):  # all land in the 8-token bucket
+        engine.submit("lm", rng.integers(0, 64, n, dtype=np.int32),
+                      max_new_tokens=2)
+    engine.pump(budget_s=30.0)
+    assert inst._prefill_len._cache_size() == 1, \
+        "4 distinct prompt lengths in one bucket must lower exactly once"
+    for n in (9, 12):  # the 16-token bucket: exactly one more lowering
+        engine.submit("lm", rng.integers(0, 64, n, dtype=np.int32),
+                      max_new_tokens=2)
+    engine.pump(budget_s=30.0)
+    assert inst._prefill_len._cache_size() == 2
+
+
+def test_bucketed_stream_matches_exact_prefill(tiny_model, tiny_params):
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, 64, n, dtype=np.int32) for n in (3, 5, 7, 11)]
+
+    def serve(prefill_buckets: bool) -> list[list[int]]:
+        engine = ServingEngine(window=0.1)
+        engine.deploy("lm", tiny_model, tiny_params, ALLOC, max_batch=2,
+                      max_len=32, prefill_buckets=prefill_buckets)
+        reqs = [engine.submit("lm", p, max_new_tokens=4) for p in prompts]
+        engine.pump(budget_s=60.0)
+        assert all(r.done for r in reqs)
+        return [r.tokens_out for r in reqs]
+
+    assert serve(True) == serve(False)
+
+
+def test_length_masked_prefill_equals_exact(tiny_model, tiny_params):
+    """Direct model-level check: padded prefill with ``length`` == exact."""
+    prompt = np.arange(1, 6, dtype=np.int32)  # length 5 -> bucket 8
+    padded = np.zeros((8,), np.int32)
+    padded[:5] = prompt
+    exact_logits, exact_cache = tiny_model.prefill(
+        tiny_params, jnp.asarray(prompt[None]), max_len=16)
+    lm_logits, lm_cache = tiny_model.prefill(
+        tiny_params, jnp.asarray(padded[None]), max_len=16,
+        length=jnp.int32(5))
+    np.testing.assert_allclose(np.asarray(exact_logits),
+                               np.asarray(lm_logits), rtol=1e-5, atol=1e-5)
+    assert int(lm_cache["pos"]) == int(exact_cache["pos"]) == 5
+    # Decode one token from each cache: identical argmax streams.
+    tok = jnp.argmax(exact_logits, axis=-1).astype(jnp.int32)
+    d1, _ = tiny_model.decode_step(tiny_params, tok, exact_cache)
+    d2, _ = tiny_model.decode_step(tiny_params, tok, lm_cache)
+    assert int(jnp.argmax(d1)) == int(jnp.argmax(d2))
+
+
+def test_static_batching_keeps_exact_path(tiny_model, tiny_params):
+    engine = ServingEngine(window=0.1)
+    (inst_id,) = engine.deploy("lm", tiny_model, tiny_params, ALLOC,
+                               max_batch=2, max_len=32, batching="static")
+    assert not engine.instances[inst_id].bucketed

@@ -86,6 +86,55 @@ def test_processing_gap():
     assert gaps == {"f": 20.0, "g": 7.0}
 
 
+def test_scale_up_entries_are_provisional_until_confirmed():
+    queues = {}
+    decisions = heuristic_scale({"f": 7.0}, {"f": POINTS}, queues)
+    ups = [d for d in decisions if d.direction > 0]
+    # Reserved capacity counts immediately (no double-provisioning)...
+    assert queues["f"].provisional_ids() == {d.pod_id for d in ups}
+    reserved = queues["f"].capacity()
+    assert reserved >= 7.0
+    # ...and the deployer settles each reservation: one placement succeeds,
+    # the rest fail.
+    queues["f"].confirm(ups[0].pod_id, "real-0")
+    for d in ups[1:]:
+        queues["f"].abort(d.pod_id)
+    assert queues["f"].provisional_ids() == set()
+    assert queues["f"].capacity() == pytest.approx(ups[0].point.throughput)
+    assert len(queues["f"]) == 1
+
+
+def test_abort_prevents_capacity_drift_across_passes():
+    """A failed placement must re-trigger scale-up on the next pass."""
+    queues = {}
+    first = heuristic_scale({"f": 3.0}, {"f": POINTS}, queues)
+    for d in first:
+        queues["f"].abort(d.pod_id)  # deployer found no node
+    assert queues["f"].capacity() == 0.0
+    second = heuristic_scale({"f": 3.0}, {"f": POINTS}, queues)
+    assert [d.point for d in second] == [d.point for d in first]
+
+
+def test_confirm_unknown_reservation_raises():
+    q = FunctionPodQueue()
+    with pytest.raises(KeyError):
+        q.confirm("nope", "real")
+    with pytest.raises(KeyError):
+        q.abort("nope")
+
+
+def test_remove_of_unknown_pod_is_noop_and_leak_free():
+    q = FunctionPodQueue()
+    p = ProfilePoint(sm=0.2, quota=0.5, throughput=10.0)
+    q.push("known", p)
+    for i in range(100):  # untracked pods retired via a shared teardown path
+        q.remove(f"never-pushed-{i}")
+    assert q._dead == set()
+    assert len(q) == 1 and q.capacity() == pytest.approx(10.0)
+    q.remove("known")
+    assert len(q) == 0 and q.front() is None and q._dead == set()
+
+
 @settings(max_examples=60, deadline=None)
 @given(st.floats(0.5, 500.0))
 def test_scale_up_capacity_always_covers_gap(gap):
