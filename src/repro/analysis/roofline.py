@@ -571,6 +571,36 @@ def roofline_terms(analysis: HloAnalysis, n_chips: int,
 
 
 # --------------------------------------------------------------------------
+# Decode-round roofline split (calibrates ServiceCurve.round_time's alpha)
+# --------------------------------------------------------------------------
+
+
+def decode_round_alpha(cfg, seq_len: int) -> float:
+    """Weight-bound fraction of a batched decode round for this model.
+
+    ``ServiceCurve.round_time`` models a round as a batch-shared
+    weight-bound cost (fraction ``alpha``) plus a per-slot KV/activation
+    cost: ``t(live) proportional to alpha + (1 - alpha) * live``.  The
+    roofline decomposition gives alpha directly: one round streams the
+    (active) weights once — ``W`` bytes, shared by every slot — and each
+    slot's KV cache once — ``K`` bytes per sequence at ``seq_len`` context
+    (``kernel_hbm_bytes``), so ``alpha = W / (W + K)``.
+
+    Short contexts on weight-heavy models are weight-bound (alpha -> 1:
+    batching is nearly free); long contexts are KV-bound (alpha -> 0:
+    rounds scale linearly with live slots and continuous batching's
+    fill advantage shrinks).
+    """
+    import types
+
+    case = types.SimpleNamespace(kind="decode", global_batch=1,
+                                 seq_len=max(seq_len, 1))
+    w = 2.0 * cfg.active_param_count()  # bf16 weight stream, batch-shared
+    k = kernel_hbm_bytes(cfg, case)  # per-sequence KV stream
+    return w / max(w + k, 1.0)
+
+
+# --------------------------------------------------------------------------
 # Analytic MODEL_FLOPS per (arch x shape)
 # --------------------------------------------------------------------------
 

@@ -110,10 +110,19 @@ class LiveBackend:
               point: ProfilePoint) -> Optional[str]:
         model, params = self._models[spec.name]
         alloc = point.to_alloc(spec.elastic_limit)
+        # Paged block budget: an explicit spec override wins; otherwise the
+        # profiled capacity of this allocation (ProfilePoint.kv_blocks, via
+        # profiler.paged_kv_capacity); otherwise the engine's dense-
+        # equivalent default.
+        n_kv_blocks = spec.n_kv_blocks
+        if (n_kv_blocks is None and spec.batching == "paged"
+                and point.kv_blocks >= 2):
+            n_kv_blocks = point.kv_blocks
         return self.frontend.place_instance(
             spec.name, model, params, alloc,
             max_batch=spec.max_batch, max_len=spec.max_len,
-            batching=spec.batching, framework_bytes=spec.framework_bytes)
+            batching=spec.batching, framework_bytes=spec.framework_bytes,
+            block_size=spec.block_size, n_kv_blocks=n_kv_blocks)
 
     def evict(self, spec: FunctionSpec, pod_id: str) -> None:
         self.frontend.evict(pod_id)

@@ -74,7 +74,12 @@ class FunctionSpec:
         None keeps ``Q_limit == Q_request``.
       model_factory: live backend only — builds ``(model, params)`` once at
         registration; instances share the params via the node ModelStore.
-      max_batch / max_len / batching: live instance decode-slot options.
+      max_batch / max_len / batching: live instance decode-slot options
+        (``batching="paged"`` runs the block-paged KV data plane).
+      block_size / n_kv_blocks: paged mode only — tokens per KV block and
+        the per-instance physical block budget (None = the dense pool's
+        worst case, so paging can only reduce bytes-in-use).  Profile
+        tables record the matching capacity in ``ProfilePoint.kv_blocks``.
       framework_bytes: per-instance runtime footprint charged by memory
         admission on the live path.
       curve: simulator backend only — the calibrated ``ServiceCurve``.
@@ -93,6 +98,8 @@ class FunctionSpec:
     max_batch: int = 4
     max_len: int = 64
     batching: str = "continuous"
+    block_size: int = 16
+    n_kv_blocks: Optional[int] = None
     framework_bytes: int = DEFAULT_FRAMEWORK_BYTES
     curve: Optional[ServiceCurve] = None
 
@@ -103,8 +110,16 @@ class FunctionSpec:
             raise ValueError(
                 f"need 0 <= min_instances <= max_instances, got "
                 f"{self.min_instances}, {self.max_instances}")
-        if self.batching not in ("continuous", "static"):
+        if self.batching not in ("continuous", "static", "paged"):
             raise ValueError(f"unknown batching mode {self.batching!r}")
+        if self.batching == "paged":
+            if self.block_size <= 0 or self.max_len % self.block_size:
+                raise ValueError(
+                    "block_size must be positive and divide max_len")
+            if self.n_kv_blocks is not None and self.n_kv_blocks < 2:
+                raise ValueError(
+                    "n_kv_blocks needs the null page plus one usable "
+                    "block (>= 2)")
         if self.headroom < 1.0:
             raise ValueError("headroom < 1 provisions below offered load")
 

@@ -174,14 +174,16 @@ class Cluster:
         max_batch: int = 1,
         scheduler_period: float = 0.05,
         continuous: bool = False,
-        batch_alpha: float = 0.5,
+        batch_alpha: Optional[float] = None,
     ):
         """``continuous=True`` enables slot-level batching: finished
         requests free their decode slot immediately and queued requests are
         admitted mid-flight, matching the live engine's continuous mode.
         ``continuous=False`` keeps static batches that retire together.
-        ``batch_alpha`` is the weight-bound (batch-shared) fraction of a
-        decode round (``ServiceCurve.round_time``)."""
+        ``batch_alpha`` overrides the weight-bound (batch-shared) fraction
+        of a decode round for EVERY function; the default (None) uses each
+        curve's own ``alpha`` — 0.5 unless roofline-calibrated via
+        ``workload.calibrate_round_alpha``."""
         self.sim = Simulator()
         self.window = window
         self.max_batch = max_batch

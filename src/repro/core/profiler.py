@@ -142,6 +142,16 @@ def profile_function(
     return db
 
 
+def paged_kv_capacity(kv_budget_bytes: int, kv_block_bytes: int) -> int:
+    """TOTAL physical KV blocks a memory budget can hold — the value to
+    hand the engine as ``n_kv_blocks`` (the null page is one of them, so
+    a usable pool needs at least 2; smaller budgets report 0)."""
+    if kv_block_bytes <= 0 or kv_budget_bytes <= 0:
+        return 0
+    n = kv_budget_bytes // kv_block_bytes
+    return n if n >= 2 else 0
+
+
 def profile_points(
     curve: ServiceCurve,
     *,
@@ -150,6 +160,8 @@ def profile_points(
     duration: float = 12.0,
     loaded_factor: float = 0.8,
     seed: int = 0,
+    kv_budget_bytes: int = 0,
+    kv_block_bytes: int = 0,
 ) -> list[ProfilePoint]:
     """Spec-ready profile table: ``{<F_j, S_p, Q_p, T_p>}`` with SLO p99s.
 
@@ -159,7 +171,13 @@ def profile_points(
     filter must see service latency under realistic load, not the queueing
     blow-up of the saturation probe).  The merged points feed
     ``repro.control.FunctionSpec.profile`` directly.
+
+    ``kv_budget_bytes`` / ``kv_block_bytes`` (both > 0) additionally stamp
+    each point with its paged-KV capacity (``ProfilePoint.kv_blocks``) —
+    the block budget a ``batching="paged"`` spec hands the engine, derived
+    from the same ``Model.kv_block_bytes`` layout admission charges.
     """
+    kv_blocks = paged_kv_capacity(kv_budget_bytes, kv_block_bytes)
     points: list[ProfilePoint] = []
     for sm in spatial:
         for quota in temporal:
@@ -169,5 +187,6 @@ def profile_points(
                                  overload_factor=loaded_factor, seed=seed)
             points.append(ProfilePoint(sm=sm, quota=quota,
                                        throughput=cap.throughput,
-                                       p99_latency=lat.p99))
+                                       p99_latency=lat.p99,
+                                       kv_blocks=kv_blocks))
     return points

@@ -33,6 +33,11 @@ class ProfilePoint:
     quota: float
     throughput: float  # requests/second
     p99_latency: float = 0.0  # seconds, used for SLO-feasibility filtering
+    # Paged-KV block budget (TOTAL pool, incl. the null page) handed to an
+    # instance placed at this point.  profile_points stamps one shared
+    # budget on every point of a table — it does not scale with (sm, quota).
+    # 0 = not profiled / dense slot pool.
+    kv_blocks: int = 0
 
     @property
     def rpr(self) -> float:

@@ -49,6 +49,10 @@ class ServiceCurve:
     p: float  # power-law exponent of the sub-saturation region
     weight_bytes: int = 0
     framework_bytes: int = 0
+    # Weight-bound (batch-shared) fraction of one decode round.  0.5 is
+    # the uncalibrated default; ``calibrate_round_alpha`` replaces it with
+    # the model's roofline split (repro.analysis.roofline.decode_round_alpha).
+    alpha: float = 0.5
 
     def rate(self, sm: float, quota: float = 1.0) -> float:
         """Sustainable throughput (req/s) at allocation (sm, quota)."""
@@ -59,7 +63,8 @@ class ServiceCurve:
         """Wall time of one dispatched step processing ``batch`` requests."""
         return batch / self.rate(sm, quota=1.0)
 
-    def round_time(self, sm: float, live: int, alpha: float = 0.5) -> float:
+    def round_time(self, sm: float, live: int,
+                   alpha: float | None = None) -> float:
         """Wall time of one decode round advancing ``live`` slots.
 
         A round pays a fixed weight-bound cost (reading the model once,
@@ -68,9 +73,27 @@ class ServiceCurve:
         rounds therefore waste the shared ``alpha`` portion, which is
         exactly the inefficiency continuous batching removes.  With
         ``live == 1`` this reduces to ``step_time(sm, 1)``, so single-slot
-        pods keep the paper-calibrated service rates.
+        pods keep the paper-calibrated service rates.  ``alpha=None`` uses
+        the curve's own (possibly roofline-calibrated) fraction.
         """
-        return (alpha + (1.0 - alpha) * live) / self.rate(sm, quota=1.0)
+        a = self.alpha if alpha is None else alpha
+        return (a + (1.0 - a) * live) / self.rate(sm, quota=1.0)
+
+
+def calibrate_round_alpha(curve: ServiceCurve, cfg,
+                          seq_len: int = 1024) -> ServiceCurve:
+    """Replace the curve's fixed alpha=0.5 with the model's roofline split.
+
+    ``cfg`` is the architecture's ``ModelConfig``; the weight-bound
+    fraction comes from ``repro.analysis.roofline.decode_round_alpha`` at
+    a representative decode context length.  Single-slot behaviour
+    (``round_time(sm, 1) == step_time(sm, 1)``) is alpha-independent, so
+    paper-calibrated rates survive calibration unchanged.
+    """
+    from repro.analysis.roofline import decode_round_alpha
+
+    return dataclasses.replace(curve,
+                               alpha=decode_round_alpha(cfg, seq_len))
 
 
 def _curve(name: str, r_max: float, sm_sat: float, s_ref: float, c_ref: float,

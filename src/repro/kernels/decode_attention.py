@@ -110,6 +110,203 @@ def _kernel_q8(len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
         o_ref[0, 0, :, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _paged_kernel(len_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, block_s: int, n_blocks: int,
+                  scale: float):
+    """Block-table walk: grid dim 2 is the LOGICAL block index; the
+    physical page each step streams was chosen by the scalar-prefetch
+    index map (``tbl_ref[b, i]``), so only a sequence's own blocks ever
+    leave HBM.  Past-the-end table entries point at the shared null block;
+    its rows are masked by ``cache_len`` exactly like dense padding."""
+    ib = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    cache_len = len_ref[ib]
+    blk_lo = ik * block_s  # logical token offset of this block-table slot
+
+    @pl.when(blk_lo < cache_len)
+    def _compute():
+        q = q_ref[0, 0, 0, :, :].astype(jnp.float32) * scale  # (G, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bs, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G, bs)
+        pos = blk_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < cache_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def _paged_kernel_q8(len_ref, tbl_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                     o_ref, acc_ref, m_ref, l_ref, *, block_s: int,
+                     n_blocks: int, scale: float):
+    """int8-KV paged variant: codes + per-row scales stream per physical
+    block and dequantize in VMEM (1 byte/element over the wire)."""
+    ib = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    cache_len = len_ref[ib]
+    blk_lo = ik * block_s
+
+    @pl.when(blk_lo < cache_len)
+    def _compute():
+        q = q_ref[0, 0, 0, :, :].astype(jnp.float32) * scale  # (G, d)
+        ks = ks_ref[0, :, 0, :].astype(jnp.float32)  # (bs, 1)
+        vs = vs_ref[0, :, 0, :].astype(jnp.float32)
+        k = k_ref[0, :, 0, :].astype(jnp.float32) * ks  # dequant in VMEM
+        v = v_ref[0, :, 0, :].astype(jnp.float32) * vs
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G, bs)
+        pos = blk_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < cache_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_pallas(
+    q: jax.Array,             # (B, 1, H, D)
+    k_pages: jax.Array,       # (N, bs, K, D) physical KV blocks
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (B, M) int32
+    cache_len: jax.Array,     # (B,) int32
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Paged single-token GQA decode: grid = (batch, kv-head, table slot).
+
+    ``block_tables`` and ``cache_len`` ride in as scalar-prefetch operands
+    (``pltpu.PrefetchScalarGridSpec``) so the K/V index maps can pick the
+    PHYSICAL page for each logical slot before the DMA is issued — the
+    TPU-native equivalent of vLLM's gather-free paged attention.
+    """
+    b, _, h, d = q.shape
+    _, bs, n_kv, _ = k_pages.shape
+    m = block_tables.shape[1]
+    g = h // n_kv
+
+    kernel = functools.partial(_paged_kernel, block_s=bs, n_blocks=m,
+                               scale=d ** -0.5)
+    qg = q.reshape(b, 1, n_kv, g, d)
+    kv_spec = pl.BlockSpec(
+        (1, bs, 1, d),
+        lambda ib, ih, ik, len_ref, tbl_ref: (tbl_ref[ib, ik], 0, ih, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, n_kv, m),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, g, d),
+                         lambda ib, ih, ik, *_: (ib, 0, ih, 0, 0)),
+            kv_spec, kv_spec,
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda ib, ih, ik, *_: (ib, ih, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, n_kv, g, d), q.dtype),
+        compiler_params=_CompilerParams(dimension_semantics=(
+            "parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(cache_len.astype(jnp.int32), block_tables.astype(jnp.int32),
+      qg, k_pages, v_pages)
+    return out.reshape(b, 1, h, d)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_quant_pallas(
+    q: jax.Array,             # (B, 1, H, D)
+    k_pages: jax.Array,       # (N, bs, K, D) int8 codes
+    v_pages: jax.Array,
+    k_scale: jax.Array,       # (N, bs, K, 1) bf16 scales
+    v_scale: jax.Array,
+    block_tables: jax.Array,  # (B, M) int32
+    cache_len: jax.Array,     # (B,) int32
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    b, _, h, d = q.shape
+    _, bs, n_kv, _ = k_pages.shape
+    m = block_tables.shape[1]
+    g = h // n_kv
+
+    kernel = functools.partial(_paged_kernel_q8, block_s=bs, n_blocks=m,
+                               scale=d ** -0.5)
+    qg = q.reshape(b, 1, n_kv, g, d)
+    kv_spec = pl.BlockSpec(
+        (1, bs, 1, d),
+        lambda ib, ih, ik, len_ref, tbl_ref: (tbl_ref[ib, ik], 0, ih, 0))
+    sc_spec = pl.BlockSpec(
+        (1, bs, 1, 1),
+        lambda ib, ih, ik, len_ref, tbl_ref: (tbl_ref[ib, ik], 0, ih, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, n_kv, m),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, g, d),
+                         lambda ib, ih, ik, *_: (ib, 0, ih, 0, 0)),
+            kv_spec, kv_spec, sc_spec, sc_spec,
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda ib, ih, ik, *_: (ib, ih, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, n_kv, g, d), q.dtype),
+        compiler_params=_CompilerParams(dimension_semantics=(
+            "parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(cache_len.astype(jnp.int32), block_tables.astype(jnp.int32),
+      qg, k_pages, v_pages, k_scale, v_scale)
+    return out.reshape(b, 1, h, d)
+
+
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
 def decode_attention_quant_pallas(
     q: jax.Array,        # (B, 1, H, D)

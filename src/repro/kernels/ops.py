@@ -195,6 +195,66 @@ def decode_attention(
     return out.reshape(b, 1, h, d).astype(q.dtype)
 
 
+def _gather_pages(pages: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """(N, bs, K, D) physical pages + (B, M) block table -> contiguous
+    (B, M*bs, K, D) caches in logical order (reference materialization)."""
+    b, m = block_tables.shape
+    _, bs = pages.shape[:2]
+    g = pages[block_tables]  # (B, M, bs, ...)
+    return g.reshape(b, m * bs, *pages.shape[2:])
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def paged_decode_attention(
+    q: jax.Array,             # (B, 1, H, D) — one new token per sequence
+    k_pages: jax.Array,       # (N, bs, K, D) physical KV blocks
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (B, M) int32 — physical block per logical slot
+    cache_len: jax.Array,     # (B,) int32 — valid prefix length
+    *,
+    backend: str = DEFAULT_BACKEND,
+) -> jax.Array:
+    """Single-token GQA attention against a block-paged KV cache.
+
+    The pallas backend walks the block table with scalar-prefetch index
+    maps, streaming only each sequence's own blocks from HBM; the xla/ref
+    fallback materializes the gather and reuses ``decode_attention``.
+    Padded table entries (the null block) are masked by ``cache_len``.
+    """
+    if backend == "pallas":
+        from repro.kernels import decode_attention as _da
+        return _da.paged_decode_attention_pallas(q, k_pages, v_pages,
+                                                 block_tables, cache_len)
+    k = _gather_pages(k_pages, block_tables)
+    v = _gather_pages(v_pages, block_tables)
+    return decode_attention(q, k, v, cache_len, backend=backend)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def paged_decode_attention_quant(
+    q: jax.Array,             # (B, 1, H, D)
+    k_pages: jax.Array,       # (N, bs, K, D) int8 codes
+    v_pages: jax.Array,
+    k_scale: jax.Array,       # (N, bs, K, 1) bf16 per-(pos, kv-head) scales
+    v_scale: jax.Array,
+    block_tables: jax.Array,  # (B, M) int32
+    cache_len: jax.Array,     # (B,) int32
+    *,
+    backend: str = DEFAULT_BACKEND,
+) -> jax.Array:
+    """Paged decode attention over int8 KV blocks (§Perf D x paging)."""
+    if backend == "pallas":
+        from repro.kernels import decode_attention as _da
+        return _da.paged_decode_attention_quant_pallas(
+            q, k_pages, v_pages, k_scale, v_scale, block_tables, cache_len)
+    return decode_attention_quant(
+        q, _gather_pages(k_pages, block_tables),
+        _gather_pages(v_pages, block_tables),
+        _gather_pages(k_scale, block_tables),
+        _gather_pages(v_scale, block_tables),
+        cache_len, backend=backend)
+
+
 @functools.partial(jax.jit, static_argnames=("backend",))
 def decode_attention_quant(
     q: jax.Array,        # (B, 1, H, D)

@@ -8,6 +8,7 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import encdec, hybrid, rwkv6, transformer
 from repro.models.config import ModelConfig
@@ -34,6 +35,18 @@ def _specs_for(cfg: ModelConfig) -> Any:
     if cfg.family == "hybrid":
         return hybrid.hybrid_specs(cfg)
     raise ValueError(cfg.family)
+
+
+def default_kv_blocks(max_batch: int, max_len: int, block_size: int) -> int:
+    """Default pool: the dense slot pool's TOTAL block count (one of which
+    becomes the null page), so the default paged admission charge never
+    exceeds the dense reservation.  The null page costs one usable block
+    only when every slot runs a full-``max_len`` request concurrently:
+    with ``max_batch >= 2`` the head-of-line request waits a round; at
+    ``max_batch == 1`` a full-``max_len`` request exceeds the pool and is
+    rejected at submit — pass an explicit ``n_kv_blocks`` one larger to
+    serve it.  Minimum 2 (the null page plus one usable block)."""
+    return max(max_batch * (-(-max_len // block_size)), 2)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -223,6 +236,111 @@ class Model:
             else:
                 out[key] = slot_gather(leaf, slot, axes[key])
         return out
+
+    # -- paged caches (block-paged KV, vLLM-style) --------------------------
+
+    def supports_paged(self) -> bool:
+        """Whether the block-paged decode path covers this config (full
+        per-position dense/MoE caches only; see transformer.supports_paged)."""
+        return transformer.supports_paged(self.cfg)
+
+    def paged_cache_shapes(self, n_blocks: int, block_size: int
+                           ) -> dict[str, jax.ShapeDtypeStruct]:
+        """Abstract paged KV pools: ``n_blocks`` physical blocks of
+        ``block_size`` tokens each, shared by every sequence on the
+        instance.  This is the layout ``MemoryModel``/MRA admission
+        accounts — real block bytes, not per-slot ``max_len`` rows."""
+        if not self.supports_paged():
+            raise NotImplementedError(
+                f"{self.cfg.name}: paged KV needs a full-cache dense/moe "
+                f"config")
+        cfg = self.cfg
+        l, kv, dh = cfg.n_layers, cfg.n_kv_heads, cfg.dh
+        sds = jax.ShapeDtypeStruct
+        from repro.models.attention import kv_int8_enabled
+        if kv_int8_enabled(cfg):
+            return {
+                "k": sds((l, n_blocks, block_size, kv, dh), jnp.int8),
+                "v": sds((l, n_blocks, block_size, kv, dh), jnp.int8),
+                "k_scale": sds((l, n_blocks, block_size, kv, 1),
+                               jnp.bfloat16),
+                "v_scale": sds((l, n_blocks, block_size, kv, 1),
+                               jnp.bfloat16),
+            }
+        return {
+            "k": sds((l, n_blocks, block_size, kv, dh), jnp.bfloat16),
+            "v": sds((l, n_blocks, block_size, kv, dh), jnp.bfloat16),
+        }
+
+    def kv_block_bytes(self, block_size: int) -> int:
+        """Physical bytes of ONE paged KV block across all layers/leaves —
+        the unit the admission budget and bytes-in-use metrics count in."""
+        total = 0
+        for s in self.paged_cache_shapes(1, block_size).values():
+            total += int(np.prod(s.shape)) * np.dtype(s.dtype).itemsize
+        return total
+
+    def dense_kv_bytes(self, batch: int, max_len: int) -> int:
+        """Bytes of the dense slot-pool reservation (``init_slot_cache``)
+        for the same capacity — the baseline paged KV is measured against."""
+        total = 0
+        for s in self.cache_shapes(batch, max_len).values():
+            total += int(np.prod(s.shape)) * np.dtype(s.dtype).itemsize
+        return total
+
+    def kv_cache_bytes(self, *, batching: str, max_batch: int, max_len: int,
+                       block_size: int = 16,
+                       n_kv_blocks: Optional[int] = None) -> int:
+        """Decode-cache bytes one instance reserves under ``batching`` —
+        what memory admission should charge on top of weights/framework."""
+        if batching == "paged":
+            n_blocks = (n_kv_blocks if n_kv_blocks is not None
+                        else default_kv_blocks(max_batch, max_len,
+                                               block_size))
+            return n_blocks * self.kv_block_bytes(block_size)
+        return self.dense_kv_bytes(max_batch, max_len)
+
+    def init_paged_cache(self, n_blocks: int, block_size: int) -> Any:
+        """Real zeroed paged KV pools (block 0 is the engine's null block)."""
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.paged_cache_shapes(n_blocks, block_size))
+
+    def append_paged(self, cache: Any, entry: Any, block_row: jax.Array
+                     ) -> Any:
+        """Scatter a batch-1 prefill cache ``entry`` into physical pages.
+
+        ``entry`` is a cache returned by ``prefill`` (dense layout,
+        ``max_len`` rows, ``max_len % block_size == 0``); logical block i
+        of the entry lands in physical block ``block_row[i]``.  Rows past
+        the sequence's allocation are routed to the null block by the
+        row's padding and discarded.  jit-compatible: ``block_row`` may be
+        traced, so admitting different requests reuses one executable.
+        """
+        out = dict(cache)
+        for key, pages in cache.items():
+            leaf = entry[key][:, 0]  # (L, max_len, ...) — batch-1 squeeze
+            l, s = leaf.shape[:2]
+            bs = pages.shape[2]
+            blocks = leaf.reshape(l, s // bs, bs, *leaf.shape[2:])
+            out[key] = pages.at[:, block_row].set(blocks.astype(pages.dtype))
+        return out
+
+    def gather_pages(self, cache: Any, block_row: jax.Array,
+                     pos: jax.Array) -> Any:
+        """Rebuild one sequence as a contiguous batch-1 dense cache — the
+        inverse of ``append_paged`` (tests, migration, slot merging)."""
+        out = {}
+        for key, pages in cache.items():
+            g = pages[:, block_row]  # (L, M, bs, ...)
+            l, m, bs = g.shape[:3]
+            out[key] = g.reshape(l, 1, m * bs, *g.shape[3:])
+        out["pos"] = jnp.asarray(pos, jnp.int32)
+        return out
+
+    def decode_step_paged(self, params, token, cache, block_tables, pos):
+        return transformer.decode_step_paged(params, token, cache,
+                                             block_tables, pos, self.cfg)
 
     # -- stubbed modality frontends -----------------------------------------
 

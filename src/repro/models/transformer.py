@@ -122,6 +122,32 @@ def block_decode(lp: dict, x: jax.Array, kc: jax.Array, vc: jax.Array,
     return x + m, kc, vc
 
 
+def block_decode_paged(lp: dict, x: jax.Array, kc: jax.Array, vc: jax.Array,
+                       block_tables: jax.Array, pos: jax.Array,
+                       cfg: ModelConfig
+                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """block_decode against one layer's paged KV blocks."""
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    a, kc, vc = attn.attn_decode_paged(lp["attn"], h, kc, vc,
+                                       block_tables, pos, cfg)
+    x = x + a
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    m, _ = _ffn(lp, h, cfg, train=False)
+    return x + m, kc, vc
+
+
+def block_decode_paged_quant(lp: dict, x: jax.Array, kc, vc, ksc, vsc,
+                             block_tables: jax.Array, pos: jax.Array,
+                             cfg: ModelConfig):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    a, kc, vc, ksc, vsc = attn.attn_decode_paged_quant(
+        lp["attn"], h, kc, vc, ksc, vsc, block_tables, pos, cfg)
+    x = x + a
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    m, _ = _ffn(lp, h, cfg, train=False)
+    return x + m, kc, vc, ksc, vsc
+
+
 def block_decode_quant(lp: dict, x: jax.Array, kc, vc, ksc, vsc,
                        pos: jax.Array, cfg: ModelConfig):
     """block_decode against int8 caches (§Perf D)."""
@@ -532,4 +558,64 @@ def decode_step(params: dict, token: jax.Array, cache: dict,
     new_cache = dict(cache, k=kn, v=vn, pos=pos + 1)
     if dual:
         new_cache["global_k"], new_cache["global_v"] = gk, gv
+    return lm_head(params, x, cfg)[:, 0], new_cache
+
+
+# --------------------------------------------------------------------------
+# Paged decode — one token against block-paged KV pools
+# --------------------------------------------------------------------------
+
+
+def supports_paged(cfg: ModelConfig) -> bool:
+    """Paged decode covers the full-cache dense/MoE paths: every KV row is
+    addressed by absolute position, so block tables substitute directly.
+    Rolled sliding-window and dual local:global caches fold positions
+    (slot = pos % W) and would alias rows across blocks."""
+    return (cfg.family in ("dense", "moe")
+            and cfg.sliding_window is None
+            and cfg.local_global_ratio == 0)
+
+
+def decode_step_paged(params: dict, token: jax.Array, cache: dict,
+                      block_tables: jax.Array, pos: jax.Array,
+                      cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    """One decode step against block-paged KV pools.
+
+    token: (B,) int32; cache: {"k","v"} of (L, N, bs, K, Dh) physical
+    blocks shared across the batch (+ int8 scale pools when KV-int8 is
+    on); block_tables: (B, M) int32 mapping each sequence's logical block
+    slots to physical blocks; pos: (B,) int32 absolute positions.  The
+    caller owns block allocation and position bookkeeping — this step
+    only writes one row per sequence and attends its table.  Returns
+    (logits (B, V), updated cache).
+    """
+    if not supports_paged(cfg):
+        raise NotImplementedError(
+            f"paged decode requires a full-cache dense/moe config, "
+            f"got {cfg.name} ({cfg.family})")
+    x = embed_tokens(params, token[:, None], cfg)
+    pos = jnp.asarray(pos, jnp.int32)
+    block_tables = jnp.asarray(block_tables, jnp.int32)
+
+    if attn.kv_int8_enabled(cfg):
+        def qbody(x, xs):
+            lp, kc, vc, ksc, vsc = xs
+            x, kc, vc, ksc, vsc = block_decode_paged_quant(
+                lp, x, kc, vc, ksc, vsc, block_tables, pos, cfg)
+            return x, (kc, vc, ksc, vsc)
+
+        x, (kn, vn, ksn, vsn) = jax.lax.scan(
+            qbody, x, (params["layers"], cache["k"], cache["v"],
+                       cache["k_scale"], cache["v_scale"]))
+        new_cache = dict(cache, k=kn, v=vn, k_scale=ksn, v_scale=vsn)
+        return lm_head(params, x, cfg)[:, 0], new_cache
+
+    def body(x, xs):
+        lp, kc, vc = xs
+        x, kc, vc = block_decode_paged(lp, x, kc, vc, block_tables, pos, cfg)
+        return x, (kc, vc)
+
+    x, (kn, vn) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"]))
+    new_cache = dict(cache, k=kn, v=vn)
     return lm_head(params, x, cfg)[:, 0], new_cache

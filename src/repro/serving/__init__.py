@@ -1,6 +1,9 @@
 from repro.serving.engine import (FunctionInstance, ServeRequest,
                                   ServingEngine)
 from repro.serving.frontend import ClusterFrontend, InstancePlacement
+from repro.serving.paging import (NULL_BLOCK, BlockExhausted,
+                                  KVPageAllocator, PageTable, blocks_needed)
 
 __all__ = ["ServingEngine", "FunctionInstance", "ServeRequest",
-           "ClusterFrontend", "InstancePlacement"]
+           "ClusterFrontend", "InstancePlacement", "KVPageAllocator",
+           "PageTable", "BlockExhausted", "NULL_BLOCK", "blocks_needed"]

@@ -18,6 +18,16 @@ per node:
   property the paper's throughput wins depend on.  ``batching="static"``
   keeps the old retire-together semantics as a reference implementation
   (the equivalence tests decode both ways and compare token streams).
+* **Block-paged KV (``batching="paged"``)** — the slot pool's dense
+  ``max_len`` rows are replaced by physical blocks of ``block_size``
+  tokens handed out by a ``KVPageAllocator``; admission budgets FREE
+  BLOCKS (a request needs ``ceil((prompt + new_tokens - 1)/block_size)``)
+  instead of just free slots, and a finished/drained request releases its
+  blocks immediately, so short requests stop stranding the memory the
+  MRA/``MemoryModel`` admission charged for them.  Decode walks per-slot
+  block tables (``Model.decode_step_paged``); token streams are
+  bit-identical to the dense path.  See ``serving/README.md`` for the
+  block-table layout.
 
 Topology: a ``ServingEngine`` is one node; ``repro.serving.frontend``
 routes requests across several engines (join-shortest-queue) and places
@@ -42,7 +52,9 @@ from repro.core.manager import TokenScheduler
 from repro.core.model_sharing import ModelStore
 from repro.core.resources import Alloc
 from repro.core.slo import SLORecorder
-from repro.models.model import Model
+from repro.models.model import Model, default_kv_blocks
+from repro.serving.paging import (NULL_BLOCK, KVPageAllocator, PageTable,
+                                  blocks_needed)
 
 
 def _bucket_len(n: int) -> int:
@@ -74,8 +86,9 @@ class FunctionInstance:
     def __init__(self, inst_id: str, model: Model, store: ModelStore,
                  weights_key: str, alloc: Alloc, *, max_batch: int = 4,
                  max_len: int = 64, batching: str = "continuous",
-                 prefill_buckets: bool = True):
-        if batching not in ("continuous", "static"):
+                 prefill_buckets: bool = True, block_size: int = 16,
+                 n_kv_blocks: Optional[int] = None):
+        if batching not in ("continuous", "static", "paged"):
             raise ValueError(f"unknown batching mode {batching!r}")
         self.inst_id = inst_id
         self.model = model
@@ -92,7 +105,8 @@ class FunctionInstance:
         # Bucketed chunked admission: prompts are right-padded to power-of-
         # two buckets so the jitted prefill sees O(log max_len) distinct
         # shapes instead of one per prompt length (each a recompile).
-        self.bucketed = (batching == "continuous" and prefill_buckets
+        self.bucketed = (batching in ("continuous", "paged")
+                         and prefill_buckets
                          and model.supports_bucketed_prefill())
         self._prefill_len = jax.jit(
             lambda p, t, n: model.prefill(p, t, max_len=max_len, length=n)
@@ -109,9 +123,49 @@ class FunctionInstance:
         self.active: list[ServeRequest] = []
         self.refills = 0  # mid-flight slot admissions (continuous only)
         self.last_fill = 0  # slots that did work in the latest run_step
+        # paged state: host-side block tables + positions, device-side pools.
+        if batching == "paged":
+            if not model.supports_paged():
+                raise ValueError(
+                    f"{model.cfg.name}: batching='paged' needs a full-cache "
+                    f"dense/moe config")
+            if block_size <= 0 or max_len % block_size:
+                raise ValueError(
+                    "block_size must be positive and divide max_len")
+            self.block_size = block_size
+            self.blocks_per_seq = max_len // block_size
+            n_blocks = (n_kv_blocks if n_kv_blocks is not None
+                        else default_kv_blocks(max_batch, max_len,
+                                               block_size))
+            self.allocator = KVPageAllocator(n_blocks, block_size)
+            self.pages = PageTable(self.allocator)
+            self._tables = np.full((max_batch, self.blocks_per_seq),
+                                   NULL_BLOCK, np.int32)
+            self._pos = np.zeros((max_batch,), np.int32)
+            self._block_bytes = model.kv_block_bytes(block_size)
+            self._decode_paged = jax.jit(model.decode_step_paged)
+            self._append = jax.jit(model.append_paged)
+            self.kv_bytes_peak = 0
 
     def close(self) -> None:
+        if self.batching == "paged":
+            self.pages.release_all()  # defensive: drained closes freed all
         self.store.put_back(self.weights_key)
+
+    # -- KV accounting -----------------------------------------------------
+
+    def kv_bytes_in_use(self) -> int:
+        """Physical KV bytes currently held by live requests (paged) or
+        reserved by the allocated pool (dense slot modes)."""
+        if self.batching == "paged":
+            return self.pages.bytes_in_use(self._block_bytes)
+        return (self.model.dense_kv_bytes(self.max_batch, self.max_len)
+                if self.cache is not None else 0)
+
+    def dense_kv_reserved(self) -> int:
+        """What the dense slot pool would reserve for this instance's
+        capacity — the baseline the paged pool is measured against."""
+        return self.model.dense_kv_bytes(self.max_batch, self.max_len)
 
     def has_work(self) -> bool:
         return bool(self.queue) or self.n_active() > 0
@@ -144,16 +198,33 @@ class FunctionInstance:
                                      jnp.int32(n))
         return self._prefill(self.params, jnp.asarray(prompt[None], jnp.int32))
 
+    def _kv_rows_needed(self, req: ServeRequest) -> int:
+        """KV rows a request writes over its lifetime: the prompt plus one
+        row per decode round (the final token is emitted, never cached)."""
+        return int(req.prompt.shape[0]) + req.max_new_tokens - 1
+
     def _admit(self) -> list[ServeRequest]:
         """Chunked admission: prefill queued requests one at a time into
-        free slots and merge their caches into the live decode batch."""
+        free slots and merge their caches into the live decode batch.
+
+        Paged mode budgets FREE BLOCKS, not just free slots: the head of
+        the queue is admitted only when the allocator can cover its whole
+        lifetime (prompt + decode rows), so a mid-flight pool exhaustion
+        is impossible and admission stays FIFO under block pressure.
+        """
         finished = []
+        paged = self.batching == "paged"
         # A refill = joining a batch that was already decoding before this
         # step; cold-start co-admissions in the same pass don't count.
         had_live = self.n_active() > 0
         for slot in range(self.max_batch):
             if self.slots[slot] is not None or not self.queue:
                 continue
+            head = self.queue[0]
+            if paged and head.max_new_tokens > 1 and not self.allocator.can_alloc(
+                    blocks_needed(self._kv_rows_needed(head),
+                                  self.block_size)):
+                break  # head-of-line waits for retiring requests' blocks
             req = self.queue.popleft()
             logits, entry = self._prefill_one(req.prompt)
             tok = int(self._clip_tok(
@@ -164,11 +235,25 @@ class FunctionInstance:
                 finished.append(req)
                 continue  # slot stays free for the next queued request
             if self.cache is None:
-                self.cache = self.model.init_slot_cache(self.max_batch,
-                                                        self.max_len)
+                self.cache = (self.model.init_paged_cache(
+                    self.allocator.n_blocks, self.block_size) if paged
+                    else self.model.init_slot_cache(self.max_batch,
+                                                    self.max_len))
             if had_live:
                 self.refills += 1  # joined a live decode batch mid-flight
-            self.cache = self._merge(self.cache, entry, jnp.int32(slot))
+            if paged:
+                # Sequences are keyed by SLOT, not req_id: slots are unique
+                # within the instance and always released before reuse,
+                # whereas req_ids from different engines can collide when
+                # an evict re-routes queued requests across nodes.
+                self.pages.allocate(slot, self._kv_rows_needed(req))
+                row = self.pages.row(slot, self.blocks_per_seq)
+                self._tables[slot] = row
+                self._pos[slot] = int(req.prompt.shape[0])
+                self.cache = self._append(self.cache, entry,
+                                          jnp.asarray(row, jnp.int32))
+            else:
+                self.cache = self._merge(self.cache, entry, jnp.int32(slot))
             self.slots[slot] = req
             self._slot_tok[slot] = tok
         return finished
@@ -189,6 +274,34 @@ class FunctionInstance:
                 req.done = True
                 finished.append(req)
                 self.slots[slot] = None  # freed immediately for refill
+        return finished
+
+    def _release_paged(self, slot: int) -> None:
+        """Free a finished slot's blocks and park the slot on the null
+        block so its garbage decode writes land in the trash page."""
+        self.pages.release(slot)
+        self._tables[slot] = NULL_BLOCK
+        self._pos[slot] = 0
+
+    def _decode_round_paged(self) -> list[ServeRequest]:
+        logits, self.cache = self._decode_paged(
+            self.params, jnp.asarray(self._slot_tok), self.cache,
+            jnp.asarray(self._tables), jnp.asarray(self._pos))
+        next_tok = self._clip_tok(
+            np.asarray(jnp.argmax(logits, axis=-1), np.int32))
+        finished = []
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue  # free slot decoded into the null block; ignore it
+            self._pos[slot] += 1
+            tok = int(next_tok[slot])
+            req.tokens_out.append(tok)
+            self._slot_tok[slot] = tok
+            if len(req.tokens_out) >= req.max_new_tokens:
+                req.done = True
+                finished.append(req)
+                self.slots[slot] = None
+                self._release_paged(slot)  # blocks reusable NOW
         return finished
 
     # -- static reference path ---------------------------------------------
@@ -259,8 +372,15 @@ class FunctionInstance:
             return finished
         finished = self._admit()
         self.last_fill = self.n_active() + len(finished)
+        if self.batching == "paged":
+            # Sample while admitted requests hold their blocks (the decode
+            # round below releases finishers immediately).
+            self.kv_bytes_peak = max(self.kv_bytes_peak,
+                                     self.kv_bytes_in_use())
         if self.n_active() > 0:
-            finished += self._decode_round_continuous()
+            finished += (self._decode_round_paged()
+                         if self.batching == "paged"
+                         else self._decode_round_continuous())
         return finished
 
 
@@ -285,8 +405,9 @@ class ServingEngine:
 
     def deploy(self, fn: str, model: Model, params: Any, alloc: Alloc, *,
                n_instances: int = 1, max_batch: int = 4, max_len: int = 64,
-               batching: str = "continuous",
-               prefill_buckets: bool = True) -> list[str]:
+               batching: str = "continuous", prefill_buckets: bool = True,
+               block_size: int = 16,
+               n_kv_blocks: Optional[int] = None) -> list[str]:
         if fn not in self.recorders:
             self.recorders[fn] = SLORecorder(fn=fn)
         if not self.store.contains(fn):
@@ -297,7 +418,9 @@ class ServingEngine:
             inst = FunctionInstance(inst_id, model, self.store, fn, alloc,
                                     max_batch=max_batch, max_len=max_len,
                                     batching=batching,
-                                    prefill_buckets=prefill_buckets)
+                                    prefill_buckets=prefill_buckets,
+                                    block_size=block_size,
+                                    n_kv_blocks=n_kv_blocks)
             self.instances[inst_id] = inst
             self.scheduler.register(inst_id, alloc)
             ids.append(inst_id)
@@ -345,6 +468,24 @@ class ServingEngine:
         if not candidates:
             raise KeyError(f"function {fn} has no instances")
         inst = min(candidates, key=lambda i: i.load())
+        # Reject requests that can never fit the instance's cache up front:
+        # a dense cache would clamp writes past max_len (silent corruption),
+        # a paged one would out-grow its block-table row mid-admission —
+        # or, worse, head-of-line livelock on a pool smaller than the
+        # request's lifetime (nothing in flight to ever free blocks).
+        rows = int(prompt.shape[0]) + max_new_tokens - 1
+        if rows > inst.max_len:
+            raise ValueError(
+                f"request needs {rows} KV rows (prompt "
+                f"{int(prompt.shape[0])} + {max_new_tokens} new tokens) > "
+                f"max_len {inst.max_len} of {inst.inst_id}")
+        if (inst.batching == "paged" and max_new_tokens > 1
+                and blocks_needed(rows, inst.block_size)
+                > inst.allocator.capacity):
+            raise ValueError(
+                f"request needs {blocks_needed(rows, inst.block_size)} KV "
+                f"blocks > pool capacity {inst.allocator.capacity} of "
+                f"{inst.inst_id}; raise n_kv_blocks or shorten the request")
         inst.queue.append(req)
         return req
 
@@ -389,3 +530,11 @@ class ServingEngine:
 
     def memory_bytes(self) -> int:
         return self.store.used_bytes()
+
+    def kv_bytes_in_use(self) -> int:
+        """Physical KV bytes live requests hold across this node."""
+        return sum(i.kv_bytes_in_use() for i in self.instances.values())
+
+    def dense_kv_reserved(self) -> int:
+        """What dense slot pools would reserve for the same capacity."""
+        return sum(i.dense_kv_reserved() for i in self.instances.values())

@@ -108,19 +108,38 @@ class ClusterFrontend:
     def place_instance(self, fn: str, model: Model, params: Any,
                        alloc: Alloc, *, max_batch: int = 4, max_len: int = 64,
                        batching: str = "continuous",
-                       framework_bytes: int = DEFAULT_FRAMEWORK_BYTES
-                       ) -> Optional[str]:
+                       framework_bytes: int = DEFAULT_FRAMEWORK_BYTES,
+                       block_size: int = 16,
+                       n_kv_blocks: Optional[int] = None) -> Optional[str]:
         """Place ONE instance via MRA + memory admission with spillover.
 
         Returns a ``node:inst_id`` handle, or None when no node has both a
         free rectangle and the memory headroom.  On engine failure after a
         successful rectangle reservation, the rectangle (and a freshly
         created ``MemoryModel`` entry) is rolled back instead of leaking.
+
+        Admission charges the instance's REAL decode-cache layout on top of
+        ``framework_bytes``: ``n_kv_blocks x block_bytes`` for a paged
+        instance, the dense ``max_batch x max_len`` slot pool otherwise —
+        so a paged deployment with a tight block budget admits more
+        replicas per node than its dense equivalent.
         """
+        kv_bytes = model.kv_cache_bytes(
+            batching=batching, max_batch=max_batch, max_len=max_len,
+            block_size=block_size, n_kv_blocks=n_kv_blocks)
         created_mm = fn not in self._fn_mm
         mm = self._fn_mm.setdefault(
             fn, MemoryModel(weight_bytes=pytree_nbytes(params),
-                            framework_bytes=framework_bytes))
+                            framework_bytes=framework_bytes + kv_bytes))
+        if mm.framework_bytes != framework_bytes + kv_bytes:
+            # The per-function MemoryModel is shared by all replicas; a
+            # placement with a different data-plane config would silently
+            # mis-account every node's footprint.
+            raise ValueError(
+                f"function {fn!r} already placed with a different "
+                f"per-instance footprint ({mm.framework_bytes} vs "
+                f"{framework_bytes + kv_bytes} bytes); one data-plane "
+                f"config per function")
 
         def rollback_mm() -> None:
             if created_mm and not any(p.fn == fn for p in self.placements):
@@ -142,7 +161,8 @@ class ClusterFrontend:
         try:
             inst_id = self.engines[placement.node].deploy(
                 fn, model, params, alloc, n_instances=1,
-                max_batch=max_batch, max_len=max_len, batching=batching)[0]
+                max_batch=max_batch, max_len=max_len, batching=batching,
+                block_size=block_size, n_kv_blocks=n_kv_blocks)[0]
         except Exception:
             # The rectangle was reserved before the engine ran; a failed
             # deploy must not leak it (or a provisional memory-model entry).
@@ -157,7 +177,9 @@ class ClusterFrontend:
     def deploy(self, fn: str, model: Model, params: Any, alloc: Alloc, *,
                n_instances: int = 1, max_batch: int = 4, max_len: int = 64,
                batching: str = "continuous",
-               framework_bytes: int = DEFAULT_FRAMEWORK_BYTES) -> list[str]:
+               framework_bytes: int = DEFAULT_FRAMEWORK_BYTES,
+               block_size: int = 16,
+               n_kv_blocks: Optional[int] = None) -> list[str]:
         """Place ``n_instances`` of ``fn`` across the fleet via MRA +
         memory admission; returns ``node:inst_id`` handles."""
         handles = []
@@ -165,7 +187,8 @@ class ClusterFrontend:
             handle = self.place_instance(
                 fn, model, params, alloc, max_batch=max_batch,
                 max_len=max_len, batching=batching,
-                framework_bytes=framework_bytes)
+                framework_bytes=framework_bytes,
+                block_size=block_size, n_kv_blocks=n_kv_blocks)
             if handle is None:
                 raise RuntimeError(
                     f"no node can host {fn} at alloc {alloc} "
@@ -260,6 +283,10 @@ class ClusterFrontend:
             if p.node == node and p.inst_id == inst_id:
                 self.pool.release(p.placement)
                 self.placements.remove(p)
+                if not any(q.fn == p.fn for q in self.placements):
+                    # Fully drained: drop the per-function MemoryModel so a
+                    # redeploy may use a different data-plane config.
+                    self._fn_mm.pop(p.fn, None)
                 return
 
     # -- metrics -----------------------------------------------------------
@@ -288,6 +315,14 @@ class ClusterFrontend:
 
     def memory_bytes(self) -> int:
         return sum(e.memory_bytes() for e in self.engines)
+
+    def kv_bytes_in_use(self) -> int:
+        """Physical KV bytes live requests hold across the fleet."""
+        return sum(e.kv_bytes_in_use() for e in self.engines)
+
+    def dense_kv_reserved(self) -> int:
+        """Dense slot-pool reservation for the fleet's current capacity."""
+        return sum(e.dense_kv_reserved() for e in self.engines)
 
     def recorder(self, fn: str):
         """Merged view is unnecessary: latency records live per node."""

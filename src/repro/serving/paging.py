@@ -1,0 +1,218 @@
+"""Block-paged KV cache bookkeeping (vLLM-style) for the live data plane.
+
+The dense slot pool (`Model.init_slot_cache`) reserves a full ``max_len``
+KV row per decode slot, so a short request strands most of the memory the
+MRA/``MemoryModel`` admission charged for it — exactly the fragmentation
+FaST-GShare's fine-grained accounting is supposed to prevent.  This module
+is the host-side half of the paged replacement:
+
+* ``KVPageAllocator`` — a free-list allocator over ``n_blocks`` physical
+  KV blocks of ``block_size`` tokens each.  Block 0 is reserved as the
+  **null block**: free decode slots and padded block-table entries all
+  point at it, so their garbage writes land in a trash page instead of a
+  live sequence's memory.  Double frees are rejected, alloc/free/defrag
+  stats are tracked, and the free list is kept sorted (lowest id first)
+  so reuse stays dense at the front of the pool.
+* ``PageTable`` — per-sequence block lists: which physical blocks hold a
+  sequence's KV rows, in logical order.  ``row`` pads a sequence's list
+  to the fixed ``max_blocks`` width the jitted decode step expects.
+
+The device-side half lives in ``repro.models``: paged cache layout
+(``Model.init_paged_cache``), prefill scatter (``append_paged``), the
+contiguous re-gather (``gather_pages``) and the block-table decode step
+(``decode_step_paged``).  ``FunctionInstance(batching="paged")`` in
+``repro.serving.engine`` ties the two together.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+NULL_BLOCK = 0
+
+
+def blocks_needed(n_tokens: int, block_size: int) -> int:
+    """Physical blocks required to hold ``n_tokens`` KV rows."""
+    if n_tokens <= 0:
+        return 0
+    return -(-n_tokens // block_size)
+
+
+class BlockExhausted(RuntimeError):
+    """The pool has fewer free blocks than the allocation asked for."""
+
+
+class KVPageAllocator:
+    """Free-list allocator over a fixed pool of physical KV blocks.
+
+    Block ``NULL_BLOCK`` (id 0) is never handed out: it is the shared
+    trash page that free decode slots and block-table padding point at.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int):
+        if n_blocks < 2:
+            raise ValueError("need at least 2 blocks (one is the null block)")
+        if block_size <= 0:
+            raise ValueError("block_size must be positive")
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        # Free list: frees are appended (recently-freed blocks are reused
+        # first); ``defrag`` re-sorts so allocation returns to preferring
+        # the lowest ids and the live region re-packs at the pool front.
+        self._free: list[int] = list(range(1, n_blocks))
+        self._allocated: set[int] = set()
+        self.n_allocs = 0
+        self.n_frees = 0
+        self.n_defrags = 0
+        self.high_watermark = 0  # peak blocks_in_use over the pool lifetime
+
+    # -- capacity ----------------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        """Usable blocks (the null block is not allocatable)."""
+        return self.n_blocks - 1
+
+    @property
+    def blocks_in_use(self) -> int:
+        return len(self._allocated)
+
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    # -- alloc / free ------------------------------------------------------
+
+    def alloc(self, n: int) -> list[int]:
+        """Take ``n`` blocks off the front of the free list."""
+        if n < 0:
+            raise ValueError("cannot allocate a negative block count")
+        if n > len(self._free):
+            raise BlockExhausted(
+                f"need {n} blocks, only {len(self._free)} free "
+                f"(capacity {self.capacity})")
+        taken, self._free = self._free[:n], self._free[n:]
+        self._allocated.update(taken)
+        self.n_allocs += n
+        self.high_watermark = max(self.high_watermark, self.blocks_in_use)
+        return taken
+
+    def free(self, blocks: list[int]) -> None:
+        """Return blocks to the free list; rejects double/foreign frees.
+
+        All-or-nothing: validation (including duplicates WITHIN the list)
+        happens before any state changes, so a rejected free never loses
+        blocks.
+        """
+        seen: set[int] = set()
+        for b in blocks:
+            if b not in self._allocated or b in seen:
+                raise ValueError(
+                    f"block {b} is not allocated (double free or foreign "
+                    f"block)")
+            seen.add(b)
+        for b in blocks:
+            self._allocated.remove(b)
+        self._free.extend(blocks)
+        self.n_frees += len(blocks)
+
+    # -- stats -------------------------------------------------------------
+
+    def fragmentation(self) -> float:
+        """1 - (largest contiguous free run / free blocks); 0 = compact.
+
+        Measured on the id-sorted view — it describes the free *address
+        space*, not the reuse order of the list itself.
+        """
+        if not self._free:
+            return 0.0
+        ordered = sorted(self._free)
+        best = run = 1
+        for prev, cur in zip(ordered, ordered[1:]):
+            run = run + 1 if cur == prev + 1 else 1
+            best = max(best, run)
+        return 1.0 - best / len(ordered)
+
+    def defrag(self) -> float:
+        """Re-sort the free list and report the remaining fragmentation.
+
+        Frees append in retire order, so a long-lived pool drifts toward
+        allocating scattered ids; defrag restores lowest-id-first reuse so
+        the live region re-packs at the pool front.  Physical compaction
+        (migrating live blocks) is the engine's job — it owns the device
+        arrays.
+        """
+        self._free.sort()
+        self.n_defrags += 1
+        return self.fragmentation()
+
+    def stats(self) -> dict[str, float]:
+        return {
+            "capacity": self.capacity,
+            "in_use": self.blocks_in_use,
+            "free": self.free_blocks(),
+            "allocs": self.n_allocs,
+            "frees": self.n_frees,
+            "defrags": self.n_defrags,
+            "high_watermark": self.high_watermark,
+            "fragmentation": self.fragmentation(),
+        }
+
+
+@dataclasses.dataclass
+class PageTable:
+    """Per-sequence block lists over one ``KVPageAllocator``.
+
+    Keys are caller-chosen sequence ids — the engine uses its decode-slot
+    indices, NOT request ids (req-id counters are per-engine and collide
+    when an evict re-routes queued requests across nodes; slots are unique
+    within the instance and always released before reuse).  Values are the
+    physical block ids holding the sequence's KV rows in logical order.
+    """
+
+    allocator: KVPageAllocator
+    seqs: dict[int, list[int]] = dataclasses.field(default_factory=dict)
+
+    def allocate(self, seq_id: int, n_tokens: int) -> list[int]:
+        """Reserve enough blocks for ``n_tokens`` rows of sequence ``seq_id``."""
+        if seq_id in self.seqs:
+            raise ValueError(f"sequence {seq_id} already has pages")
+        blocks = self.allocator.alloc(
+            blocks_needed(n_tokens, self.allocator.block_size))
+        self.seqs[seq_id] = blocks
+        return blocks
+
+    def blocks(self, seq_id: int) -> list[int]:
+        return self.seqs[seq_id]
+
+    def release(self, seq_id: int) -> list[int]:
+        """Free a sequence's blocks back to the allocator."""
+        blocks = self.seqs.pop(seq_id)
+        self.allocator.free(blocks)
+        return blocks
+
+    def release_all(self) -> int:
+        """Drop every sequence (instance teardown); returns blocks freed."""
+        n = 0
+        for seq_id in list(self.seqs):
+            n += len(self.release(seq_id))
+        return n
+
+    def row(self, seq_id: int, max_blocks: int) -> list[int]:
+        """Block-table row padded with the null block to ``max_blocks``."""
+        blocks = self.seqs[seq_id]
+        if len(blocks) > max_blocks:
+            raise ValueError(
+                f"sequence {seq_id} holds {len(blocks)} blocks > "
+                f"max_blocks {max_blocks}")
+        return blocks + [NULL_BLOCK] * (max_blocks - len(blocks))
+
+    @property
+    def n_seqs(self) -> int:
+        return len(self.seqs)
+
+    def bytes_in_use(self, block_bytes: int) -> int:
+        """Physical KV bytes held by live sequences."""
+        return self.allocator.blocks_in_use * block_bytes

@@ -136,3 +136,66 @@ def test_model_flops_sanity():
     # MoE counts active params only.
     moe = get_config("mixtral-8x7b")
     assert moe.active_param_count() < 0.45 * moe.param_count()
+
+
+# -- decode-round alpha calibration (ServiceCurve.round_time) ---------------
+
+
+def test_decode_round_alpha_weight_vs_kv_bound():
+    """qwen2-7b decode: weight-bound at short context (alpha -> 1),
+    KV-bound as context grows (alpha monotonically decreasing)."""
+    from repro.analysis.roofline import decode_round_alpha
+
+    cfg = get_config("qwen2_7b")
+    alphas = [decode_round_alpha(cfg, s) for s in (128, 2048, 32768, 524288)]
+    assert alphas[0] > 0.9, "short-context decode must be weight-bound"
+    assert all(a1 > a2 for a1, a2 in zip(alphas, alphas[1:])), \
+        "alpha must fall monotonically with context length"
+    assert all(0.0 < a < 1.0 for a in alphas)
+
+
+def test_calibrated_alpha_preserves_single_slot_rates():
+    """Calibration changes batching economics, not the paper-calibrated
+    single-request service rates (round_time(sm, 1) == step_time(sm, 1))."""
+    from repro.core.workload import PAPER_ZOO, calibrate_round_alpha
+
+    cfg = get_config("qwen2_7b")
+    base = PAPER_ZOO["rnnt"]
+    cal = calibrate_round_alpha(base, cfg, seq_len=2048)
+    assert cal.alpha != base.alpha
+    for sm in (0.12, 0.24, 1.0):
+        assert cal.round_time(sm, 1) == pytest.approx(base.step_time(sm, 1))
+        assert cal.round_time(sm, 1) == pytest.approx(base.round_time(sm, 1))
+    # More weight-bound than the 0.5 default => fuller batches are cheaper
+    # per slot: the 8-slot round must cost LESS than the uncalibrated model.
+    assert cal.alpha > 0.5
+    assert cal.round_time(0.12, 8) < base.round_time(0.12, 8)
+
+
+def test_cluster_uses_curve_alpha_by_default():
+    """Cluster(batch_alpha=None) must dispatch rounds at each curve's own
+    calibrated alpha; an explicit batch_alpha still overrides globally."""
+    import dataclasses as _dc
+
+    from repro.core.cluster import Cluster
+    from repro.core.scaling import ProfilePoint
+    from repro.core.workload import PAPER_ZOO, Request
+
+    curve = _dc.replace(PAPER_ZOO["rnnt"], alpha=0.9)
+
+    def run(**kw):
+        cluster = Cluster(n_nodes=1, max_batch=4, continuous=True, **kw)
+        cluster.register_function("f", curve)
+        assert cluster.deploy(
+            "f", ProfilePoint(sm=0.24, quota=1.0, throughput=0.0)) is not None
+        for i in range(4):
+            cluster.submit(Request(fn="f", arrival=0.01, req_id=i,
+                                   n_tokens=8))
+        cluster.run(60.0)
+        rec = cluster.recorders["f"]
+        assert rec.count() == 4
+        return max(rec.latencies)
+
+    # alpha=0.9: a 4-slot round costs (0.9 + 0.1*4)/rate = 1.3/rate, vs the
+    # 0.5 default's 2.5/rate — the calibrated run must finish faster.
+    assert run() < run(batch_alpha=0.5)
