@@ -6,6 +6,7 @@
   fig11  scheduler_packing    MRA packing, utilization/occupancy gains
   fig12  autoscale_slo        Alg.-1 autoscaling holds the 69 ms SLO
   fig13  model_sharing_mem    model-sharing memory footprints
+  fault  fault_tolerance      reconciler healing after a node failure
   head   headline             3.15x / 1.34x / 3.13x aggregate claims
   roof   roofline_table       (arch x shape x mesh) roofline from dry-run
 
@@ -29,6 +30,7 @@ MODULES = [
     ("fig11", "benchmarks.scheduler_packing"),
     ("fig12", "benchmarks.autoscale_slo"),
     ("fig13", "benchmarks.model_sharing_mem"),
+    ("fault", "benchmarks.fault_tolerance"),
     ("head", "benchmarks.headline"),
     ("roof", "benchmarks.roofline_table"),
 ]
@@ -37,7 +39,8 @@ MODULES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset (fig8..fig13,head,roof)")
+                    help="comma-separated subset "
+                         "(fig8..fig13,fault,head,roof)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 

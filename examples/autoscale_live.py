@@ -11,8 +11,19 @@ run asserts **zero dropped in-flight requests**.  The same spec is then
 replayed through the simulator backend and the two decision logs are
 compared entry for entry.
 
-Run:  PYTHONPATH=src python examples/autoscale_live.py
+With ``--fail-node`` the busiest node is killed mid-burst: its instances
+(weights, KV) die instantly and every stranded request re-executes on the
+healed fleet.  ``fail_node`` itself places nothing — the next reconcile
+tick prunes the dead pods from L_j (``Backend.alive``) and the processing
+gap + below-floor healing re-converge the fleet.  The run still asserts
+zero dropped requests, and the simulator replay (same failure injected at
+the same tick) still produces the identical decision sequence.
+
+Run:  PYTHONPATH=src python examples/autoscale_live.py [--fail-node]
 """
+
+import argparse
+from collections import Counter
 
 import jax
 import numpy as np
@@ -36,6 +47,7 @@ PROFILE = (
 
 RAMP = ramp([(0.0, 1.0), (3.0, 12.0), (7.0, 1.0)])
 TICKS = 11
+FAIL_TICK = 5  # mid-burst, --fail-node only
 
 
 def make_model():
@@ -55,16 +67,33 @@ def make_spec() -> FunctionSpec:
                            weight_bytes=1 << 20, framework_bytes=32 << 20))
 
 
+def busiest_node(plane: ControlPlane, backend) -> int:
+    counts = Counter(backend.node_of(p) for p in plane.placed["chat"])
+    return counts.most_common(1)[0][0]
+
+
 def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--fail-node", action="store_true",
+                        help="kill the busiest node mid-burst and let the "
+                             "reconciler heal the fleet")
+    args = parser.parse_args()
+
     # -- live fleet ------------------------------------------------------
     frontend = ClusterFrontend(n_nodes=2, window=0.1)
-    live = ControlPlane(LiveBackend(frontend))
+    backend = LiveBackend(frontend)
+    live = ControlPlane(backend)
     live.register(make_spec())
     print(f"[live] registered: {live.instances('chat')} instance(s)")
 
     rng = np.random.default_rng(0)
     reqs = []
     for tick in range(TICKS):
+        if args.fail_node and tick == FAIL_TICK:
+            victim = busiest_node(live, backend)
+            lost = frontend.fail_node(victim)
+            print(f"  t={tick:2d} node {victim} FAILED: {lost} instance(s) "
+                  f"lost, stranded requests re-queued; reconcile heals")
         live.reconcile(now=float(tick))
         n_inst = live.instances("chat")
         # Offer load matching the declared ramp; prompts of varying length
@@ -83,15 +112,23 @@ def main() -> None:
     assert live.instances("chat") == 1, "ramp-down must return to the floor"
     done = sum(1 for r in reqs if r.done)
     assert done == len(reqs), f"dropped {len(reqs) - done} in-flight requests"
+    if args.fail_node:
+        healed = next(e for e in live.events if e.pruned)
+        print(f"[live] t={healed.now:.0f}: reconcile pruned "
+              f"{len(healed.pruned)} dead pod(s) and re-placed "
+              f"{sum(1 for d in healed.applied if d.direction > 0)}")
     print(f"[live] served {done}/{len(reqs)} requests "
-          f"(zero dropped across scale-up AND drain-down), peak "
-          f"instances={peak}")
+          f"(zero dropped across scale-up, {'node failure, ' if args.fail_node else ''}"
+          f"AND drain-down), peak instances={peak}")
 
-    # -- simulator replay of the same spec -------------------------------
+    # -- simulator replay of the same spec (same failure injected) --------
     cluster = Cluster(n_nodes=2, sharing=True)
-    sim = ControlPlane(SimBackend(cluster))
+    sim_backend = SimBackend(cluster)
+    sim = ControlPlane(sim_backend)
     sim.register(make_spec())
     for tick in range(TICKS):
+        if args.fail_node and tick == FAIL_TICK:
+            cluster.fail_node(busiest_node(sim, sim_backend))
         sim.reconcile(now=float(tick))
 
     live_sig = decision_signature(live.log)

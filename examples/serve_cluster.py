@@ -54,12 +54,14 @@ def main() -> None:
 
     cluster.sim.after(0.5, control)
 
-    # 3. Kill a node mid-run: pods re-placed via MRA, requests re-queued.
+    # 3. Kill a node mid-run: the failure path only records the damage
+    #    (pods dead, requests re-queued); the 0.5 s Alg.-1 control loop
+    #    above sees the lost L_j capacity and re-places on survivors.
     def failure() -> None:
         victim = next((n.node_id for n in cluster.nodes if n.pods), 0)
-        replaced = cluster.fail_node(victim)
+        lost = cluster.fail_node(victim)
         print(f"[t={cluster.sim.now:5.1f}] node {victim} FAILED; "
-              f"{replaced} pods re-placed on survivors")
+              f"{lost} pods lost — the autoscale loop heals the gap")
 
     cluster.sim.at(DURATION / 2, failure)
     cluster.run(DURATION + 10)

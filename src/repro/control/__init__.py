@@ -8,15 +8,20 @@ code.  See ``src/repro/control/README.md`` for the paper-symbol mapping.
 """
 
 from repro.control.backend import Backend, LiveBackend, SimBackend
-from repro.control.plane import (ControlPlane, ReconcileEvent,
-                                 decision_signature)
-from repro.control.spec import FunctionSpec, RPSSource, ramp
+from repro.control.plane import (ControlPlane, MigrationEvent,
+                                 ReconcileEvent, decision_signature)
+from repro.control.spec import (DemandSource, EWMADemand, FunctionSpec,
+                                HoltWintersDemand, RPSSource, ramp)
 
 __all__ = [
     "Backend",
     "ControlPlane",
+    "DemandSource",
+    "EWMADemand",
     "FunctionSpec",
+    "HoltWintersDemand",
     "LiveBackend",
+    "MigrationEvent",
     "RPSSource",
     "ReconcileEvent",
     "SimBackend",

@@ -1,7 +1,7 @@
 """Backend protocol: the thin seam between the reconciler and a fleet.
 
 The ``ControlPlane`` never touches nodes, rectangles, or engines directly —
-it sees a fleet through four verbs:
+it sees a fleet through a small verb set:
 
 * ``place(spec, point)``   — deploy one instance at a profile point (MRA +
   memory admission with spillover happen inside); returns the concrete pod
@@ -9,8 +9,21 @@ it sees a fleet through four verbs:
 * ``evict(spec, pod_id)``  — gracefully retire an instance: stop routing,
   drain its in-flight decode slots, then release its rectangle and weight
   refcount.
+* ``alive(pod_id)``        — whether a placed pod still exists on a live
+  node; the reconciler prunes dead pods from L_j/``placed`` with this, so
+  node failures heal through the ordinary processing gap.
+* ``node_of(pod_id)``      — which node hosts a pod (defrag victim
+  selection).
+* ``fragmentation()``      — per-node MRA fragmentation telemetry over
+  schedulable nodes.
+* ``node_load()``          — per-node allocated-area fraction (defrag
+  target selection).
+* ``migrate(spec, pod_id, target)`` — move one running pod to a target
+  node with its queue and occupied decode slots intact (a real KV move on
+  the live path); returns the new pod id or None when it cannot move.
 * ``observed_rps(fn, w)``  — trailing-window arrival rate (used when the
-  spec declares no target-RPS source).
+  spec declares no target-RPS source, and to feed predictive
+  ``DemandSource``s).
 * ``inflight(fn)``         — queued + slot-occupying requests (reported in
   reconcile telemetry).
 
@@ -19,7 +32,7 @@ Two implementations ship: ``SimBackend`` over the discrete-event
 ``repro.serving.frontend.ClusterFrontend``.  Both are deliberately thin —
 every scheduling decision lives in the shared ``ControlPlane``, which is
 what lets a live fleet be replayed through the simulator decision-for-
-decision.
+decision, node failures included.
 """
 
 from __future__ import annotations
@@ -40,6 +53,17 @@ class Backend(Protocol):
               point: ProfilePoint) -> Optional[str]: ...
 
     def evict(self, spec: FunctionSpec, pod_id: str) -> None: ...
+
+    def alive(self, pod_id: str) -> bool: ...
+
+    def node_of(self, pod_id: str) -> Optional[int]: ...
+
+    def fragmentation(self) -> dict[int, float]: ...
+
+    def node_load(self) -> dict[int, float]: ...
+
+    def migrate(self, spec: FunctionSpec, pod_id: str,
+                target: int) -> Optional[str]: ...
 
     def observed_rps(self, fn: str, window: float) -> float: ...
 
@@ -74,9 +98,29 @@ class SimBackend:
                                    track=False)
 
     def evict(self, spec: FunctionSpec, pod_id: str) -> None:
-        # The pod can be gone already if its node failed mid-window.
+        # Idempotent by design, but NOT the dead-pod authority: the
+        # reconciler prunes pods that died behind its back via ``alive``
+        # at the top of every tick, so a scale-down can only ever name a
+        # pod that existed when the tick started (it may still lose a race
+        # against a mid-tick failure, hence the tolerance here).
         if pod_id in self.cluster.pods:
             self.cluster.retire(pod_id, drain=True)
+
+    def alive(self, pod_id: str) -> bool:
+        return self.cluster.alive(pod_id)
+
+    def node_of(self, pod_id: str) -> Optional[int]:
+        return self.cluster.node_of(pod_id)
+
+    def fragmentation(self) -> dict[int, float]:
+        return self.cluster.fragmentation()
+
+    def node_load(self) -> dict[int, float]:
+        return self.cluster.node_load()
+
+    def migrate(self, spec: FunctionSpec, pod_id: str,
+                target: int) -> Optional[str]:
+        return self.cluster.migrate(pod_id, target)
 
     def observed_rps(self, fn: str, window: float) -> float:
         return self.cluster.observed_rps(fn, window)
@@ -125,7 +169,27 @@ class LiveBackend:
             block_size=spec.block_size, n_kv_blocks=n_kv_blocks)
 
     def evict(self, spec: FunctionSpec, pod_id: str) -> None:
-        self.frontend.evict(pod_id)
+        # Same mid-tick failure tolerance as SimBackend.evict.
+        if self.frontend.alive(pod_id):
+            self.frontend.evict(pod_id)
+
+    def alive(self, pod_id: str) -> bool:
+        return self.frontend.alive(pod_id)
+
+    def node_of(self, pod_id: str) -> Optional[int]:
+        return self.frontend.node_of(pod_id)
+
+    def fragmentation(self) -> dict[int, float]:
+        return self.frontend.fragmentation()
+
+    def node_load(self) -> dict[int, float]:
+        return self.frontend.node_load()
+
+    def migrate(self, spec: FunctionSpec, pod_id: str,
+                target: int) -> Optional[str]:
+        model, params = self._models[spec.name]
+        return self.frontend.migrate(spec.name, pod_id, model, params,
+                                     target)
 
     def observed_rps(self, fn: str, window: float) -> float:
         return self.frontend.observed_rps(fn, window)

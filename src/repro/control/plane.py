@@ -2,9 +2,15 @@
 
 One ``reconcile(now)`` tick is the paper's closed loop:
 
+0. **Prune** — pods that died behind the reconciler's back (node failure)
+   are dropped from ``placed`` and the L_j capacity queue via
+   ``backend.alive``, so the gap below sees the real fleet.  This is the
+   entire failure-recovery story: a dead pod is just missing capacity,
+   and steps 1-4 re-converge it — identically on both backends.
 1. **Demand** — per function, read ``R_j`` from the spec's target-RPS
-   source (deterministic replay) or the backend's observed trailing-window
-   arrival rate, then inflate by the spec's headroom.
+   source (deterministic replay; predictive ``DemandSource``s are fed the
+   backend's observed rate first) or the backend's observed trailing-
+   window arrival rate, then inflate by the spec's headroom.
 2. **Gap** — ``ΔRPS_j = R_j - Σ_i T_{j,i}`` over the L_j capacity queue
    (``processing_gap``).
 3. **Decide** — ``heuristic_scale`` (Alg. 1) filtered to SLO-feasible
@@ -17,11 +23,17 @@ One ``reconcile(now)`` tick is the paper's closed loop:
    victim's in-flight slots before releasing its rectangle and weight
    refcount.  ``min/max_instances`` clamps are applied here, on top of
    Alg. 1.
+5. **Defragment** — when the worst node's MRA fragmentation exceeds
+   ``defrag_threshold``, the lowest-RPR pod on that node migrates to the
+   least-loaded node that admits it (``backend.migrate`` — a real KV move
+   on the live path).  Migrations re-key L_j entries in place; they are
+   capacity-neutral and logged separately (``migrations``), never in the
+   decision log, so replay signatures stay backend-independent.
 
-Because every decision is computed here — the backend only places and
-evicts — the simulator and the live JAX data plane run literally the same
-scheduler code, and a live run can be replayed through the simulator
-decision-for-decision.
+Because every decision is computed here — the backend only places,
+evicts, and moves — the simulator and the live JAX data plane run
+literally the same scheduler code, and a live run can be replayed through
+the simulator decision-for-decision, node failures included.
 """
 
 from __future__ import annotations
@@ -31,7 +43,7 @@ from collections import deque
 from typing import Iterable, Optional
 
 from repro.control.backend import Backend
-from repro.control.spec import FunctionSpec
+from repro.control.spec import DemandSource, FunctionSpec
 from repro.core.scaling import (FunctionPodQueue, ProfilePoint, ScaleDecision,
                                 heuristic_scale, processing_gap)
 
@@ -59,23 +71,45 @@ class ReconcileEvent:
     instances_before: int
     inflight: int
     applied: list[ScaleDecision] = dataclasses.field(default_factory=list)
+    pruned: list[str] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationEvent:
+    """One defragmentation move applied by the reconciler."""
+
+    now: float
+    fn: str
+    old_pod: str
+    new_pod: str
+    source: int
+    target: int
+    fragmentation: float  # source-node fragmentation that triggered it
 
 
 class ControlPlane:
     """Declarative reconciler over any :class:`Backend`.
 
     ``history`` bounds the retained telemetry (``log`` / ``events``) so a
-    long-lived control loop doesn't grow without bound.
+    long-lived control loop doesn't grow without bound.  ``defrag_threshold``
+    arms the defragmentation pass: when any node's MRA fragmentation
+    exceeds it, up to ``defrag_max_moves`` lowest-RPR pods migrate off the
+    worst node per tick (None disables the pass).
     """
 
-    def __init__(self, backend: Backend, history: int = 10_000):
+    def __init__(self, backend: Backend, history: int = 10_000,
+                 defrag_threshold: Optional[float] = None,
+                 defrag_max_moves: int = 1):
         self.backend = backend
+        self.defrag_threshold = defrag_threshold
+        self.defrag_max_moves = defrag_max_moves
         self.specs: dict[str, FunctionSpec] = {}
         self.queues: dict[str, FunctionPodQueue] = {}
         # fn -> pod_id -> profile point, for every live instance we placed.
         self.placed: dict[str, dict[str, ProfilePoint]] = {}
         self.log: deque[ScaleDecision] = deque(maxlen=history)
         self.events: deque[ReconcileEvent] = deque(maxlen=history)
+        self.migrations: deque[MigrationEvent] = deque(maxlen=history)
 
     # -- registration ------------------------------------------------------
 
@@ -131,17 +165,37 @@ class ControlPlane:
         """
         if now is None:
             now = self.backend.now()
+        # Prune pods that died behind our back (node failure): L_j and
+        # ``placed`` are authoritative only over pods the backend still
+        # reports alive, so the gap below re-provisions lost capacity.
+        pruned: dict[str, list[str]] = {}
+        for fn in self.specs:
+            gone = [p for p in self.placed[fn]
+                    if not self.backend.alive(p)]
+            for pod_id in gone:
+                self.placed[fn].pop(pod_id)
+                self.queues[fn].remove(pod_id)
+            if gone:
+                pruned[fn] = gone
         demand: dict[str, float] = {}
         pre: dict[str, ReconcileEvent] = {}
         for fn, spec in self.specs.items():
-            rps = (spec.target_rps(now) if spec.target_rps is not None
-                   else self.backend.observed_rps(fn, spec.rps_window))
+            source = spec.target_rps
+            if source is None:
+                rps = self.backend.observed_rps(fn, spec.rps_window)
+            else:
+                if isinstance(source, DemandSource):
+                    # Forecasters eat the arrival log, one tick at a time.
+                    source.observe(
+                        now, self.backend.observed_rps(fn, spec.rps_window))
+                rps = source(now)
             demand[fn] = rps * spec.headroom
             pre[fn] = ReconcileEvent(
                 now=now, fn=fn, target_rps=rps,
                 capacity_before=self.queues[fn].capacity(),
                 instances_before=len(self.placed[fn]),
-                inflight=self.backend.inflight(fn))
+                inflight=self.backend.inflight(fn),
+                pruned=pruned.get(fn, []))
         gaps = processing_gap(demand, self.queues)
         # SLO feasibility is filtered once, by the spec (the same filter
         # best_point() used at registration) — heuristic_scale's own
@@ -182,8 +236,60 @@ class ControlPlane:
                 if real is None:
                     break  # still no capacity; retry next tick
                 applied.append(ScaleDecision(fn, point, +1, pod_id=real))
+        # Defragmentation: heal the MRA rectangle space a long ramp
+        # shattered by moving cheap pods off the worst node.
+        if self.defrag_threshold is not None:
+            self._defrag(now)
         for d in applied:
             pre[d.function].applied.append(d)
         self.events.extend(pre.values())
         self.log.extend(applied)
         return applied
+
+    # -- defragmentation ---------------------------------------------------
+
+    def _defrag(self, now: float) -> list[MigrationEvent]:
+        """Migrate up to ``defrag_max_moves`` lowest-RPR pods off the most
+        fragmented node to the least-loaded node that admits them.
+
+        Migrations are capacity-neutral: the pod keeps its profile point,
+        its L_j entry is re-keyed, and nothing enters the decision log —
+        so a simulator replay's ``decision_signature`` is unaffected by
+        how (or whether) the two fleets happened to defragment.
+        """
+        moved: list[MigrationEvent] = []
+        for _ in range(self.defrag_max_moves):
+            frag = self.backend.fragmentation()
+            if not frag:
+                break
+            worst = max(sorted(frag), key=lambda n: frag[n])
+            if frag[worst] <= self.defrag_threshold:
+                break
+            # Victim: the lowest-RPR pod we placed on the worst node (the
+            # cheapest capacity to move, per Alg. 1's own eviction order).
+            cands = [(point.rpr, pod_id, fn)
+                     for fn, pods in self.placed.items()
+                     for pod_id, point in pods.items()
+                     if self.backend.node_of(pod_id) == worst]
+            if not cands:
+                break
+            _, pod_id, fn = min(cands)
+            spec = self.specs[fn]
+            loads = self.backend.node_load()
+            new_id = None
+            for target in sorted((n for n in loads if n != worst),
+                                 key=lambda n: (loads[n], n)):
+                new_id = self.backend.migrate(spec, pod_id, target)
+                if new_id is not None:
+                    break
+            if new_id is None:
+                break  # nothing admits it (or the pod is mid-step): retry
+            self.placed[fn][new_id] = self.placed[fn].pop(pod_id)
+            self.queues[fn].rekey(pod_id, new_id)
+            event = MigrationEvent(now=now, fn=fn, old_pod=pod_id,
+                                   new_pod=new_id, source=worst,
+                                   target=target,
+                                   fragmentation=frag[worst])
+            self.migrations.append(event)
+            moved.append(event)
+        return moved

@@ -51,6 +51,101 @@ def ramp(steps: Sequence[tuple[float, float]]) -> RPSSource:
     return source
 
 
+class DemandSource:
+    """A *predictive* target-RPS source fed from the backend arrival log.
+
+    A plain ``RPSSource`` callable is an oracle (a declared trace); a
+    ``DemandSource`` is a forecaster: the reconciler calls
+    ``observe(now, rps)`` with the backend's trailing-window arrival rate
+    at the top of every tick, then reads the one-tick-ahead forecast via
+    ``__call__(now)``.  Construct one instance per control plane — the
+    state is the forecast, so sharing a source between a live fleet and
+    its simulator replay would double-feed it.
+    """
+
+    def observe(self, now: float, rps: float) -> None:
+        raise NotImplementedError
+
+    def __call__(self, now: float) -> float:
+        raise NotImplementedError
+
+
+class EWMADemand(DemandSource):
+    """Exponentially-weighted moving average of observed RPS.
+
+    ``level <- alpha * obs + (1 - alpha) * level``; the forecast is the
+    level.  Reacts to an RPS step within ~``1/alpha`` ticks instead of
+    waiting out the full trailing ``rps_window`` — shrinking the
+    detection-lag SLO-violation window — while smoothing Poisson noise a
+    raw last-window estimate passes straight through.
+    """
+
+    def __init__(self, alpha: float = 0.5):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError("need 0 < alpha <= 1")
+        self.alpha = alpha
+        self.level: Optional[float] = None
+
+    def observe(self, now: float, rps: float) -> None:
+        self.level = (rps if self.level is None
+                      else self.alpha * rps + (1 - self.alpha) * self.level)
+
+    def __call__(self, now: float) -> float:
+        return max(self.level or 0.0, 0.0)
+
+
+class HoltWintersDemand(DemandSource):
+    """Holt-Winters (triple-exponential) forecast of observed RPS.
+
+    Level + trend (Holt's linear method), plus an optional additive
+    seasonal component of ``season`` ticks (set ``season=None`` for
+    non-periodic traffic).  The trend term *extrapolates* a ramp one tick
+    ahead instead of trailing it, so capacity is provisioned before the
+    arrivals land; ``horizon`` scales how far ahead the trend projects.
+    """
+
+    def __init__(self, alpha: float = 0.5, beta: float = 0.3,
+                 gamma: float = 0.2, season: Optional[int] = None,
+                 horizon: float = 1.0):
+        for name, v in (("alpha", alpha), ("beta", beta), ("gamma", gamma)):
+            if not 0.0 < v <= 1.0:
+                raise ValueError(f"need 0 < {name} <= 1")
+        if season is not None and season < 2:
+            raise ValueError("season needs at least 2 ticks")
+        self.alpha, self.beta, self.gamma = alpha, beta, gamma
+        self.season = season
+        self.horizon = horizon
+        self.level: Optional[float] = None
+        self.trend = 0.0
+        self._seasonal: list[float] = [0.0] * (season or 0)
+        self._tick = 0
+
+    def observe(self, now: float, rps: float) -> None:
+        if self.level is None:
+            self.level = rps
+            self._tick += 1
+            return
+        s = (self._seasonal[self._tick % self.season]
+             if self.season else 0.0)
+        prev_level = self.level
+        self.level = (self.alpha * (rps - s)
+                      + (1 - self.alpha) * (self.level + self.trend))
+        self.trend = (self.beta * (self.level - prev_level)
+                      + (1 - self.beta) * self.trend)
+        if self.season:
+            i = self._tick % self.season
+            self._seasonal[i] = (self.gamma * (rps - self.level)
+                                 + (1 - self.gamma) * self._seasonal[i])
+        self._tick += 1
+
+    def __call__(self, now: float) -> float:
+        if self.level is None:
+            return 0.0
+        s = (self._seasonal[self._tick % self.season]
+             if self.season else 0.0)
+        return max(self.level + self.horizon * self.trend + s, 0.0)
+
+
 @dataclasses.dataclass(frozen=True)
 class FunctionSpec:
     """Declarative serving contract for one function.
@@ -64,7 +159,9 @@ class FunctionSpec:
         measured p99 exceeds it are infeasible for Alg. 1.  None =
         best-effort.
       target_rps: demand source ``R_j(t)``; None means the reconciler asks
-        the backend for the observed trailing-window arrival rate.
+        the backend for the observed trailing-window arrival rate.  A
+        ``DemandSource`` (``EWMADemand`` / ``HoltWintersDemand``) is fed
+        the backend's observed rate every tick and forecasts ahead.
       rps_window: trailing horizon (seconds) for observed-RPS estimation.
       headroom: capacity over-provisioning factor (target utilization
         ``1/headroom``) so queueing delay stays bounded at the SLO.

@@ -9,9 +9,16 @@ step wall-times come from calibrated ``ServiceCurve``s (DESIGN.md §7).
 
 Fault-tolerance features exercised here (large-scale runnability):
 
-* **Node failure**: in-flight and queued requests are re-queued to surviving
-  replicas; the node's rectangles are released and evicted pods re-placed
-  via MRA on surviving nodes.
+* **Node failure**: ``fail_node`` only records the damage — pods are marked
+  dead, their rectangles dropped, and stranded requests re-queued to
+  surviving replicas (or parked until one exists).  Re-placement is the
+  reconciler's job: ``ControlPlane.reconcile`` prunes dead pods from its
+  L_j capacity queues (the ``Backend.alive`` verb) and the resulting
+  processing gap + below-floor healing re-converge the fleet.
+* **Pod migration**: ``migrate`` moves one pod (queue + occupied decode
+  slots) to a target node between token-gated steps — the simulator
+  analogue of the live engine's KV migration, used by the reconciler's
+  MRA defragmentation pass.
 * **Straggler mitigation**: nodes carry a ``slowdown`` factor; the control
   loop compares per-pod service rates against the fleet median and re-places
   pods whose node is degraded beyond a threshold.
@@ -200,8 +207,13 @@ class Cluster:
         self._pod_seq = itertools.count()
         self._arrival_log: dict[str, list[float]] = {}
         self._rps_horizon: dict[str, float] = {}
+        # Requests for a registered function that momentarily has zero live
+        # pods (e.g. every replica died with the node): parked here and
+        # re-routed as soon as a replacement pod deploys.
+        self._pending: dict[str, deque] = {}
         self.dropped = 0
         self.rescheduled = 0
+        self.migrated = 0
         # Periodic scheduler pump so window rolls release blocked pods.
         for node in self.nodes:
             self._tick(node, scheduler_period)
@@ -257,6 +269,11 @@ class Cluster:
         self.fn_pods[fn].append(pod_id)
         if track:
             self.fn_queues[fn].push(pod_id, point)
+        # Requests parked while the function had zero live pods.
+        pending = self._pending.pop(fn, None)
+        if pending:
+            for r in pending:
+                self._route(r)
         return pod_id
 
     def retire(self, pod_id: str, drain: bool = True) -> None:
@@ -297,7 +314,12 @@ class Cluster:
         pods = [p for p in self.fn_pods.get(req.fn, ())
                 if not self.pods[p].retired]
         if not pods:
-            self.dropped += 1
+            if req.fn in self.fn_curves:
+                # Registered but momentarily podless (a failure killed the
+                # last replica): park until the reconciler heals the fleet.
+                self._pending.setdefault(req.fn, deque()).append(req)
+            else:
+                self.dropped += 1
             return
         # Join-shortest-queue routing across the function's replicas
         # (queue depth + occupied decode slots).
@@ -442,7 +464,17 @@ class Cluster:
     # -- fault tolerance -------------------------------------------------------
 
     def fail_node(self, node_id: int) -> int:
-        """Kill a node; re-queue its work and re-place its pods via MRA."""
+        """Kill a node: mark its pods dead, re-queue stranded requests.
+
+        Deliberately NOT self-healing: the failure only records the damage
+        (dead pods leave ``pods``/``fn_pods``/the tracked L_j queues, the
+        node's rectangles are dropped, unfinished requests re-route to
+        surviving replicas or park in the pending buffer).  Re-placement
+        is owned by the reconciler — ``ControlPlane.reconcile`` prunes the
+        dead pods via ``Backend.alive`` and the processing gap + below-
+        floor healing bring the fleet back, identically on the live path.
+        Returns the number of pods lost.
+        """
         node = self.nodes[node_id]
         node.alive = False
         self.pool.drain_node(node_id)
@@ -460,19 +492,84 @@ class Cluster:
             self.fn_queues[pod.fn].remove(pod.pod_id)
             del self.pods[pod.pod_id]
         node.pods.clear()
-        replaced = 0
-        for pod in displaced:
-            if pod.retired:
-                continue
-            new_id = self.deploy(pod.fn, pod.point)
-            if new_id is not None:
-                replaced += 1
         self.rescheduled += len(displaced)
         # Re-inject stranded requests at the current time (no arrival log:
         # they were already counted when they first arrived).
         for r in strays:
             self._route(dataclasses.replace(r, arrival=r.arrival))
-        return replaced
+        return len(displaced)
+
+    def alive(self, pod_id: str) -> bool:
+        """Whether a pod still exists on a live node (dead pods are removed
+        from ``pods`` by ``fail_node``, drained ones by ``_teardown``)."""
+        return pod_id in self.pods
+
+    def node_of(self, pod_id: str) -> Optional[int]:
+        pod = self.pods.get(pod_id)
+        return None if pod is None else pod.placement.node
+
+    def fragmentation(self) -> dict[int, float]:
+        """Per-node MRA fragmentation over schedulable (alive) nodes."""
+        return self.pool.fragmentation()
+
+    def node_load(self) -> dict[int, float]:
+        """Per-node allocated-area fraction over schedulable nodes."""
+        return self.pool.node_load()
+
+    def migrate(self, pod_id: str, target: int) -> Optional[str]:
+        """Move one pod to ``target``: the simulator's KV migration.
+
+        The pod must be between token-gated steps (its per-slot decode
+        state is then plain host bookkeeping); its queue and occupied
+        decode slots transfer wholesale, and the source rectangle is only
+        released after the replacement pod is live (copy-then-delete, so
+        an admission failure on the target leaves the pod untouched).
+        Returns the new pod id, or None when the pod is mid-step, retired,
+        or the target cannot host it.
+        """
+        pod = self.pods.get(pod_id)
+        if pod is None or pod.retired:
+            return None
+        src = pod.placement.node
+        if target == src or not 0 <= target < len(self.nodes):
+            return None
+        src_node = self.nodes[src]
+        if pod.in_flight or src_node.scheduler.pods[pod_id].holding is not None:
+            return None  # mid-step: its KV is "on device"; retry next tick
+        tnode = self.nodes[target]
+        mm = self.memory_model(pod.fn)
+        if not tnode.alive or not tnode.admits(pod.fn, mm):
+            return None
+        new_id = f"{pod.fn}-{next(self._pod_seq)}"
+        exclude = {n.node_id for n in self.pool.nodes} - {target}
+        placement = self.pool.schedule(pod.alloc, new_id, exclude=exclude)
+        if placement is None:
+            return None
+        if placement.node != target:  # pool grew instead of using target
+            self.pool.release(placement)
+            return None
+        new_pod = PodRuntime(pod_id=new_id, fn=pod.fn, curve=pod.curve,
+                             alloc=pod.alloc, point=pod.point,
+                             placement=placement, max_batch=pod.max_batch,
+                             steps=pod.steps, refills=pod.refills)
+        # Pause -> move: between steps the queue and slot state are host
+        # data; the live path's gather/merge per slot collapses to this.
+        new_pod.queue, pod.queue = pod.queue, deque()
+        new_pod.slots, pod.slots = pod.slots, []
+        pod.waiting_token = False  # the token request dies with deregister
+        tnode.add_pod(new_pod, mm)
+        self.pods[new_id] = new_pod
+        self.fn_pods[pod.fn].append(new_id)
+        # Source teardown only after the replacement is live.
+        self.fn_pods[pod.fn].remove(pod_id)
+        if pod_id in self.fn_queues[pod.fn]:
+            self.fn_queues[pod.fn].rekey(pod_id, new_id)
+        src_node.remove_pod(pod_id)
+        self.pool.release(pod.placement)
+        del self.pods[pod_id]
+        self.migrated += 1
+        self._want_token(new_pod)
+        return new_id
 
     def detect_stragglers(self, threshold: float = 2.0) -> list[int]:
         """Nodes whose effective service rate lags the fleet median."""

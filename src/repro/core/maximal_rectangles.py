@@ -265,6 +265,22 @@ class MaxRectsPool:
 
     # -- metrics -----------------------------------------------------------
 
+    def fragmentation(self) -> dict[int, float]:
+        """Per-node MRA fragmentation (offline nodes excluded).
+
+        A node reads 0.0 both when fully free and when fully packed; it
+        rises when the free area is shattered into rectangles none of
+        which is close to the whole — the signal the reconciler's
+        defragmentation pass keys on.
+        """
+        return {n.node_id: n.fragmentation()
+                for n in self.nodes if not n.offline}
+
+    def node_load(self) -> dict[int, float]:
+        """Per-node allocated-area fraction (offline nodes excluded)."""
+        return {n.node_id: n.used_area() / (SCALE * SCALE)
+                for n in self.nodes if not n.offline}
+
     def nodes_in_use(self) -> int:
         return sum(1 for n in self.nodes if n.placements)
 

@@ -112,6 +112,20 @@ class FunctionPodQueue:
     def provisional_ids(self) -> set[str]:
         return set(self._provisional)
 
+    def __contains__(self, pod_id: str) -> bool:
+        return pod_id in self._ids
+
+    def rekey(self, old_id: str, new_id: str) -> None:
+        """Re-key a live entry (pod migration): same profile point, same
+        capacity, a new concrete pod id.  Raises ``KeyError`` when
+        ``old_id`` is not a live entry."""
+        if old_id not in self._ids:
+            raise KeyError(f"pod {old_id!r} is not in the queue")
+        point = next(p.point for p in self._heap
+                     if p.pod_id == old_id and p.pod_id not in self._dead)
+        self.remove(old_id)
+        self.push(new_id, point)
+
     def remove(self, pod_id: str) -> None:
         # No-op for ids never pushed (e.g. untracked pods a shared teardown
         # path retires) — a lazy tombstone for them would never be GC'd.

@@ -115,6 +115,7 @@ class FunctionInstance:
         self._merge = jax.jit(model.merge_slot)
         self.steps = 0
         self.retired = False  # draining: no new routing, slots finish
+        self.paused = False   # migrating: no admission, no decode
         # continuous state: slot i holds the request decoding in cache row i.
         self.slots: list[Optional[ServeRequest]] = [None] * max_batch
         self._slot_tok = np.zeros((max_batch,), np.int32)
@@ -304,6 +305,58 @@ class FunctionInstance:
                 self._release_paged(slot)  # blocks reusable NOW
         return finished
 
+    # -- migration seam (pause -> gather -> merge) --------------------------
+
+    def export_slot(self, slot: int) -> tuple[ServeRequest, Any, int]:
+        """Gather one occupied slot's full decode state for migration:
+        ``(request, batch-1 cache entry, last emitted token)``.
+
+        Paged slots are re-gathered to the dense batch-1 layout
+        (``Model.gather_pages``) so the entry is portable to any target
+        instance, whatever physical blocks it has free.
+        """
+        req = self.slots[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} of {self.inst_id} is empty")
+        if self.batching == "paged":
+            entry = self.model.gather_pages(
+                self.cache, jnp.asarray(self._tables[slot]),
+                int(self._pos[slot]))
+        else:
+            entry = self.model.gather_slot(self.cache, jnp.int32(slot))
+        return req, entry, int(self._slot_tok[slot])
+
+    def import_slot(self, slot: int, req: ServeRequest, entry: Any,
+                    tok: int) -> None:
+        """Merge an exported slot into this instance at ``slot`` — the
+        exact inverse of :meth:`export_slot`, so a migrated request's
+        remaining decode rounds produce bit-identical tokens."""
+        if self.batching == "static":
+            raise ValueError("static batches cannot absorb migrated slots")
+        if self.slots[slot] is not None:
+            raise ValueError(f"slot {slot} of {self.inst_id} is occupied")
+        paged = self.batching == "paged"
+        if self.cache is None:
+            self.cache = (self.model.init_paged_cache(
+                self.allocator.n_blocks, self.block_size) if paged
+                else self.model.init_slot_cache(self.max_batch,
+                                                self.max_len))
+        if paged:
+            # Same worst-case reservation admission made on the source, so
+            # the migrated request can never exhaust the pool mid-flight.
+            self.pages.allocate(slot, self._kv_rows_needed(req))
+            row = self.pages.row(slot, self.blocks_per_seq)
+            self._tables[slot] = row
+            self._pos[slot] = int(entry["pos"])
+            self.cache = self._append(self.cache, entry,
+                                      jnp.asarray(row, jnp.int32))
+            self.kv_bytes_peak = max(self.kv_bytes_peak,
+                                     self.kv_bytes_in_use())
+        else:
+            self.cache = self._merge(self.cache, entry, jnp.int32(slot))
+        self.slots[slot] = req
+        self._slot_tok[slot] = tok
+
     # -- static reference path ---------------------------------------------
 
     def _admit_static(self) -> list[ServeRequest]:
@@ -362,6 +415,10 @@ class FunctionInstance:
         round over all occupied slots.  Static: batch prefill OR one decode
         round, never both.
         """
+        if self.paused:
+            # Mid-migration: admission and decode are frozen — the KV pool
+            # is being gathered out from under the slots.
+            return []
         self.steps += 1
         if self.batching == "static":
             if self.active:
@@ -392,6 +449,7 @@ class ServingEngine:
         self.store = ModelStore()
         self.instances: dict[str, FunctionInstance] = {}
         self.recorders: dict[str, SLORecorder] = {}
+        self.alive = True
         self._req_ids = itertools.count()
         self._inst_seq = itertools.count()
         self._t0 = time.perf_counter()
@@ -408,6 +466,8 @@ class ServingEngine:
                batching: str = "continuous", prefill_buckets: bool = True,
                block_size: int = 16,
                n_kv_blocks: Optional[int] = None) -> list[str]:
+        if not self.alive:
+            raise RuntimeError("cannot deploy to a failed node")
         if fn not in self.recorders:
             self.recorders[fn] = SLORecorder(fn=fn)
         if not self.store.contains(fn):
@@ -456,15 +516,45 @@ class ServingEngine:
         if self.on_instance_closed is not None:
             self.on_instance_closed(inst_id)
 
+    # -- node failure (crash, no drain) ------------------------------------
+
+    def fail(self) -> list[tuple[str, ServeRequest]]:
+        """Simulate a node crash: every instance dies instantly — no drain,
+        no ``on_instance_closed`` callbacks, weights and KV gone.
+
+        Returns the stranded unfinished requests as ``(fn, request)``
+        pairs, queued and slot-occupying alike.  A slot occupant's partial
+        output is reset: its KV died with the node, so a surviving replica
+        must re-execute it from the prompt (greedy decode reproduces the
+        identical stream).
+        """
+        self.alive = False
+        strays: list[tuple[str, ServeRequest]] = []
+        for inst_id, inst in self.instances.items():
+            fn = inst_id.split("/")[0]
+            occupants = (inst.active if inst.batching == "static"
+                         else inst.slots)
+            for req in occupants:
+                if req is None or req.done:
+                    continue
+                req.tokens_out = []  # KV lost: re-execute from scratch
+                strays.append((fn, req))
+            strays.extend((fn, req) for req in inst.queue)
+        self.instances.clear()
+        self.scheduler.pods.clear()  # crash: tokens die mid-hold
+        self.store = ModelStore()    # node memory (weights, KV) is gone
+        return strays
+
     def submit(self, fn: str, prompt: np.ndarray, max_new_tokens: int = 8
                ) -> ServeRequest:
         req = ServeRequest(req_id=next(self._req_ids), prompt=prompt,
                            max_new_tokens=max_new_tokens,
                            submitted_at=self.now())
-        # Join-shortest-queue across the function's live instances
-        # (retired ones are draining and take no new work).
+        # Join-shortest-queue across the function's live instances (retired
+        # ones are draining, paused ones are mid-migration: no new work).
         candidates = [v for k, v in self.instances.items()
-                      if k.startswith(fn + "/") and not v.retired]
+                      if k.startswith(fn + "/") and not v.retired
+                      and not v.paused]
         if not candidates:
             raise KeyError(f"function {fn} has no instances")
         inst = min(candidates, key=lambda i: i.load())
@@ -494,12 +584,14 @@ class ServingEngine:
 
     def pump(self, budget_s: float = 1.0) -> int:
         """Run token-gated dispatch until idle or budget exhausted."""
+        if not self.alive:
+            return 0
         completed = 0
         deadline = time.perf_counter() + budget_s
         while time.perf_counter() < deadline:
             any_work = False
             for inst_id, inst in list(self.instances.items()):
-                if inst.has_work():
+                if inst.has_work() and not inst.paused:
                     any_work = True
                     self.scheduler.request_token(inst_id, self.now())
             if not any_work:

@@ -44,6 +44,7 @@ from repro.core.resources import Alloc
 from repro.core.slo import observed_rate, record_arrival
 from repro.models.model import Model
 from repro.serving.engine import ServeRequest, ServingEngine
+from repro.serving.paging import blocks_needed
 
 # Per-instance runtime footprint (jit executables, slot KV pool, host
 # bookkeeping) charged by admission when the caller gives no measurement.
@@ -78,6 +79,14 @@ class ClusterFrontend:
         self._pod_seq = itertools.count()
         self._arrival_log: dict[str, list[float]] = {}
         self._rps_horizon: dict[str, float] = {}
+        # Requests stranded by a node failure while their function has zero
+        # live instances: re-routed as soon as a replacement deploys.
+        self._pending: dict[str, list[ServeRequest]] = {}
+        # fn -> (max_len, block_size, paged block capacity or None), learned
+        # at placement so submissions during a podless heal window can still
+        # be validated (and parked) instead of dropped.
+        self._fn_limits: dict[str, tuple[int, int, Optional[int]]] = {}
+        self._req_seq = itertools.count()
         self._t0 = time.perf_counter()
 
     def now(self) -> float:
@@ -172,6 +181,13 @@ class ClusterFrontend:
         self.placements.append(InstancePlacement(
             fn=fn, inst_id=inst_id, node=placement.node,
             placement=placement))
+        inst = self.engines[placement.node].instances[inst_id]
+        self._fn_limits[fn] = (max_len, block_size,
+                               inst.allocator.capacity
+                               if batching == "paged" else None)
+        # Requests parked while the function had zero live instances.
+        for req in self._pending.pop(fn, []):
+            self._enqueue(fn, req)
         return f"{placement.node}:{inst_id}"
 
     def deploy(self, fn: str, model: Model, params: Any, alloc: Alloc, *,
@@ -207,12 +223,15 @@ class ClusterFrontend:
                    if key.startswith(fn + "/"))
 
     def _live_nodes(self, fn: str) -> list[int]:
-        """Nodes with at least one non-retired instance of ``fn``."""
+        """Nodes with at least one routable (non-retired, non-paused)
+        instance of ``fn``."""
         out = []
         for node in self.nodes_for(fn):
             eng = self.engines[node]
-            if any(k.startswith(fn + "/") and not inst.retired
-                   for k, inst in eng.instances.items()):
+            if eng.alive and any(
+                    k.startswith(fn + "/") and not inst.retired
+                    and not inst.paused
+                    for k, inst in eng.instances.items()):
                 out.append(node)
         return out
 
@@ -228,11 +247,38 @@ class ClusterFrontend:
         routes new ones: JSQ node, then JSQ live instance."""
         eng = self.engines[self._pick_node(fn)]
         cands = [v for k, v in eng.instances.items()
-                 if k.startswith(fn + "/") and not v.retired]
+                 if k.startswith(fn + "/") and not v.retired
+                 and not v.paused]
         min(cands, key=lambda i: i.load()).queue.append(req)
 
     def submit(self, fn: str, prompt: np.ndarray, max_new_tokens: int = 8
                ) -> ServeRequest:
+        if not self._live_nodes(fn):
+            # Podless window (a failure killed the last replica, or the
+            # fleet scaled to zero): park the request — mirroring the
+            # simulator's pending buffer — and let the reconciler's next
+            # placement flush it.  Functions never placed here stay a hard
+            # error: there is no config to validate against.
+            if fn not in self._fn_limits:
+                raise KeyError(f"function {fn} is not deployed")
+            max_len, block_size, blocks_cap = self._fn_limits[fn]
+            rows = int(prompt.shape[0]) + max_new_tokens - 1
+            if rows > max_len:
+                raise ValueError(
+                    f"request needs {rows} KV rows > max_len {max_len} "
+                    f"of function {fn}")
+            if (blocks_cap is not None and max_new_tokens > 1
+                    and blocks_needed(rows, block_size) > blocks_cap):
+                raise ValueError(
+                    f"request needs {blocks_needed(rows, block_size)} KV "
+                    f"blocks > pool capacity {blocks_cap} of function {fn}")
+            record_arrival(self._arrival_log, self._rps_horizon, fn,
+                           self.now())
+            req = ServeRequest(req_id=next(self._req_seq), prompt=prompt,
+                               max_new_tokens=max_new_tokens,
+                               submitted_at=self.now())
+            self._pending.setdefault(fn, []).append(req)
+            return req
         node = self._pick_node(fn)
         record_arrival(self._arrival_log, self._rps_horizon, fn, self.now())
         # Second JSQ level across the chosen node's instances happens in
@@ -276,6 +322,130 @@ class ClusterFrontend:
                                            strip_queue=survivors)
         for req in strays:
             self._enqueue(fn, req)
+
+    # -- lifecycle: failure + live KV migration ----------------------------
+
+    def alive(self, handle: str) -> bool:
+        """Whether the instance behind ``node:inst_id`` is still running
+        (failed nodes lose all their instances instantly)."""
+        node_s, inst_id = handle.split(":", 1)
+        node = int(node_s)
+        if not 0 <= node < len(self.engines):
+            return False
+        eng = self.engines[node]
+        return eng.alive and inst_id in eng.instances
+
+    def node_of(self, handle: str) -> Optional[int]:
+        node = int(handle.split(":", 1)[0])
+        return node if 0 <= node < len(self.engines) else None
+
+    def fragmentation(self) -> dict[int, float]:
+        """Per-node MRA fragmentation over schedulable (alive) nodes."""
+        return self.pool.fragmentation()
+
+    def node_load(self) -> dict[int, float]:
+        """Per-node allocated-area fraction over schedulable nodes."""
+        return self.pool.node_load()
+
+    def fail_node(self, node: int) -> int:
+        """Crash one engine node: its instances, weights, and KV die.
+
+        Mirrors ``Cluster.fail_node``: the node is cordoned, its
+        rectangles dropped, and every stranded unfinished request (queued
+        AND slot-occupying — partial output reset, since the KV died with
+        the node) is re-routed to surviving replicas or parked until the
+        reconciler re-places the function.  No self-healing here:
+        ``ControlPlane.reconcile`` prunes the dead pods via ``alive`` and
+        re-converges the fleet.  Returns the number of instances lost.
+        """
+        eng = self.engines[node]
+        strays = eng.fail()
+        self.pool.drain_node(node)
+        lost = [p for p in self.placements if p.node == node]
+        self.placements = [p for p in self.placements if p.node != node]
+        for fn in {p.fn for p in lost}:
+            if not any(p.fn == fn for p in self.placements):
+                # No replica left anywhere: drop the per-function
+                # MemoryModel so the healing redeploy may re-create it.
+                self._fn_mm.pop(fn, None)
+        for fn, req in strays:
+            if self._live_nodes(fn):
+                self._enqueue(fn, req)
+            else:
+                self._pending.setdefault(fn, []).append(req)
+        return len(lost)
+
+    def migrate(self, fn: str, handle: str, model: Model, params: Any,
+                target: int) -> Optional[str]:
+        """Live KV migration: move the instance behind ``handle`` to node
+        ``target`` with zero dropped in-flight requests.
+
+        The protocol is pause -> gather -> merge -> re-route: admission and
+        decode pause on the source, a fresh instance (same data-plane
+        config) deploys into a reserved rectangle on the target, every
+        occupied decode slot's cache entry is gathered
+        (``Model.gather_slot`` / ``gather_pages``) and merged into the same
+        slot of the target (``merge_slot`` / page re-append), queued
+        requests re-route, and only then does the source close and release
+        its rectangle.  Remaining decode rounds produce bit-identical
+        tokens.  Returns the new ``node:inst_id`` handle, or None when the
+        instance cannot move (static batch, retired, target full or dead).
+        """
+        node_s, inst_id = handle.split(":", 1)
+        src = int(node_s)
+        if target == src or not 0 <= target < len(self.engines):
+            return None
+        if not self.engines[target].alive:
+            return None
+        eng = self.engines[src]
+        inst = eng.instances.get(inst_id)
+        if inst is None or inst.retired or inst.batching == "static":
+            return None
+        mm = self._fn_mm.get(fn)
+        # Copy-then-delete: the target must admit the instance while the
+        # source still holds its memory.
+        if mm is None or not self.admits(target, fn, mm):
+            return None
+        pod_id = f"{fn}-{next(self._pod_seq)}"
+        exclude = {n.node_id for n in self.pool.nodes} - {target}
+        placement = self.pool.schedule(inst.alloc, pod_id, exclude=exclude)
+        if placement is None:
+            return None
+        if placement.node != target:
+            self.pool.release(placement)
+            return None
+        inst.paused = True  # pause admission + decode while the KV moves
+        try:
+            new_inst_id = self.engines[target].deploy(
+                fn, model, params, inst.alloc, n_instances=1,
+                max_batch=inst.max_batch, max_len=inst.max_len,
+                batching=inst.batching,
+                block_size=getattr(inst, "block_size", 16),
+                n_kv_blocks=(inst.allocator.n_blocks
+                             if inst.batching == "paged" else None))[0]
+        except Exception:
+            self.pool.release(placement)
+            inst.paused = False
+            raise
+        new_inst = self.engines[target].instances[new_inst_id]
+        # Gather -> merge, slot by slot: same slot index on the target, so
+        # the decode batch resumes exactly where it paused.
+        for slot, req in enumerate(inst.slots):
+            if req is None:
+                continue
+            new_inst.import_slot(slot, *inst.export_slot(slot))
+            inst.slots[slot] = None
+            if inst.batching == "paged":
+                inst._release_paged(slot)
+        # Re-route queued (not yet admitted) requests to the new instance.
+        new_inst.queue.extend(inst.queue)
+        inst.queue.clear()
+        self.placements.append(InstancePlacement(
+            fn=fn, inst_id=new_inst_id, node=target, placement=placement))
+        # The source is now empty: retiring it closes immediately and
+        # releases its rectangle + weight refcount via on_instance_closed.
+        eng.retire(inst_id)
+        return f"{target}:{new_inst_id}"
 
     def _instance_closed(self, node: int, inst_id: str) -> None:
         """Engine callback: a retired instance finished draining."""

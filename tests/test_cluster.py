@@ -123,23 +123,39 @@ def test_scale_down_releases_nodes():
     assert len(cluster.pods) < n_up
 
 
-def test_node_failure_requeues_and_replaces():
+def test_node_failure_requeues_and_reconciler_replaces():
+    """``fail_node`` only records the damage; the reconciler re-places the
+    lost pods and the re-queued requests drain on the healed fleet."""
+    from repro.control import ControlPlane, FunctionSpec, SimBackend, ramp
+
     c = PAPER_ZOO["resnet"]
+    point = resnet_point(0.12, 1.0)
     cluster = Cluster(n_nodes=2)
-    cluster.register_function("f", c)
-    for _ in range(4):
-        cluster.deploy("f", resnet_point(0.12, 1.0))
+    plane = ControlPlane(SimBackend(cluster))
+    plane.register(FunctionSpec(name="f", profile=(point,), curve=c,
+                                target_rps=ramp([(0.0, 0.0)]),
+                                min_instances=4, max_instances=8))
     cluster.submit_all(poisson_arrivals("f", 60.0, 30.0))
 
     def kill():
-        cluster.fail_node(0)
+        lost = cluster.fail_node(0)
+        # No self-redeploy left in the failure path itself.
+        assert len(cluster.pods) == 4 - lost
 
     cluster.sim.at(10.0, kill)
-    cluster.run(35.0)
+
+    def heal():
+        plane.reconcile()
+        if cluster.sim.now < 35.0:
+            cluster.sim.after(0.5, heal)
+
+    cluster.sim.after(0.5, heal)
+    cluster.run(40.0)
     rec = cluster.recorders["f"]
     # Service continues after the failure; no stranded requests.
     assert rec.throughput(12.0, 30.0) > 0.0
     assert all(not n.pods for n in cluster.nodes if not n.alive)
+    assert len(cluster.pods) == 4, "reconciler must heal the floor"
     inflight = sum(len(p.queue) + len(p.in_flight) for p in cluster.pods.values())
     assert inflight == 0
 

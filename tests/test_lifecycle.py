@@ -1,0 +1,414 @@
+"""Reconciler-owned pod lifecycle: failure healing, live KV migration,
+and MRA defragmentation — identical semantics on both backends.
+
+Covers the lifecycle seam: node-failure heal convergence (sim + live),
+migration token/logit equivalence (a migrated paged/continuous pod
+produces bit-identical streams to an unmigrated one), fragmentation-
+triggered migration from the reconcile tick, sim-vs-live
+``decision_signature`` equality under failure injection, and the
+dead-pod capacity regression (L_j never counts phantom capacity).
+"""
+
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.control import (ControlPlane, EWMADemand, FunctionSpec,
+                           HoltWintersDemand, LiveBackend, SimBackend,
+                           decision_signature, ramp)
+from repro.core.cluster import Cluster
+from repro.core.resources import Alloc
+from repro.core.scaling import FunctionPodQueue, ProfilePoint
+from repro.core.workload import ServiceCurve, poisson_arrivals
+from repro.serving import ClusterFrontend
+
+PROFILE = (
+    ProfilePoint(sm=0.25, quota=0.4, throughput=2.0, p99_latency=0.05),
+    ProfilePoint(sm=0.45, quota=0.8, throughput=5.0, p99_latency=0.03),
+)
+
+RAMP = ramp([(0.0, 1.0), (2.0, 8.0), (6.0, 1.0)])
+
+
+def tiny_curve() -> ServiceCurve:
+    return ServiceCurve(name="chat", r_max=5.0, sm_sat=0.45, p=1.0,
+                        weight_bytes=1 << 20, framework_bytes=32 << 20)
+
+
+def make_spec(factory=None, **overrides) -> FunctionSpec:
+    kw = dict(name="chat", profile=PROFILE, slo_latency=0.1, target_rps=RAMP,
+              headroom=1.2, min_instances=1, max_instances=5,
+              model_factory=factory, max_batch=2, max_len=32,
+              framework_bytes=32 * 1024 * 1024, curve=tiny_curve())
+    kw.update(overrides)
+    return FunctionSpec(**kw)
+
+
+def busiest_node(plane: ControlPlane, backend) -> int:
+    counts = Counter(backend.node_of(p) for p in plane.placed["chat"])
+    return counts.most_common(1)[0][0]
+
+
+# -------------------------------------------------------------------------
+# fail_node: damage only, healing is the reconciler's
+# -------------------------------------------------------------------------
+
+
+def test_fail_node_does_not_self_redeploy():
+    cluster = Cluster(n_nodes=2, sharing=True)
+    plane = ControlPlane(SimBackend(cluster))
+    plane.register(make_spec(min_instances=3, target_rps=ramp([(0.0, 0.0)])))
+    assert len(cluster.pods) == 3
+    victim = busiest_node(plane, plane.backend)
+    lost = cluster.fail_node(victim)
+    assert lost >= 1
+    # The failure path placed NOTHING: the fleet stays short until the
+    # reconciler heals it.
+    assert len(cluster.pods) == 3 - lost
+    plane.reconcile(now=0.0)
+    assert len(cluster.pods) == 3
+    assert all(cluster.node_of(p) != victim for p in plane.placed["chat"])
+
+
+def test_capacity_never_exceeds_live_pod_sum_after_fail_node():
+    """Regression (SimBackend.evict dead-pod no-op): the reconciler —
+    not the eviction path — is the dead-pod authority, so one tick after
+    a failure L_j capacity equals the live-pod throughput sum exactly."""
+    cluster = Cluster(n_nodes=2, sharing=True)
+    plane = ControlPlane(SimBackend(cluster))
+    plane.register(make_spec(min_instances=4, max_instances=8,
+                             target_rps=ramp([(0.0, 0.0)])))
+    victim = busiest_node(plane, plane.backend)
+    cluster.fail_node(victim)
+
+    def live_sum() -> float:
+        return sum(pt.throughput for pod, pt in plane.placed["chat"].items()
+                   if cluster.alive(pod))
+
+    # Phantom capacity exists right after the failure...
+    assert plane.capacity("chat") > live_sum()
+    plane.reconcile(now=0.0)
+    # ...and is authoritatively pruned by the very next tick, after which
+    # the invariant holds on every tick.
+    for tick in range(1, 4):
+        assert plane.capacity("chat") == pytest.approx(live_sum())
+        assert all(cluster.alive(p) for p in plane.placed["chat"])
+        plane.reconcile(now=float(tick))
+    assert plane.instances("chat") == 4  # healed back to the floor
+
+
+def test_evict_dead_pod_is_tolerated():
+    cluster = Cluster(n_nodes=2, sharing=True)
+    plane = ControlPlane(SimBackend(cluster))
+    spec = make_spec(min_instances=2, target_rps=ramp([(0.0, 0.0)]))
+    plane.register(spec)
+    victim = next(iter(plane.placed["chat"]))
+    cluster.fail_node(cluster.node_of(victim))
+    plane.backend.evict(spec, victim)  # dead already: must not raise
+    assert victim not in cluster.pods
+
+
+def test_sim_heal_serves_parked_requests():
+    """Every replica dies with the node; parked requests survive the
+    outage and drain once the reconciler re-places the function."""
+    cluster = Cluster(n_nodes=2, sharing=True)
+    plane = ControlPlane(SimBackend(cluster))
+    plane.register(make_spec(min_instances=2, target_rps=ramp([(0.0, 0.0)])))
+    # MRA best-area-fit packs both floor pods onto node 0.
+    assert {cluster.node_of(p) for p in plane.placed["chat"]} == {0}
+    arrivals = poisson_arrivals("chat", rps=3.0, duration=6.0, seed=5)
+    cluster.submit_all(arrivals)
+    cluster.sim.at(2.0, lambda: cluster.fail_node(0))
+
+    def heal() -> None:
+        plane.reconcile()
+        if cluster.sim.now < 10.0:
+            cluster.sim.after(0.5, heal)
+
+    cluster.sim.after(0.5, heal)
+    cluster.run(40.0)
+    assert cluster.dropped == 0
+    assert cluster.recorders["chat"].count() == len(arrivals)
+    assert plane.instances("chat") == 2
+    assert all(cluster.node_of(p) == 1 for p in plane.placed["chat"])
+
+
+def test_live_node_failure_heals_to_floor_zero_drops(tiny_model,
+                                                     tiny_params):
+    frontend = ClusterFrontend(n_nodes=2, window=0.05)
+    backend = LiveBackend(frontend)
+    plane = ControlPlane(backend)
+    plane.register(make_spec(lambda: (tiny_model, tiny_params),
+                             min_instances=2,
+                             target_rps=ramp([(0.0, 1.0)])))
+    rng = np.random.default_rng(3)
+    reqs = [frontend.submit("chat", rng.integers(0, 64, 5, dtype=np.int32),
+                            max_new_tokens=3) for _ in range(4)]
+    frontend.pump(budget_s=0.02)  # some requests mid-decode
+    victim = busiest_node(plane, backend)
+    lost = frontend.fail_node(victim)
+    assert lost >= 1
+    assert plane.instances("chat") == 2  # reconciler hasn't looked yet
+    plane.reconcile(now=1.0)
+    assert plane.instances("chat") == 2  # healed
+    assert all(backend.alive(p) for p in plane.placed["chat"])
+    assert all(backend.node_of(p) != victim for p in plane.placed["chat"])
+    frontend.pump(budget_s=30.0)
+    assert all(r.done for r in reqs), "failure dropped in-flight requests"
+    assert all(len(r.tokens_out) == 3 for r in reqs)
+
+
+def test_live_submit_during_podless_heal_window(tiny_model, tiny_params):
+    """A submission between 'last replica died' and 'reconciler healed'
+    parks (like the simulator's pending buffer) instead of raising — and
+    is served once the heal places a replacement."""
+    frontend = ClusterFrontend(n_nodes=2, window=0.05)
+    plane = ControlPlane(LiveBackend(frontend))
+    plane.register(make_spec(lambda: (tiny_model, tiny_params),
+                             min_instances=1,
+                             target_rps=ramp([(0.0, 1.0)])))
+    rng = np.random.default_rng(7)
+    frontend.fail_node(busiest_node(plane, plane.backend))
+    # Podless window: no live instance anywhere.
+    req = frontend.submit("chat", rng.integers(0, 64, 5, dtype=np.int32),
+                          max_new_tokens=3)
+    assert not req.done and frontend._pending["chat"] == [req]
+    # Arrival was still observed (demand signal survives the outage)...
+    assert frontend.observed_rps("chat", 60.0) > 0.0
+    # ...oversized requests are still rejected, podless or not...
+    with pytest.raises(ValueError, match="KV rows"):
+        frontend.submit("chat", rng.integers(0, 64, 40, dtype=np.int32))
+    with pytest.raises(KeyError):
+        frontend.submit("ghost", rng.integers(0, 64, 5, dtype=np.int32))
+    # ...and the reconciler's heal flushes the parked request.
+    plane.reconcile(now=1.0)
+    frontend.pump(budget_s=30.0)
+    assert req.done and len(req.tokens_out) == 3
+
+
+def test_sim_vs_live_signature_under_failure_injection(tiny_model,
+                                                       tiny_params):
+    """A live ramp with a mid-run node failure replays through the
+    simulator decision-for-decision."""
+    fail_tick = 3
+
+    def run(plane, backend, fail):
+        for tick in range(9):
+            if tick == fail_tick:
+                fail(busiest_node(plane, backend))
+            plane.reconcile(now=float(tick))
+
+    frontend = ClusterFrontend(n_nodes=2, window=0.05)
+    lb = LiveBackend(frontend)
+    live = ControlPlane(lb)
+    live.register(make_spec(lambda: (tiny_model, tiny_params)))
+    run(live, lb, frontend.fail_node)
+
+    cluster = Cluster(n_nodes=2, sharing=True)
+    sb = SimBackend(cluster)
+    sim = ControlPlane(sb)
+    sim.register(make_spec())
+    run(sim, sb, cluster.fail_node)
+
+    live_sig = decision_signature(live.log)
+    assert live_sig == decision_signature(sim.log)
+    # The failure forced extra scale-ups beyond the plain ramp.
+    assert sum(1 for d in live.log if d.direction > 0) > \
+        sum(1 for d in live.log if d.direction < 0)
+    assert live.instances("chat") == sim.instances("chat") == 1
+
+
+# -------------------------------------------------------------------------
+# Migration: bit-identical streams, fragmentation trigger
+# -------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("batching", ["continuous", "paged"])
+def test_migration_token_equivalence(tiny_model, tiny_params, batching):
+    """A migrated pod (occupied decode slots and all) must produce
+    bit-identical token streams to an unmigrated control run."""
+
+    def run(migrate: bool):
+        frontend = ClusterFrontend(n_nodes=2, window=0.05)
+        alloc = Alloc(sm=0.5, quota_request=0.8, quota_limit=0.8)
+        handle = frontend.place_instance(
+            "chat", tiny_model, tiny_params, alloc, max_batch=2,
+            max_len=32, batching=batching)
+        assert handle is not None
+        node = int(handle.split(":", 1)[0])
+        rng = np.random.default_rng(0)
+        reqs = [frontend.submit("chat",
+                                rng.integers(0, 64, 4 + i, dtype=np.int32),
+                                max_new_tokens=5) for i in range(4)]
+        inst = next(iter(frontend.engines[node].instances.values()))
+        inst.run_step()
+        inst.run_step()  # slots occupied mid-decode, queue non-empty
+        assert inst.n_active() > 0
+        if migrate:
+            new = frontend.migrate("chat", handle, tiny_model, tiny_params,
+                                   1 - node)
+            assert new is not None
+            assert int(new.split(":", 1)[0]) == 1 - node
+            # Source instance closed, rectangle released, queue re-routed.
+            assert not frontend.engines[node].instances
+            assert frontend.pool.nodes[node].placements == {}
+            assert len(frontend.placements) == 1
+        frontend.pump(budget_s=30.0)
+        assert all(r.done for r in reqs), "migration dropped requests"
+        return [tuple(r.tokens_out) for r in reqs]
+
+    assert run(migrate=False) == run(migrate=True)
+
+
+def test_fragmentation_triggered_migration_sim():
+    cluster = Cluster(n_nodes=2, sharing=True)
+    plane = ControlPlane(SimBackend(cluster), defrag_threshold=-1.0)
+    plane.register(make_spec(min_instances=1, target_rps=ramp([(0.0, 1.0)])))
+    (pod,) = plane.placed["chat"]
+    src = cluster.node_of(pod)
+    cap = plane.capacity("chat")
+    plane.reconcile(now=0.0)
+    assert len(plane.migrations) == 1
+    ev = plane.migrations[0]
+    assert ev.source == src and ev.target != src
+    # placed/L_j re-keyed in place: same point, same capacity, new pod id.
+    assert pod not in plane.placed["chat"]
+    assert ev.new_pod in plane.placed["chat"]
+    assert cluster.node_of(ev.new_pod) == ev.target
+    assert plane.capacity("chat") == pytest.approx(cap)
+    assert plane.instances("chat") == 1
+
+
+def test_fragmentation_triggered_migration_live(tiny_model, tiny_params):
+    frontend = ClusterFrontend(n_nodes=2, window=0.05)
+    plane = ControlPlane(LiveBackend(frontend), defrag_threshold=-1.0)
+    plane.register(make_spec(lambda: (tiny_model, tiny_params),
+                             min_instances=1, batching="paged",
+                             target_rps=ramp([(0.0, 1.0)])))
+    (handle,) = plane.placed["chat"]
+    src = int(handle.split(":", 1)[0])
+    rng = np.random.default_rng(1)
+    reqs = [frontend.submit("chat", rng.integers(0, 64, 6, dtype=np.int32),
+                            max_new_tokens=4) for _ in range(3)]
+    inst = next(iter(frontend.engines[src].instances.values()))
+    inst.run_step()  # occupy paged slots mid-decode
+    assert inst.n_active() > 0
+    plane.reconcile(now=0.0)
+    assert len(plane.migrations) == 1
+    ev = plane.migrations[0]
+    assert ev.source == src and ev.target == 1 - src
+    assert ev.new_pod in plane.placed["chat"]
+    assert not frontend.engines[src].instances
+    frontend.pump(budget_s=30.0)
+    assert all(r.done for r in reqs), "live migration dropped requests"
+    assert all(len(r.tokens_out) == 4 for r in reqs)
+
+
+def test_sim_migrate_defers_mid_step():
+    cluster = Cluster(n_nodes=2, sharing=True, continuous=True)
+    plane = ControlPlane(SimBackend(cluster))
+    plane.register(make_spec(min_instances=1, target_rps=ramp([(0.0, 0.0)])))
+    (pod,) = plane.placed["chat"]
+    cluster.submit_all(poisson_arrivals("chat", rps=4.0, duration=1.0,
+                                        seed=2))
+    # Advance into a decode step: the pod is mid-step (in_flight).
+    cluster.run(0.3)
+    runtime = cluster.pods[pod]
+    if runtime.in_flight:
+        assert cluster.migrate(pod, 1 - runtime.placement.node) is None
+    # Between steps (after the run drains) the move succeeds.
+    cluster.run(30.0)
+    target = 1 - cluster.pods[pod].placement.node
+    assert cluster.migrate(pod, target) is not None
+
+
+def test_static_batches_cannot_migrate(tiny_model, tiny_params):
+    frontend = ClusterFrontend(n_nodes=2, window=0.05)
+    alloc = Alloc(sm=0.5, quota_request=0.8, quota_limit=0.8)
+    handle = frontend.place_instance("chat", tiny_model, tiny_params, alloc,
+                                     max_batch=2, max_len=32,
+                                     batching="static")
+    assert frontend.migrate("chat", handle, tiny_model, tiny_params, 1) \
+        is None
+
+
+def test_pod_queue_rekey():
+    q = FunctionPodQueue()
+    q.push("a", PROFILE[0])
+    q.push("b", PROFILE[1])
+    q.rekey("a", "a2")
+    assert "a" not in q and "a2" in q
+    assert q.capacity() == pytest.approx(
+        PROFILE[0].throughput + PROFILE[1].throughput)
+    # RPR ordering is preserved: "b" (lower RPR) stays the eviction front,
+    # and the re-keyed entry keeps its original profile point.
+    assert q.front().pod_id == "b"
+    q.pop()
+    assert q.front().point == PROFILE[0]
+    with pytest.raises(KeyError):
+        q.rekey("ghost", "x")
+
+
+# -------------------------------------------------------------------------
+# Predictive demand sources
+# -------------------------------------------------------------------------
+
+
+def test_ewma_demand_converges_faster_than_it_forgets():
+    src = EWMADemand(alpha=0.5)
+    assert src(0.0) == 0.0
+    for t, obs in enumerate([1.0, 1.0, 10.0, 10.0, 10.0]):
+        src.observe(float(t), obs)
+    assert 8.5 < src(5.0) < 10.0  # near the step within 3 ticks
+
+
+def test_holt_winters_extrapolates_a_ramp():
+    src = HoltWintersDemand(alpha=0.6, beta=0.4)
+    for t in range(8):
+        src.observe(float(t), float(t))  # +1 rps per tick
+    # Trend extrapolation: the forecast leads the last observation.
+    assert src(8.0) > 7.0
+
+
+def test_holt_winters_seasonal_cycle():
+    src = HoltWintersDemand(alpha=0.4, beta=0.2, gamma=0.6, season=4)
+    pattern = [2.0, 8.0, 2.0, 2.0]
+    for t in range(24):
+        src.observe(float(t), pattern[t % 4])
+    # After six full cycles the seasonal term anticipates the burst phase.
+    burst_phase = src._tick % 4 == 1
+    forecasts = []
+    for k in range(4):
+        forecasts.append((src._tick % 4, src(float(24 + k))))
+        src.observe(float(24 + k), pattern[src._tick % 4])
+    by_phase = dict(forecasts)
+    assert by_phase[1] > by_phase[2] + 2.0, by_phase
+
+
+def test_demand_source_is_fed_from_backend_arrival_log():
+    cluster = Cluster(n_nodes=2, sharing=True)
+    plane = ControlPlane(SimBackend(cluster))
+    plane.register(make_spec(min_instances=1, max_instances=6,
+                             target_rps=EWMADemand(alpha=0.7),
+                             rps_window=2.0))
+    arrivals = poisson_arrivals("chat", rps=9.0, duration=6.0, seed=4)
+    cluster.submit_all(arrivals)
+    for tick in range(1, 7):
+        cluster.sim.at(float(tick),
+                       lambda t=tick: plane.reconcile(now=float(t)))
+    cluster.run(30.0)
+    # The forecaster saw the arrival log and the plane scaled out on it.
+    assert plane.instances("chat") > 1
+    src = plane.specs["chat"].target_rps
+    assert src.level is not None and src.level > 4.0
+    assert cluster.recorders["chat"].count() == len(arrivals)
+
+
+def test_demand_source_validation():
+    with pytest.raises(ValueError):
+        EWMADemand(alpha=0.0)
+    with pytest.raises(ValueError):
+        HoltWintersDemand(beta=1.5)
+    with pytest.raises(ValueError):
+        HoltWintersDemand(season=1)

@@ -56,20 +56,33 @@ def test_profile_scale_serve_slo_pipeline():
 
 
 def test_node_failure_no_request_loss():
-    """Kill the only loaded node mid-run: pods re-place, requests survive."""
+    """Kill the only loaded node mid-run: the reconcile loop re-places the
+    pods and every request survives the outage."""
+    from repro.control import ControlPlane, FunctionSpec, SimBackend, ramp
+
+    c = PAPER_ZOO["rnnt"]
+    pt = ProfilePoint(sm=0.24, quota=1.0, throughput=c.rate(0.24, 1.0))
     cluster = Cluster(n_nodes=3, sharing=True)
-    cluster.register_function("rnnt", PAPER_ZOO["rnnt"])
-    pt = ProfilePoint(sm=0.24, quota=1.0, throughput=0.0)
-    for _ in range(2):
-        assert cluster.deploy("rnnt", pt) is not None
+    plane = ControlPlane(SimBackend(cluster))
+    plane.register(FunctionSpec(name="rnnt", profile=(pt,), curve=c,
+                                target_rps=ramp([(0.0, 0.0)]),
+                                min_instances=2, max_instances=4))
     arrivals = poisson_arrivals("rnnt", 8.0, 30.0, seed=1)
     cluster.submit_all(arrivals)
     loaded_node = cluster.pods[next(iter(cluster.pods))].placement.node
     cluster.sim.at(10.0, lambda: cluster.fail_node(loaded_node))
+
+    def heal() -> None:
+        plane.reconcile()
+        if cluster.sim.now < 50.0:
+            cluster.sim.after(0.5, heal)
+
+    cluster.sim.after(0.5, heal)
     cluster.run(60.0)
     rec = cluster.recorders["rnnt"]
     assert cluster.rescheduled >= 1
     assert rec.count() == len(arrivals), "failure must not drop requests"
+    assert len(cluster.pods) == 2, "healed back to the declared floor"
     assert all(n.node_id != loaded_node or not n.pods
                for n in cluster.nodes)
 
