@@ -1,0 +1,187 @@
+"""Decode hot-path throughput: fused on-device sampling + overlapped
+multi-instance dispatch on the live JAX data plane.
+
+Measures steady-state decode tokens/s and host-synchronisation count per
+round on a tiny deterministic config (real jitted executors, CPU-cheap):
+
+* **single instance**, continuous and paged batching — the fused round
+  (``Model.decode_step_tokens`` / ``decode_step_paged_tokens``, donated
+  KV + token + position buffers, device-resident block tables) must spend
+  exactly ONE host sync per pump pass, vs ``1 + admissions`` for the old
+  host-argmax path;
+* **4 co-located instances** sharing the node under the token scheduler —
+  ``ServingEngine.pump(overlap=True)`` dispatches every granted
+  instance's round before pulling any result (JAX async dispatch keeps
+  the device busy while Python walks the siblings), and the benchmark
+  asserts the overlapped aggregate tokens/s is >= 0.9x the serialized
+  reference (``overlap=False``: dispatch + sync one instance at a time).
+
+Emits ``BENCH_decode.json`` (the perf-trajectory artifact uploaded by
+CI) and runs as a tier-1 smoke step with ``--smoke``.
+
+Run:  PYTHONPATH=src python -m benchmarks.decode_throughput [--smoke]
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core.resources import Alloc
+from repro.models import build_model
+from repro.models.config import ModelConfig
+from repro.serving import ServingEngine
+
+MAX_BATCH = 4
+MAX_LEN = 64
+BLOCK_SIZE = 16
+PROMPT_LEN = 8
+OVERLAP_FLOOR = 0.9  # overlapped >= floor x serialized (relative check)
+
+
+def _model():
+    cfg = ModelConfig(name="bench-tiny", family="dense", n_layers=2,
+                      d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+                      vocab_size=64, vocab_pad_multiple=32)
+    model = build_model(cfg)
+    return model, model.init(jax.random.key(7))
+
+
+def _measure(model, params, *, batching: str, n_instances: int,
+             overlap: bool, fused: bool = True, n_reqs: int,
+             max_new: int) -> dict:
+    """Serve ``n_reqs`` decode-heavy requests; returns the steady-state
+    stats dict (tokens/s, syncs per round, paged uploads per round)."""
+    engine = ServingEngine(window=0.1)
+    sm = 1.0 / n_instances
+    engine.deploy("lm", model, params,
+                  Alloc(sm=sm, quota_request=0.9, quota_limit=0.9),
+                  n_instances=n_instances, max_batch=MAX_BATCH,
+                  max_len=MAX_LEN, batching=batching,
+                  block_size=BLOCK_SIZE, fused=fused)
+    rng = np.random.default_rng(3)
+
+    def submit(n):
+        return [engine.submit(
+            "lm", rng.integers(0, model.cfg.vocab_size, PROMPT_LEN,
+                               dtype=np.int32), max_new_tokens=max_new)
+            for _ in range(n)]
+
+    # Warm-up: compile prefill/decode executors and fill the caches so the
+    # measured phase is steady-state decode, not jit time.
+    submit(2 * n_instances)
+    engine.pump(budget_s=60.0, overlap=overlap)
+    pre = {k: dict(v) for k, v in engine.telemetry().items()}
+
+    reqs = submit(n_reqs * n_instances)
+    t0 = time.perf_counter()
+    done = engine.pump(budget_s=300.0, overlap=overlap)
+    elapsed = time.perf_counter() - t0
+    assert done == len(reqs), f"{done}/{len(reqs)} completed"
+    tokens = sum(len(r.tokens_out) for r in reqs)
+    post = engine.telemetry()
+    steps = sum(v["steps"] - pre.get(k, {}).get("steps", 0)
+                for k, v in post.items())
+    syncs = sum(v["syncs"] - pre.get(k, {}).get("syncs", 0)
+                for k, v in post.items())
+    uploads = sum(v["uploads"] - pre.get(k, {}).get("uploads", 0)
+                  for k, v in post.items())
+    return {
+        "batching": batching,
+        "n_instances": n_instances,
+        "overlap": overlap,
+        "fused": fused,
+        "requests": len(reqs),
+        "tokens": tokens,
+        "elapsed_s": elapsed,
+        "tokens_per_s": tokens / elapsed,
+        "rounds": steps,
+        "host_syncs": syncs,
+        "syncs_per_round": syncs / max(steps, 1),
+        "paged_uploads_per_round": uploads / max(steps, 1),
+    }
+
+
+def _best_of(n: int, measure) -> dict:
+    """Best-of-n throughput (one-sided noise reduction on shared CI CPUs;
+    the syncs/uploads counters are deterministic across repeats)."""
+    results = [measure() for _ in range(n)]
+    return max(results, key=lambda r: r["tokens_per_s"])
+
+
+def run(smoke: bool = False) -> list[Row]:
+    n_reqs = 16 if smoke else 48
+    max_new = 12 if smoke else 24
+    repeats = 2
+    model, params = _model()
+    report: dict = {"config": {"max_batch": MAX_BATCH, "max_len": MAX_LEN,
+                               "block_size": BLOCK_SIZE,
+                               "prompt_len": PROMPT_LEN, "n_reqs": n_reqs,
+                               "max_new_tokens": max_new,
+                               "overlap_floor": OVERLAP_FLOOR}}
+    rows: list[Row] = []
+    for batching in ("continuous", "paged"):
+        single = _best_of(repeats, lambda: _measure(
+            model, params, batching=batching, n_instances=1,
+            overlap=True, n_reqs=n_reqs, max_new=max_new))
+        host = _best_of(repeats, lambda: _measure(
+            model, params, batching=batching, n_instances=1,
+            overlap=True, fused=False, n_reqs=n_reqs, max_new=max_new))
+        multi = _best_of(repeats, lambda: _measure(
+            model, params, batching=batching, n_instances=4,
+            overlap=True, n_reqs=n_reqs, max_new=max_new))
+        serial = _best_of(repeats, lambda: _measure(
+            model, params, batching=batching, n_instances=4,
+            overlap=False, n_reqs=n_reqs, max_new=max_new))
+        report[batching] = {"single": single, "single_host_argmax": host,
+                            "colocated4_overlapped": multi,
+                            "colocated4_serialized": serial}
+        rows += [
+            Row("decode", f"{batching}.single_tokens_per_s",
+                single["tokens_per_s"]),
+            Row("decode", f"{batching}.single_syncs_per_round",
+                single["syncs_per_round"],
+                note="fused hot path: exactly 1 host sync per pump pass"),
+            Row("decode", f"{batching}.host_argmax_syncs_per_round",
+                host["syncs_per_round"],
+                note="old reference path: 1 per round + 1 per admission"),
+            Row("decode", f"{batching}.fused_speedup_vs_host",
+                single["tokens_per_s"] / max(host["tokens_per_s"], 1e-9)),
+            Row("decode", f"{batching}.colocated4_tokens_per_s",
+                multi["tokens_per_s"]),
+            Row("decode", f"{batching}.colocated4_serialized_tokens_per_s",
+                serial["tokens_per_s"]),
+            Row("decode", f"{batching}.overlap_ratio",
+                multi["tokens_per_s"] / max(serial["tokens_per_s"], 1e-9),
+                note=f"overlapped/serialized aggregate; floor "
+                     f"{OVERLAP_FLOOR}"),
+        ]
+        if batching == "paged":
+            rows.append(Row("decode", "paged.uploads_per_round",
+                            single["paged_uploads_per_round"],
+                            note="device-resident tables/pos: uploads only "
+                                 "on admit/release, << 1 per round"))
+        # Hard acceptance checks (relative, no absolute thresholds).
+        assert single["syncs_per_round"] <= 1.0 + 1e-9, (
+            f"{batching}: fused path spent "
+            f"{single['syncs_per_round']:.2f} host syncs per round")
+        assert (multi["tokens_per_s"]
+                >= OVERLAP_FLOOR * serial["tokens_per_s"]), (
+            f"{batching}: overlapped 4-instance throughput "
+            f"{multi['tokens_per_s']:.0f} tok/s < {OVERLAP_FLOOR}x the "
+            f"serialized {serial['tokens_per_s']:.0f} tok/s")
+    with open("BENCH_decode.json", "w") as f:
+        json.dump(report, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    rows = run(smoke="--smoke" in sys.argv[1:])
+    for r in rows:
+        print(r.csv())

@@ -10,7 +10,9 @@ allocations.  Two trial backends:
 * ``measure_callable_trial`` — wall-clock profiles a *real* jitted executor
   (reduced-config model on CPU); the spatial axis is realized by the token
   scheduler's concurrency accounting, the temporal axis by duty-cycling the
-  dispatch loop.
+  dispatch loop.  ``measure_engine_profile`` wires it to a live
+  ``FunctionInstance``'s fused executors and emits a spec-ready
+  ``{<F, S, Q, T>}`` table (``FunctionSpec.profile`` takes it directly).
 
 Default profiling grid = the paper's (§5.2):
   temporal: 20/40/60/80/100%;  spatial: 6/12/24/50/60/80/100%.
@@ -107,6 +109,90 @@ def measure_callable_trial(step_fn: Callable[[], None], sm: float, quota: float,
         p50=lat[len(lat) // 2] if lat else 0.0,
         p99=lat[min(len(lat) - 1, int(len(lat) * 0.99))] if lat else 0.0,
     )
+
+
+def measure_engine_profile(
+    model,
+    params,
+    *,
+    spatial: Sequence[float] = (0.25, 0.45),
+    temporal: Sequence[float] = (0.4, 0.8),
+    max_batch: int = 4,
+    max_len: int = 64,
+    batching: str = "continuous",
+    prompt_len: int = 8,
+    new_tokens: int = 4,
+    window: float = 0.1,
+    n_windows: int = 3,
+    seed: int = 0,
+    sm_scale=None,
+    kv_budget_bytes: int = 0,
+    kv_block_bytes: int = 0,
+) -> list[ProfilePoint]:
+    """Spec-ready ``{<F, S, Q, T>}`` table measured on the REAL jitted
+    executors (ROADMAP "Live profiler backend for specs").
+
+    Builds one ``FunctionInstance`` — the same fused prefill/decode
+    executors the serving engine dispatches — and runs
+    ``measure_callable_trial`` per grid cell: one ``step_fn`` serves a
+    full batch of ``max_batch`` requests (``prompt_len`` prompt +
+    ``new_tokens`` greedy tokens each) to completion, so the temporal
+    quota is enforced on real wall-clock executor time exactly as
+    FaST-Manager charges ``Q_used``.  Throughput is scaled to requests/s;
+    the batch's step latency stands in for per-request p99 (batch members
+    finish together).  The spatial axis cannot be partitioned on CPU:
+    ``sm_scale(sm) -> factor`` attaches an analytic scaling when given
+    (throughput x factor, latency / factor), else points share the
+    measured rate.  The returned ``ProfilePoint``s feed
+    ``repro.control.FunctionSpec.profile`` directly —
+    ``examples/autoscale_live.py --measured-profile`` runs exactly that.
+
+    ``kv_budget_bytes`` / ``kv_block_bytes`` stamp paged capacity
+    (``ProfilePoint.kv_blocks``) as in :func:`profile_points`.
+    """
+    import itertools
+
+    import numpy as np
+
+    # Lazy import: repro.core must not depend on repro.serving at import
+    # time (the serving engine already imports core modules).
+    from repro.core.model_sharing import ModelStore
+    from repro.core.resources import Alloc
+    from repro.serving.engine import FunctionInstance, ServeRequest
+
+    store = ModelStore()
+    store.store("__profile__", params)
+    req_ids = itertools.count()
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, model.cfg.vocab_size, prompt_len,
+                            dtype=np.int32) for _ in range(max_batch)]
+    kv_blocks = paged_kv_capacity(kv_budget_bytes, kv_block_bytes)
+    points: list[ProfilePoint] = []
+    for sm in spatial:
+        inst = FunctionInstance(
+            "__profile__/0", model, store, "__profile__",
+            Alloc(sm=sm, quota_request=1.0, quota_limit=1.0),
+            max_batch=max_batch, max_len=max_len, batching=batching)
+
+        def step_fn() -> None:
+            for p in prompts:
+                inst.queue.append(ServeRequest(req_id=next(req_ids),
+                                               prompt=p,
+                                               max_new_tokens=new_tokens))
+            while inst.has_work():
+                inst.run_step()
+
+        factor = sm_scale(sm) if sm_scale is not None else 1.0
+        for quota in temporal:
+            r = measure_callable_trial(step_fn, sm, quota, window=window,
+                                       n_windows=n_windows)
+            points.append(ProfilePoint(
+                sm=sm, quota=quota,
+                throughput=r.throughput * max_batch * factor,
+                p99_latency=r.p99 / max(factor, 1e-9),
+                kv_blocks=kv_blocks))
+        inst.close()
+    return points
 
 
 @dataclasses.dataclass

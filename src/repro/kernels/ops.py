@@ -161,6 +161,22 @@ def _xla_flash(q, k, v, *, causal, window, q_offset, block_q, block_k):
     return out[:, :sq_valid].astype(orig_dtype)
 
 
+@functools.partial(jax.jit, static_argnames=("vocab_size",))
+def greedy_sample(logits: jax.Array, vocab_size: int) -> jax.Array:
+    """Fused on-device greedy sampler: ``argmax`` over the (padded) vocab
+    clipped to the real ``vocab_size``.  Returns int32 tokens with the
+    leading batch shape of ``logits``.
+
+    This is the device-side replacement for the serving engine's
+    ``np.asarray(jnp.argmax(...))`` host round-trip: called inside the
+    fused decode step it keeps the whole round on the accelerator (a
+    (B,) int32 pull instead of a (B, V) logits pull), and XLA fuses the
+    reduction into the lm-head consumer — no Pallas variant needed.
+    """
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jnp.minimum(tok, vocab_size - 1)
+
+
 @functools.partial(jax.jit, static_argnames=("window", "backend"))
 def decode_attention(
     q: jax.Array,        # (B, 1, H, D) — one new token per sequence

@@ -259,37 +259,53 @@ def attn_decode(params: dict, x: jax.Array, kc: jax.Array, vc: jax.Array,
 
 
 def paged_cache_write(pages: jax.Array, new: jax.Array,
-                      block_tables: jax.Array, pos: jax.Array) -> jax.Array:
+                      block_tables: jax.Array, pos: jax.Array,
+                      active: Optional[jax.Array] = None) -> jax.Array:
     """Write one token's (B, 1, K, Dh) K/V into (N, bs, K, Dh) pages.
 
     Each sequence's row lands in physical block ``tables[b, pos[b]//bs]``
     at offset ``pos[b] % bs``.  Live sequences own disjoint blocks, so the
     scatter never collides; free decode slots all target the shared null
     block, whose contents are never attended.
+
+    ``active`` ((B,) int32/bool, optional) drops inactive sequences' rows
+    entirely (scatter ``mode="drop"`` on an out-of-range block index)
+    instead of scattering them into the null block — free decode slots in
+    the fused hot path then write nothing at all, so the null page stays
+    zero and the scatter never has colliding free-slot rows.  The drop
+    sentinel must be ``>= n_blocks``: a negative index would be
+    NORMALIZED (to the last physical block — a live sequence's page)
+    before out-of-bounds handling ever sees it.
     """
     bs = pages.shape[1]
     blk = jnp.take_along_axis(block_tables, (pos // bs)[:, None], axis=1)[:, 0]
-    return pages.at[blk, pos % bs].set(new[:, 0].astype(pages.dtype))
+    if active is not None:
+        blk = jnp.where(active.astype(bool), blk, pages.shape[0])
+    return pages.at[blk, pos % bs].set(new[:, 0].astype(pages.dtype),
+                                       mode="drop")
 
 
 def attn_decode_paged(params: dict, x: jax.Array,
                       k_pages: jax.Array, v_pages: jax.Array,
                       block_tables: jax.Array, pos: jax.Array,
-                      cfg: ModelConfig
+                      cfg: ModelConfig,
+                      active: Optional[jax.Array] = None
                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """One-token self-attention against (and updating) a paged cache.
 
     x: (B, 1, D); k_pages/v_pages: (N, bs, K, Dh) physical blocks shared
     by the whole batch; block_tables: (B, M) int32; pos: (B,) absolute
-    position of each sequence's new token.  Returns (output, k', v').
+    position of each sequence's new token; ``active`` optionally masks
+    free slots' writes out (see paged_cache_write).  Returns
+    (output, k', v').
     """
     positions = pos[:, None]
     q = _project_q(params, x, cfg)
     k, v = _project_kv(params, x, cfg)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
-    k_pages = paged_cache_write(k_pages, k, block_tables, pos)
-    v_pages = paged_cache_write(v_pages, v, block_tables, pos)
+    k_pages = paged_cache_write(k_pages, k, block_tables, pos, active)
+    v_pages = paged_cache_write(v_pages, v, block_tables, pos, active)
     cache_len = (pos + 1).astype(jnp.int32)
     o = ops.paged_decode_attention(q, k_pages, v_pages, block_tables,
                                    cache_len)
@@ -300,7 +316,8 @@ def attn_decode_paged_quant(params: dict, x: jax.Array,
                             k_pages: jax.Array, v_pages: jax.Array,
                             ks_pages: jax.Array, vs_pages: jax.Array,
                             block_tables: jax.Array, pos: jax.Array,
-                            cfg: ModelConfig
+                            cfg: ModelConfig,
+                            active: Optional[jax.Array] = None
                             ) -> tuple[jax.Array, jax.Array, jax.Array,
                                        jax.Array, jax.Array]:
     """attn_decode_paged against int8 code + scale pages (§Perf D)."""
@@ -311,10 +328,10 @@ def attn_decode_paged_quant(params: dict, x: jax.Array,
     k = apply_rope(k, positions, cfg.rope_theta)
     k8, ks_new = kv_quantize(k)
     v8, vs_new = kv_quantize(v)
-    k_pages = paged_cache_write(k_pages, k8, block_tables, pos)
-    v_pages = paged_cache_write(v_pages, v8, block_tables, pos)
-    ks_pages = paged_cache_write(ks_pages, ks_new, block_tables, pos)
-    vs_pages = paged_cache_write(vs_pages, vs_new, block_tables, pos)
+    k_pages = paged_cache_write(k_pages, k8, block_tables, pos, active)
+    v_pages = paged_cache_write(v_pages, v8, block_tables, pos, active)
+    ks_pages = paged_cache_write(ks_pages, ks_new, block_tables, pos, active)
+    vs_pages = paged_cache_write(vs_pages, vs_new, block_tables, pos, active)
     cache_len = (pos + 1).astype(jnp.int32)
     o = ops.paged_decode_attention_quant(q, k_pages, v_pages, ks_pages,
                                          vs_pages, block_tables, cache_len)

@@ -95,6 +95,30 @@ class Model:
         return _FAMILY[self.cfg.family].decode_step(params, token, cache,
                                                     self.cfg)
 
+    # -- fused decode (sync-free hot path) ----------------------------------
+
+    def sample_greedy(self, logits):
+        """Device-side greedy sampler (argmax + vocab clip), shared by the
+        fused decode steps and the engine's prefill admission path."""
+        return transformer.greedy_tokens(logits, self.cfg)
+
+    def decode_step_tokens(self, params, token, cache):
+        """One decode round returning ``((B,) int32 tokens, cache)`` — the
+        logits never leave the device (any family)."""
+        if self.cfg.family in ("dense", "moe", "vlm"):
+            return transformer.decode_step_tokens(params, token, cache,
+                                                  self.cfg)
+        logits, cache = self.decode_step(params, token, cache)
+        return self.sample_greedy(logits), cache
+
+    def decode_step_paged_tokens(self, params, token, cache, block_tables,
+                                 pos, active):
+        """Fused paged round: ``(tokens, cache, pos + active)`` with free
+        slots' writes suppressed (see transformer.decode_step_paged_tokens).
+        """
+        return transformer.decode_step_paged_tokens(
+            params, token, cache, block_tables, pos, active, self.cfg)
+
     # -- caches ------------------------------------------------------------------
 
     def cache_shapes(self, batch: int, max_len: int

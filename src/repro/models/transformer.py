@@ -124,12 +124,13 @@ def block_decode(lp: dict, x: jax.Array, kc: jax.Array, vc: jax.Array,
 
 def block_decode_paged(lp: dict, x: jax.Array, kc: jax.Array, vc: jax.Array,
                        block_tables: jax.Array, pos: jax.Array,
-                       cfg: ModelConfig
+                       cfg: ModelConfig,
+                       active: Optional[jax.Array] = None
                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """block_decode against one layer's paged KV blocks."""
     h = rms_norm(x, lp["ln1"], cfg.norm_eps)
     a, kc, vc = attn.attn_decode_paged(lp["attn"], h, kc, vc,
-                                       block_tables, pos, cfg)
+                                       block_tables, pos, cfg, active)
     x = x + a
     h = rms_norm(x, lp["ln2"], cfg.norm_eps)
     m, _ = _ffn(lp, h, cfg, train=False)
@@ -138,10 +139,11 @@ def block_decode_paged(lp: dict, x: jax.Array, kc: jax.Array, vc: jax.Array,
 
 def block_decode_paged_quant(lp: dict, x: jax.Array, kc, vc, ksc, vsc,
                              block_tables: jax.Array, pos: jax.Array,
-                             cfg: ModelConfig):
+                             cfg: ModelConfig,
+                             active: Optional[jax.Array] = None):
     h = rms_norm(x, lp["ln1"], cfg.norm_eps)
     a, kc, vc, ksc, vsc = attn.attn_decode_paged_quant(
-        lp["attn"], h, kc, vc, ksc, vsc, block_tables, pos, cfg)
+        lp["attn"], h, kc, vc, ksc, vsc, block_tables, pos, cfg, active)
     x = x + a
     h = rms_norm(x, lp["ln2"], cfg.norm_eps)
     m, _ = _ffn(lp, h, cfg, train=False)
@@ -578,13 +580,16 @@ def supports_paged(cfg: ModelConfig) -> bool:
 
 def decode_step_paged(params: dict, token: jax.Array, cache: dict,
                       block_tables: jax.Array, pos: jax.Array,
-                      cfg: ModelConfig) -> tuple[jax.Array, dict]:
+                      cfg: ModelConfig,
+                      active: Optional[jax.Array] = None
+                      ) -> tuple[jax.Array, dict]:
     """One decode step against block-paged KV pools.
 
     token: (B,) int32; cache: {"k","v"} of (L, N, bs, K, Dh) physical
     blocks shared across the batch (+ int8 scale pools when KV-int8 is
     on); block_tables: (B, M) int32 mapping each sequence's logical block
-    slots to physical blocks; pos: (B,) int32 absolute positions.  The
+    slots to physical blocks; pos: (B,) int32 absolute positions;
+    ``active`` ((B,), optional) suppresses free slots' KV writes.  The
     caller owns block allocation and position bookkeeping — this step
     only writes one row per sequence and attends its table.  Returns
     (logits (B, V), updated cache).
@@ -601,7 +606,7 @@ def decode_step_paged(params: dict, token: jax.Array, cache: dict,
         def qbody(x, xs):
             lp, kc, vc, ksc, vsc = xs
             x, kc, vc, ksc, vsc = block_decode_paged_quant(
-                lp, x, kc, vc, ksc, vsc, block_tables, pos, cfg)
+                lp, x, kc, vc, ksc, vsc, block_tables, pos, cfg, active)
             return x, (kc, vc, ksc, vsc)
 
         x, (kn, vn, ksn, vsn) = jax.lax.scan(
@@ -612,10 +617,50 @@ def decode_step_paged(params: dict, token: jax.Array, cache: dict,
 
     def body(x, xs):
         lp, kc, vc = xs
-        x, kc, vc = block_decode_paged(lp, x, kc, vc, block_tables, pos, cfg)
+        x, kc, vc = block_decode_paged(lp, x, kc, vc, block_tables, pos,
+                                       cfg, active)
         return x, (kc, vc)
 
     x, (kn, vn) = jax.lax.scan(
         body, x, (params["layers"], cache["k"], cache["v"]))
     new_cache = dict(cache, k=kn, v=vn)
     return lm_head(params, x, cfg)[:, 0], new_cache
+
+
+# --------------------------------------------------------------------------
+# Fused decode — sample on device, never ship logits to the host
+# --------------------------------------------------------------------------
+
+
+def greedy_tokens(logits: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Greedy next tokens, clipped to the real vocab (padded-vocab argmax
+    can land on a pad logit only through float ties; the clip keeps the
+    device sampler bit-identical to the engine's old host-side path)."""
+    from repro.kernels import ops
+    return ops.greedy_sample(logits, cfg.vocab_size)
+
+
+def decode_step_tokens(params: dict, token: jax.Array, cache: dict,
+                       cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    """``decode_step`` with the greedy sampler fused in: returns
+    ``((B,) int32 next tokens, updated cache)`` — the serving engine's
+    sync-free hot path pulls B int32s per round instead of (B, V) logits.
+    """
+    logits, cache = decode_step(params, token, cache, cfg)
+    return greedy_tokens(logits, cfg), cache
+
+
+def decode_step_paged_tokens(params: dict, token: jax.Array, cache: dict,
+                             block_tables: jax.Array, pos: jax.Array,
+                             active: jax.Array, cfg: ModelConfig
+                             ) -> tuple[jax.Array, dict, jax.Array]:
+    """Fused paged round: sample on device AND advance the per-slot
+    position vector in-jit (``pos + active``), so the engine keeps
+    ``pos`` device-resident and only uploads it when admission, release,
+    or migration touched the host mirror.  Free slots (``active == 0``)
+    neither write KV nor advance.  Returns (tokens, cache, new pos).
+    """
+    active = jnp.asarray(active, jnp.int32)
+    logits, cache = decode_step_paged(params, token, cache, block_tables,
+                                      pos, cfg, active=active)
+    return greedy_tokens(logits, cfg), cache, pos + active

@@ -28,6 +28,20 @@ per node:
   block tables (``Model.decode_step_paged``); token streams are
   bit-identical to the dense path.  See ``serving/README.md`` for the
   block-table layout.
+* **Sync-free decode hot path (``fused=True``, the default)** — one decode
+  round is a single donated, fused jitted call: the greedy sampler runs on
+  device (``Model.decode_step_tokens`` returns ``(B,)`` int32 tokens, the
+  ``(B, V)`` logits never cross to the host), the KV pool / token vector /
+  paged position vector are donated so XLA updates them in place instead
+  of copying the cache every round, and the paged block tables + positions
+  stay device-resident (host mirrors are only touched on admit / release /
+  migrate and re-uploaded once when dirty).  Each instance splits a step
+  into ``dispatch_step`` (enqueue the round, no host pull) and
+  ``sync_step`` (ONE host synchronisation for everything the pass
+  dispatched), which lets ``ServingEngine.pump`` dispatch every co-located
+  instance's round before pulling any of their results — N pods pipeline
+  on one device instead of ping-ponging through Python.  ``fused=False``
+  keeps the old host-side argmax path as the bit-identical reference.
 
 Topology: a ``ServingEngine`` is one node; ``repro.serving.frontend``
 routes requests across several engines (join-shortest-queue) and places
@@ -77,17 +91,24 @@ class FunctionInstance:
     """One FaSTPod-equivalent: jitted prefill/decode with shared weights.
 
     ``batching="continuous"`` (default): a fixed pool of ``max_batch``
-    decode slots; every ``run_step`` first admits queued requests into free
-    slots (chunked prefill + slot merge), then advances all occupied slots
-    one token.  ``batching="static"``: the legacy batch that only re-fills
+    decode slots; every step first admits queued requests into free slots
+    (chunked prefill + slot merge), then advances all occupied slots one
+    token.  ``batching="static"``: the legacy batch that only re-fills
     once every member finishes — kept as the reference semantics.
+
+    ``fused=True`` (default for the slot modes) runs the sync-free hot
+    path: a step is dispatched by ``dispatch_step`` (no host round-trip)
+    and completed by ``sync_step`` (one blocking pull for the whole pass);
+    ``run_step`` chains the two for callers that want the old synchronous
+    protocol.  ``fused=False`` restores the host-side argmax reference —
+    token streams are bit-identical either way.
     """
 
     def __init__(self, inst_id: str, model: Model, store: ModelStore,
                  weights_key: str, alloc: Alloc, *, max_batch: int = 4,
                  max_len: int = 64, batching: str = "continuous",
                  prefill_buckets: bool = True, block_size: int = 16,
-                 n_kv_blocks: Optional[int] = None):
+                 n_kv_blocks: Optional[int] = None, fused: bool = True):
         if batching not in ("continuous", "static", "paged"):
             raise ValueError(f"unknown batching mode {batching!r}")
         self.inst_id = inst_id
@@ -96,6 +117,7 @@ class FunctionInstance:
         self.max_batch = max_batch
         self.max_len = max_len
         self.batching = batching
+        self.fused = fused and batching != "static"
         self.store = store
         self.weights_key = weights_key
         self.params = store.get(weights_key)  # shared, zero-copy
@@ -112,7 +134,19 @@ class FunctionInstance:
             lambda p, t, n: model.prefill(p, t, max_len=max_len, length=n)
         ) if self.bucketed else None
         self._decode = jax.jit(model.decode_step)
-        self._merge = jax.jit(model.merge_slot)
+        # Fused executors: the decode round samples on device and returns
+        # (B,) int32 tokens; the token vector and the whole KV pool are
+        # DONATED — after dispatch the old buffers are dead and XLA writes
+        # the new round in place (no per-round cache copy).  Never alias a
+        # donated buffer after dispatch (serving/README.md "Hot path").
+        self._decode_tok = jax.jit(model.decode_step_tokens,
+                                   donate_argnums=(1, 2))
+        self._greedy = jax.jit(model.sample_greedy)
+        self._set_tok = jax.jit(lambda t, s, v: t.at[s].set(v),
+                                donate_argnums=(0,))
+        # The slot pool is donated on merge/append too: admitting a request
+        # scatters its prefill entry into the pool in place.
+        self._merge = jax.jit(model.merge_slot, donate_argnums=(0,))
         self.steps = 0
         self.retired = False  # draining: no new routing, slots finish
         self.paused = False   # migrating: no admission, no decode
@@ -123,8 +157,21 @@ class FunctionInstance:
         # static state
         self.active: list[ServeRequest] = []
         self.refills = 0  # mid-flight slot admissions (continuous only)
-        self.last_fill = 0  # slots that did work in the latest run_step
-        # paged state: host-side block tables + positions, device-side pools.
+        self.last_fill = 0  # slots that did work in the latest step
+        # -- sync-free hot-path state (fused modes) -------------------------
+        self.sync_count = 0  # host synchronisation points (telemetry)
+        self.uploads = 0     # paged table/pos uploads (dirty-flag telemetry)
+        self._slot_tok_dev: Optional[jax.Array] = None  # (B,) device tokens
+        # Deferred results of the in-flight pass: (req, (1,) device token,
+        # slot or None for done-at-prefill) plus the decode round's
+        # ((B,) device tokens, active-slot snapshot).
+        self._pending_prefill: list[tuple[ServeRequest, Any,
+                                          Optional[int]]] = []
+        self._round: Optional[tuple[Any, list[int]]] = None
+        self._host_finished: list[ServeRequest] = []  # non-fused stash
+        # paged state: host-side block tables + positions are the MIRRORS;
+        # the jitted decode consumes device-resident copies that are only
+        # re-uploaded when admit/release/migrate dirtied the host side.
         if batching == "paged":
             if not model.supports_paged():
                 raise ValueError(
@@ -145,8 +192,14 @@ class FunctionInstance:
             self._pos = np.zeros((max_batch,), np.int32)
             self._block_bytes = model.kv_block_bytes(block_size)
             self._decode_paged = jax.jit(model.decode_step_paged)
-            self._append = jax.jit(model.append_paged)
+            self._decode_paged_tok = jax.jit(model.decode_step_paged_tokens,
+                                             donate_argnums=(1, 2, 4))
+            self._append = jax.jit(model.append_paged, donate_argnums=(0,))
             self.kv_bytes_peak = 0
+            self._tables_dev: Optional[jax.Array] = None
+            self._pos_dev: Optional[jax.Array] = None
+            self._active_dev: Optional[jax.Array] = None
+            self._state_dirty = True
 
     def close(self) -> None:
         if self.batching == "paged":
@@ -183,6 +236,28 @@ class FunctionInstance:
     def _clip_tok(self, tok: np.ndarray) -> np.ndarray:
         return np.minimum(tok, self.model.cfg.vocab_size - 1)
 
+    # -- device-resident decode state (fused path) --------------------------
+
+    def _tok_dev(self) -> jax.Array:
+        """Device-resident per-slot token vector; re-uploaded from the host
+        mirror only after migration touched it (``None`` invalidates)."""
+        if self._slot_tok_dev is None:
+            self._slot_tok_dev = jnp.asarray(self._slot_tok)
+        return self._slot_tok_dev
+
+    def _upload_paged_state(self) -> None:
+        """Push dirtied host mirrors (tables / positions / active mask) to
+        the device — once per admit/release/migrate burst, NOT per round."""
+        mask = np.zeros((self.max_batch,), np.int32)
+        for slot, req in enumerate(self.slots):
+            if req is not None:
+                mask[slot] = 1
+        self._tables_dev = jnp.asarray(self._tables)
+        self._pos_dev = jnp.asarray(self._pos)
+        self._active_dev = jnp.asarray(mask)
+        self._state_dirty = False
+        self.uploads += 1
+
     # -- continuous path ---------------------------------------------------
 
     def _prefill_one(self, prompt: np.ndarray):
@@ -212,6 +287,13 @@ class FunctionInstance:
         the queue is admitted only when the allocator can cover its whole
         lifetime (prompt + decode rows), so a mid-flight pool exhaustion
         is impossible and admission stays FIFO under block pressure.
+
+        Fused mode never pulls the prefill argmax to the host here: the
+        device token is scattered into the slot-token vector in-jit and
+        queued for the pass's single ``sync_step`` pull.  The returned
+        list holds the requests this admission completed (done at
+        prefill) — in fused mode they are *counted* for fill accounting
+        but only marked done at sync.
         """
         finished = []
         paged = self.batching == "paged"
@@ -228,13 +310,23 @@ class FunctionInstance:
                 break  # head-of-line waits for retiring requests' blocks
             req = self.queue.popleft()
             logits, entry = self._prefill_one(req.prompt)
-            tok = int(self._clip_tok(
-                np.asarray(jnp.argmax(logits, axis=-1), np.int32))[0])
-            req.tokens_out.append(tok)
-            if len(req.tokens_out) >= req.max_new_tokens:
-                req.done = True
-                finished.append(req)
-                continue  # slot stays free for the next queued request
+            tok_dev = self._greedy(logits)  # (1,) int32, stays on device
+            if self.fused:
+                done_at_prefill = (len(req.tokens_out) + 1
+                                   >= req.max_new_tokens)
+                self._pending_prefill.append(
+                    (req, tok_dev, None if done_at_prefill else slot))
+                if done_at_prefill:
+                    finished.append(req)  # completed by sync_step
+                    continue  # slot stays free for the next queued request
+            else:
+                self.sync_count += 1
+                tok = int(np.asarray(tok_dev)[0])
+                req.tokens_out.append(tok)
+                if len(req.tokens_out) >= req.max_new_tokens:
+                    req.done = True
+                    finished.append(req)
+                    continue
             if self.cache is None:
                 self.cache = (self.model.init_paged_cache(
                     self.allocator.n_blocks, self.block_size) if paged
@@ -251,30 +343,53 @@ class FunctionInstance:
                 row = self.pages.row(slot, self.blocks_per_seq)
                 self._tables[slot] = row
                 self._pos[slot] = int(req.prompt.shape[0])
+                self._state_dirty = True
                 self.cache = self._append(self.cache, entry,
                                           jnp.asarray(row, jnp.int32))
             else:
                 self.cache = self._merge(self.cache, entry, jnp.int32(slot))
             self.slots[slot] = req
-            self._slot_tok[slot] = tok
+            if self.fused:
+                self._slot_tok_dev = self._set_tok(
+                    self._tok_dev(), jnp.int32(slot), tok_dev[0])
+            else:
+                self._slot_tok[slot] = tok  # type: ignore[possibly-undefined]
         return finished
 
+    def _advance_slot(self, slot: int, tok: int) -> Optional[ServeRequest]:
+        """Land one decode round's token on an occupied slot: append it,
+        refresh the host mirrors (slot token; paged position, matching the
+        in-jit ``pos + active``), and free the slot — paged blocks
+        included — when the request finishes.  Returns the request iff
+        this token completed it.  The single finish sequence shared by the
+        fused sync and both host-argmax reference rounds."""
+        req = self.slots[slot]
+        req.tokens_out.append(tok)
+        self._slot_tok[slot] = tok
+        if self.batching == "paged":
+            self._pos[slot] += 1
+        if len(req.tokens_out) >= req.max_new_tokens:
+            req.done = True
+            self.slots[slot] = None  # freed immediately for refill
+            if self.batching == "paged":
+                self._release_paged(slot)  # blocks reusable NOW
+            return req
+        return None
+
     def _decode_round_continuous(self) -> list[ServeRequest]:
+        """Host-side argmax reference round (``fused=False``)."""
         logits, self.cache = self._decode(
             self.params, jnp.asarray(self._slot_tok), self.cache)
+        self.sync_count += 1
         next_tok = self._clip_tok(
             np.asarray(jnp.argmax(logits, axis=-1), np.int32))
         finished = []
         for slot, req in enumerate(self.slots):
             if req is None:
                 continue  # free slot decoded garbage; ignore it
-            tok = int(next_tok[slot])
-            req.tokens_out.append(tok)
-            self._slot_tok[slot] = tok
-            if len(req.tokens_out) >= req.max_new_tokens:
-                req.done = True
-                finished.append(req)
-                self.slots[slot] = None  # freed immediately for refill
+            done = self._advance_slot(slot, int(next_tok[slot]))
+            if done is not None:
+                finished.append(done)
         return finished
 
     def _release_paged(self, slot: int) -> None:
@@ -283,26 +398,125 @@ class FunctionInstance:
         self.pages.release(slot)
         self._tables[slot] = NULL_BLOCK
         self._pos[slot] = 0
+        self._state_dirty = True
 
     def _decode_round_paged(self) -> list[ServeRequest]:
+        """Host-side argmax reference round (``fused=False``)."""
         logits, self.cache = self._decode_paged(
             self.params, jnp.asarray(self._slot_tok), self.cache,
             jnp.asarray(self._tables), jnp.asarray(self._pos))
+        self.sync_count += 1
         next_tok = self._clip_tok(
             np.asarray(jnp.argmax(logits, axis=-1), np.int32))
         finished = []
         for slot, req in enumerate(self.slots):
             if req is None:
                 continue  # free slot decoded into the null block; ignore it
-            self._pos[slot] += 1
-            tok = int(next_tok[slot])
+            done = self._advance_slot(slot, int(next_tok[slot]))
+            if done is not None:
+                finished.append(done)
+        return finished
+
+    # -- fused round: dispatch now, sync once per pass ----------------------
+
+    def _dispatch_round(self) -> None:
+        """Enqueue one fused decode round on the device — no host pull.
+
+        The token vector, KV pool, and (paged) position vector are donated
+        to the call and immediately replaced by the returned buffers; the
+        results land in ``self._round`` for ``sync_step``.
+        """
+        active = [s for s, r in enumerate(self.slots) if r is not None]
+        if self.batching == "paged":
+            if self._state_dirty:
+                self._upload_paged_state()
+            tok, self.cache, self._pos_dev = self._decode_paged_tok(
+                self.params, self._tok_dev(), self.cache,
+                self._tables_dev, self._pos_dev, self._active_dev)
+        else:
+            tok, self.cache = self._decode_tok(
+                self.params, self._tok_dev(), self.cache)
+        self._slot_tok_dev = tok  # device-resident input of the next round
+        self._round = (tok, active)
+
+    def dispatch_step(self) -> bool:
+        """Dispatch one token-gated step WITHOUT any host synchronisation.
+
+        Fused modes enqueue admission prefills and the decode round and
+        return immediately (JAX async dispatch keeps the device busy while
+        the caller dispatches sibling instances); the host-synchronous
+        reference modes (``static``, ``fused=False``) execute the step in
+        full and stash its completions.  Either way ``sync_step`` finishes
+        the pass.  Returns False when paused (nothing dispatched).
+        """
+        if self.paused:
+            # Mid-migration: admission and decode are frozen — the KV pool
+            # is being gathered out from under the slots.
+            return False
+        self.steps += 1
+        if self.batching == "static":
+            if self.active:
+                self.last_fill = sum(1 for r in self.active if not r.done)
+                self._host_finished = self._decode_round_static()
+            else:
+                finished = self._admit_static()
+                self.last_fill = len(self.active) or len(finished)
+                self._host_finished = finished
+            return True
+        finished = self._admit()
+        self.last_fill = self.n_active() + len(finished)
+        if self.batching == "paged":
+            # Sample while admitted requests hold their blocks (the decode
+            # round releases finishers immediately).
+            self.kv_bytes_peak = max(self.kv_bytes_peak,
+                                     self.kv_bytes_in_use())
+        if self.fused:
+            if self.n_active() > 0:
+                self._dispatch_round()
+            return True
+        if self.n_active() > 0:
+            finished += (self._decode_round_paged()
+                         if self.batching == "paged"
+                         else self._decode_round_continuous())
+        self._host_finished = finished
+        return True
+
+    def sync_step(self) -> list[ServeRequest]:
+        """Complete the dispatched pass with ONE host synchronisation.
+
+        Pulls every deferred device token (admission prefills + the decode
+        round) in a single blocking point, appends them to their requests,
+        refreshes the host mirrors (slot tokens, paged positions), and
+        releases finished slots.  Returns the requests the pass completed.
+        """
+        if not self.fused:
+            finished, self._host_finished = self._host_finished, []
+            return finished
+        if not self._pending_prefill and self._round is None:
+            return []
+        self.sync_count += 1  # the pass's single synchronisation point
+        arrays = [t for _, t, _ in self._pending_prefill]
+        if self._round is not None:
+            arrays.append(self._round[0])
+        jax.block_until_ready(arrays)
+        finished = []
+        for req, tok_dev, slot in self._pending_prefill:
+            tok = int(np.asarray(tok_dev)[0])
             req.tokens_out.append(tok)
-            self._slot_tok[slot] = tok
-            if len(req.tokens_out) >= req.max_new_tokens:
+            if slot is None:  # whole request served by its prefill
                 req.done = True
                 finished.append(req)
-                self.slots[slot] = None
-                self._release_paged(slot)  # blocks reusable NOW
+            else:
+                self._slot_tok[slot] = tok  # host mirror (migration seam)
+        self._pending_prefill = []
+        if self._round is not None:
+            tok_dev, active = self._round
+            self._round = None
+            toks = np.asarray(tok_dev)
+            for slot in active:
+                done = self._advance_slot(slot, int(toks[slot]))
+                if done is not None:
+                    finished.append(done)
         return finished
 
     # -- migration seam (pause -> gather -> merge) --------------------------
@@ -313,7 +527,9 @@ class FunctionInstance:
 
         Paged slots are re-gathered to the dense batch-1 layout
         (``Model.gather_pages``) so the entry is portable to any target
-        instance, whatever physical blocks it has free.
+        instance, whatever physical blocks it has free.  Valid only
+        between pump passes (every dispatched round synced): the host
+        mirrors are refreshed by ``sync_step``.
         """
         req = self.slots[slot]
         if req is None:
@@ -348,6 +564,7 @@ class FunctionInstance:
             row = self.pages.row(slot, self.blocks_per_seq)
             self._tables[slot] = row
             self._pos[slot] = int(entry["pos"])
+            self._state_dirty = True
             self.cache = self._append(self.cache, entry,
                                       jnp.asarray(row, jnp.int32))
             self.kv_bytes_peak = max(self.kv_bytes_peak,
@@ -356,6 +573,7 @@ class FunctionInstance:
             self.cache = self._merge(self.cache, entry, jnp.int32(slot))
         self.slots[slot] = req
         self._slot_tok[slot] = tok
+        self._slot_tok_dev = None  # host mirror changed: re-upload lazily
 
     # -- static reference path ---------------------------------------------
 
@@ -368,6 +586,7 @@ class FunctionInstance:
         prompts = np.stack([r.prompt for r in batch])
         logits, cache = self._prefill(self.params,
                                       jnp.asarray(prompts, jnp.int32))
+        self.sync_count += 1
         next_tok = self._clip_tok(
             np.asarray(jnp.argmax(logits, axis=-1), np.int32))
         finished = []
@@ -386,6 +605,7 @@ class FunctionInstance:
         # of static batching) but stop accumulating tokens.
         toks = jnp.asarray([r.tokens_out[-1] for r in self.active], jnp.int32)
         logits, self.cache = self._decode(self.params, toks, self.cache)
+        self.sync_count += 1
         next_tok = self._clip_tok(
             np.asarray(jnp.argmax(logits, axis=-1), np.int32))
         finished = []
@@ -411,34 +631,12 @@ class FunctionInstance:
     def run_step(self) -> list[ServeRequest]:
         """One token-gated step; returns requests completed by it.
 
-        Continuous: admit queued requests into free slots, then one decode
-        round over all occupied slots.  Static: batch prefill OR one decode
-        round, never both.
+        ``dispatch_step`` + ``sync_step`` back to back — the synchronous
+        protocol for callers outside the overlapping engine pump.
         """
-        if self.paused:
-            # Mid-migration: admission and decode are frozen — the KV pool
-            # is being gathered out from under the slots.
+        if not self.dispatch_step():
             return []
-        self.steps += 1
-        if self.batching == "static":
-            if self.active:
-                self.last_fill = sum(1 for r in self.active if not r.done)
-                return self._decode_round_static()
-            finished = self._admit_static()
-            self.last_fill = len(self.active) or len(finished)
-            return finished
-        finished = self._admit()
-        self.last_fill = self.n_active() + len(finished)
-        if self.batching == "paged":
-            # Sample while admitted requests hold their blocks (the decode
-            # round below releases finishers immediately).
-            self.kv_bytes_peak = max(self.kv_bytes_peak,
-                                     self.kv_bytes_in_use())
-        if self.n_active() > 0:
-            finished += (self._decode_round_paged()
-                         if self.batching == "paged"
-                         else self._decode_round_continuous())
-        return finished
+        return self.sync_step()
 
 
 class ServingEngine:
@@ -464,8 +662,8 @@ class ServingEngine:
     def deploy(self, fn: str, model: Model, params: Any, alloc: Alloc, *,
                n_instances: int = 1, max_batch: int = 4, max_len: int = 64,
                batching: str = "continuous", prefill_buckets: bool = True,
-               block_size: int = 16,
-               n_kv_blocks: Optional[int] = None) -> list[str]:
+               block_size: int = 16, n_kv_blocks: Optional[int] = None,
+               fused: bool = True) -> list[str]:
         if not self.alive:
             raise RuntimeError("cannot deploy to a failed node")
         if fn not in self.recorders:
@@ -480,7 +678,7 @@ class ServingEngine:
                                     batching=batching,
                                     prefill_buckets=prefill_buckets,
                                     block_size=block_size,
-                                    n_kv_blocks=n_kv_blocks)
+                                    n_kv_blocks=n_kv_blocks, fused=fused)
             self.instances[inst_id] = inst
             self.scheduler.register(inst_id, alloc)
             ids.append(inst_id)
@@ -582,12 +780,23 @@ class ServingEngine:
     def has_work(self) -> bool:
         return any(i.has_work() for i in self.instances.values())
 
-    def pump(self, budget_s: float = 1.0) -> int:
-        """Run token-gated dispatch until idle or budget exhausted."""
+    def pump(self, budget_s: float = 1.0, *, overlap: bool = True) -> int:
+        """Run token-gated dispatch until idle or budget exhausted.
+
+        ``overlap=True`` (default) pipelines co-located instances: every
+        granted instance's round is DISPATCHED first (JAX async dispatch
+        queues the work and returns), then a second pass performs each
+        instance's single host sync — so instance B's kernels execute
+        while Python is still dispatching C and pulling A.
+        ``overlap=False`` is the serialized reference (dispatch + sync one
+        instance at a time) that ``benchmarks/decode_throughput.py``
+        measures the overlap win against.
+        """
         if not self.alive:
             return 0
         completed = 0
         deadline = time.perf_counter() + budget_s
+        worked_last_pass = False
         while time.perf_counter() < deadline:
             any_work = False
             for inst_id, inst in list(self.instances.items()):
@@ -598,13 +807,42 @@ class ServingEngine:
                 break
             granted = self.scheduler.dispatch(self.now())
             if not granted:
-                time.sleep(0.001)
+                # Quota-blocked, not idle: when the previous pass did real
+                # work we are saturated and the next scheduling window is
+                # imminent — spin instead of yielding mid-burst.  Only a
+                # genuinely idle lull sleeps.
+                if not worked_last_pass:
+                    time.sleep(0.001)
+                worked_last_pass = False
                 continue
+            worked_last_pass = True
+            t_prev = time.perf_counter()
+            if overlap:
+                # Only fused instances join the early dispatch pass: their
+                # dispatch_step is a cheap async enqueue.  Host-synchronous
+                # modes (static, fused=False) execute their whole round in
+                # dispatch_step, so they run in the sync pass where their
+                # compute is timed against their own Q_used, not the
+                # first-synced sibling's.
+                for token in granted:
+                    inst = self.instances[token.pod_id]
+                    if inst.fused:
+                        inst.dispatch_step()
+            # Sync pass: each instance's elapsed is the wall-clock delta to
+            # its sync point — the clock starts BEFORE the dispatch pass,
+            # so the full pass wall time (host dispatch overhead included,
+            # exactly what the serialized path charged) is apportioned
+            # across the overlapped instances without double-charging
+            # Q_used; the first-synced instance absorbs the (cheap,
+            # enqueue-only) dispatch leg.
             for token in granted:
                 inst = self.instances[token.pod_id]
-                t0 = time.perf_counter()
-                finished = inst.run_step()
-                elapsed = time.perf_counter() - t0
+                if not overlap or not inst.fused:
+                    inst.dispatch_step()
+                finished = inst.sync_step()
+                t_now = time.perf_counter()
+                elapsed = t_now - t_prev
+                t_prev = t_now
                 # Drained occupancy scales with slot fill: an underfilled
                 # decode round cannot saturate the instance's SM share.
                 occ = token.occ * min(inst.last_fill / inst.max_batch, 1.0)
@@ -630,3 +868,20 @@ class ServingEngine:
     def dense_kv_reserved(self) -> int:
         """What dense slot pools would reserve for the same capacity."""
         return sum(i.dense_kv_reserved() for i in self.instances.values())
+
+    # -- hot-path telemetry -------------------------------------------------
+
+    def sync_counts(self) -> dict[str, int]:
+        """Per-instance host-synchronisation counts.  The fused hot path's
+        budget is exactly ONE per instance per pump pass (prefill argmaxes
+        and the decode round share it); the host-argmax reference spends
+        one per admitted prompt plus one per round."""
+        return {k: v.sync_count for k, v in self.instances.items()}
+
+    def telemetry(self) -> dict[str, dict[str, int]]:
+        """Hot-path counters per instance: steps, host syncs, and (paged)
+        device-state uploads — ``uploads << steps`` proves the block
+        tables/positions stay device-resident between admission events."""
+        return {k: {"steps": v.steps, "syncs": v.sync_count,
+                    "uploads": v.uploads}
+                for k, v in self.instances.items()}

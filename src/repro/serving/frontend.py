@@ -119,7 +119,8 @@ class ClusterFrontend:
                        batching: str = "continuous",
                        framework_bytes: int = DEFAULT_FRAMEWORK_BYTES,
                        block_size: int = 16,
-                       n_kv_blocks: Optional[int] = None) -> Optional[str]:
+                       n_kv_blocks: Optional[int] = None,
+                       fused: bool = True) -> Optional[str]:
         """Place ONE instance via MRA + memory admission with spillover.
 
         Returns a ``node:inst_id`` handle, or None when no node has both a
@@ -171,7 +172,8 @@ class ClusterFrontend:
             inst_id = self.engines[placement.node].deploy(
                 fn, model, params, alloc, n_instances=1,
                 max_batch=max_batch, max_len=max_len, batching=batching,
-                block_size=block_size, n_kv_blocks=n_kv_blocks)[0]
+                block_size=block_size, n_kv_blocks=n_kv_blocks,
+                fused=fused)[0]
         except Exception:
             # The rectangle was reserved before the engine ran; a failed
             # deploy must not leak it (or a provisional memory-model entry).
@@ -195,7 +197,8 @@ class ClusterFrontend:
                batching: str = "continuous",
                framework_bytes: int = DEFAULT_FRAMEWORK_BYTES,
                block_size: int = 16,
-               n_kv_blocks: Optional[int] = None) -> list[str]:
+               n_kv_blocks: Optional[int] = None,
+               fused: bool = True) -> list[str]:
         """Place ``n_instances`` of ``fn`` across the fleet via MRA +
         memory admission; returns ``node:inst_id`` handles."""
         handles = []
@@ -204,7 +207,7 @@ class ClusterFrontend:
                 fn, model, params, alloc, max_batch=max_batch,
                 max_len=max_len, batching=batching,
                 framework_bytes=framework_bytes,
-                block_size=block_size, n_kv_blocks=n_kv_blocks)
+                block_size=block_size, n_kv_blocks=n_kv_blocks, fused=fused)
             if handle is None:
                 raise RuntimeError(
                     f"no node can host {fn} at alloc {alloc} "
@@ -422,7 +425,8 @@ class ClusterFrontend:
                 batching=inst.batching,
                 block_size=getattr(inst, "block_size", 16),
                 n_kv_blocks=(inst.allocator.n_blocks
-                             if inst.batching == "paged" else None))[0]
+                             if inst.batching == "paged" else None),
+                fused=inst.fused)[0]
         except Exception:
             self.pool.release(placement)
             inst.paused = False

@@ -1,0 +1,289 @@
+"""Sync-free decode hot path: fused on-device sampling, donated buffers,
+device-resident paged state, and overlapped dispatch.
+
+Tier-1 tests on the tiny deterministic configs from ``conftest``:
+
+* bit-identical token streams between the fused device sampler
+  (``fused=True``, the default) and the old host-side argmax reference
+  (``fused=False``) for dense, MoE, and paged instances — including
+  across a mid-stream live migration and a retire-drain;
+* exactly ONE host synchronisation per pump pass per instance
+  (``FunctionInstance.sync_count`` via ``ServingEngine`` telemetry);
+* donated KV / token / position buffers: the pre-round arrays are dead
+  after dispatch (XLA updated the pool in place instead of copying);
+* device-resident paged block tables / positions: uploads happen on
+  admit/release events only, never per round.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_config
+from repro.core.resources import Alloc
+from repro.models import build_model
+from repro.serving import ClusterFrontend, ServingEngine
+
+FULL = Alloc(sm=1.0, quota_request=0.9, quota_limit=0.9)
+MOE_KW = dict(name="tiny-moe", family="moe", n_experts=4, top_k=2)
+
+
+def _prompts(spec, rng_seed=0, vocab=64):
+    rng = np.random.default_rng(rng_seed)
+    return [(rng.integers(0, vocab, l, dtype=np.int32), n) for l, n in spec]
+
+
+ARRIVALS = [(4, 3), (12, 6), (7, 1), (20, 5), (5, 4), (16, 6), (6, 2)]
+
+
+def _serve(model, params, batching, arrivals, *, fused, max_batch=2,
+           max_len=32):
+    engine = ServingEngine(window=0.1)
+    engine.deploy("f", model, params, FULL, n_instances=1,
+                  max_batch=max_batch, max_len=max_len, batching=batching,
+                  block_size=8 if batching == "paged" else 16, fused=fused)
+    reqs = [engine.submit("f", p, max_new_tokens=n) for p, n in arrivals]
+    done = engine.pump(budget_s=120.0)
+    assert done == len(reqs)
+    return reqs, engine
+
+
+# -- fused == host-argmax, all families and batching modes -----------------
+
+
+@pytest.mark.parametrize("overrides,batching", [
+    ({}, "continuous"), (MOE_KW, "continuous"),
+    ({}, "paged"), (MOE_KW, "paged"),
+], ids=["dense-continuous", "moe-continuous", "dense-paged", "moe-paged"])
+def test_fused_matches_host_argmax(overrides, batching):
+    """The on-device sampler (argmax + clip + slot update fused into the
+    decode step) must emit exactly the host-side reference's tokens."""
+    model = build_model(tiny_config(**overrides))
+    params = model.init(jax.random.key(0))
+    arrivals = _prompts(ARRIVALS)
+    fused, eng_f = _serve(model, params, batching, arrivals, fused=True)
+    host, eng_h = _serve(model, params, batching, arrivals, fused=False)
+    for rf, rh in zip(fused, host):
+        assert rf.done and rh.done
+        assert rf.tokens_out == rh.tokens_out
+    inst = next(iter(eng_f.instances.values()))
+    assert inst.refills > 0, "trace must exercise mid-flight admission"
+
+
+def test_free_slot_writes_dropped_not_aliased_to_last_block(tiny_model,
+                                                            tiny_params):
+    """Regression: the fused paged round drops free slots' writes via an
+    OUT-OF-RANGE scatter index.  A negative sentinel would be normalized
+    to the last physical block — which under a tight pool belongs to a
+    live sequence (here request B's final block), silently corrupting its
+    cached K/V and diverging from the host-argmax reference."""
+    rng = np.random.default_rng(5)
+    # 5-block pool (4 usable): A takes blocks [1,2], B takes [3,4] — the
+    # LAST block.  A finishes after 3 tokens; B decodes 7 more rounds with
+    # slot A free, each one a would-be garbage write.
+    arrivals = [(rng.integers(0, 64, 8, dtype=np.int32), 3),
+                (rng.integers(0, 64, 8, dtype=np.int32), 10)]
+
+    def run(fused):
+        engine = ServingEngine(window=0.1)
+        engine.deploy("f", tiny_model, tiny_params, FULL, max_batch=2,
+                      max_len=32, batching="paged", block_size=8,
+                      n_kv_blocks=5, fused=fused)
+        reqs = [engine.submit("f", p, max_new_tokens=n)
+                for p, n in arrivals]
+        assert engine.pump(budget_s=120.0) == len(reqs)
+        return [r.tokens_out for r in reqs]
+
+    assert run(True) == run(False)
+
+
+def test_one_host_sync_per_pump_pass(tiny_model, tiny_params):
+    """The fused hot path's budget: sync_count == steps, even on passes
+    that admit prefills (their argmaxes share the round's single pull);
+    the host-argmax reference spends strictly more."""
+    # Same-length prompts: one prefill bucket, so the test measures sync
+    # accounting rather than paying four bucket compiles per engine.
+    arrivals = _prompts([(6, 4), (6, 1), (6, 3), (6, 5), (6, 2)])
+    _, eng = _serve(tiny_model, tiny_params, "continuous", arrivals,
+                    fused=True)
+    (stats,) = eng.telemetry().values()
+    assert stats["syncs"] == stats["steps"] > 0
+    _, eng_p = _serve(tiny_model, tiny_params, "paged", arrivals,
+                      fused=True)
+    (pstats,) = eng_p.telemetry().values()
+    assert pstats["syncs"] == pstats["steps"] > 0
+    _, eng_h = _serve(tiny_model, tiny_params, "continuous", arrivals,
+                      fused=False)
+    (hstats,) = eng_h.telemetry().values()
+    # 1 per decode round + 1 per admitted prompt.
+    assert hstats["syncs"] > hstats["steps"]
+
+
+def test_paged_state_uploaded_only_when_dirty(tiny_model, tiny_params):
+    """Block tables / positions are device-resident: a long solo decode
+    re-uploads them on admission/release events, not every round."""
+    arrivals = _prompts([(4, 20)])  # one request, 19 decode rounds
+    _, eng = _serve(tiny_model, tiny_params, "paged", arrivals, fused=True)
+    (stats,) = eng.telemetry().values()
+    assert stats["steps"] >= 19
+    # One upload when the request was admitted; the release on its last
+    # round dirties the state again but nothing decodes after it.
+    assert stats["uploads"] == 1
+
+
+def test_cache_and_token_buffers_are_donated(tiny_model, tiny_params):
+    """After a fused round the pre-round KV pool and token vector are dead
+    (donated to XLA, updated in place) — no per-round cache copy."""
+    engine = ServingEngine(window=0.1)
+    engine.deploy("f", tiny_model, tiny_params, FULL, max_batch=2,
+                  max_len=32, batching="continuous")
+    engine.submit("f", np.arange(8, dtype=np.int32), max_new_tokens=8)
+    inst = next(iter(engine.instances.values()))
+    inst.run_step()  # admit + first round
+    cache_before = inst.cache
+    tok_before = inst._slot_tok_dev
+    inst.run_step()
+    jax.block_until_ready(inst.cache["k"])
+    assert cache_before["k"].is_deleted(), "KV pool was copied, not donated"
+    assert tok_before.is_deleted(), "token vector was copied, not donated"
+    assert not inst.cache["k"].is_deleted()
+    engine.pump(budget_s=60.0)
+
+
+def test_paged_pos_buffer_donated(tiny_model, tiny_params):
+    engine = ServingEngine(window=0.1)
+    engine.deploy("f", tiny_model, tiny_params, FULL, max_batch=2,
+                  max_len=32, batching="paged", block_size=8)
+    engine.submit("f", np.arange(8, dtype=np.int32), max_new_tokens=8)
+    inst = next(iter(engine.instances.values()))
+    inst.run_step()
+    pos_before, cache_before = inst._pos_dev, inst.cache
+    inst.run_step()  # clean state: no re-upload, pos donated in-jit
+    jax.block_until_ready(inst.cache["k"])
+    assert pos_before.is_deleted(), "pos vector was copied, not donated"
+    assert cache_before["k"].is_deleted(), "paged pool copied, not donated"
+    engine.pump(budget_s=60.0)
+
+
+# -- migration + retire-drain keep working against device state ------------
+
+
+@pytest.mark.parametrize("batching", ["continuous", "paged"])
+def test_fused_migration_matches_host_path(tiny_model, tiny_params,
+                                           batching):
+    """Mid-stream live migration against the device-resident state: the
+    fused fleet's token streams must equal the host-argmax fleet's."""
+    arrivals = _prompts([(6, 8), (9, 8), (5, 8)], rng_seed=4)
+
+    def run(fused):
+        fe = ClusterFrontend(n_nodes=2, window=0.1)
+        [h0] = fe.deploy("f", tiny_model, tiny_params,
+                         Alloc(sm=0.4, quota_request=0.4, quota_limit=0.5),
+                         max_batch=2, max_len=32, batching=batching,
+                         block_size=8, fused=fused)
+        reqs = [fe.submit("f", p, max_new_tokens=n) for p, n in arrivals]
+        fe.pump(budget_s=0.05)  # some slots mid-decode
+        src = fe.engines[0].instances
+        assert src and any(i.n_active() > 0 for i in src.values())
+        new_handle = fe.migrate("f", h0, tiny_model, tiny_params, target=1)
+        assert new_handle is not None
+        tgt = next(iter(fe.engines[1].instances.values()))
+        assert tgt.fused == fused, "migration must preserve sampling mode"
+        done = fe.pump(budget_s=120.0)
+        assert done == len(reqs) and all(r.done for r in reqs)
+        return [r.tokens_out for r in reqs]
+
+    assert run(True) == run(False)
+
+
+@pytest.mark.parametrize("batching", ["continuous", "paged"])
+def test_fused_retire_drain_matches_host_path(tiny_model, tiny_params,
+                                              batching):
+    """Retire mid-stream: draining slots decode on the device-resident
+    state to completion, bit-identical to the host path, and release
+    everything."""
+    arrivals = _prompts([(8, 6), (8, 6), (8, 3), (6, 4)], rng_seed=9)
+
+    def run(fused):
+        engine = ServingEngine(window=0.1)
+        [iid] = engine.deploy("f", tiny_model, tiny_params, FULL,
+                              max_batch=2, max_len=32, batching=batching,
+                              block_size=8, fused=fused)
+        reqs = [engine.submit("f", p, max_new_tokens=n)
+                for p, n in arrivals]
+        engine.pump(budget_s=0.05)
+        inst = engine.instances[iid]
+        assert inst.n_active() > 0, "test needs live decode slots"
+        strays = engine.retire(iid, strip_queue=True)
+        engine.pump(budget_s=120.0)
+        assert iid not in engine.instances, "drained instance must close"
+        if batching == "paged":
+            assert inst.allocator.blocks_in_use == 0
+        admitted = [r for r in reqs if r not in strays]
+        assert admitted and all(r.done for r in admitted)
+        return [(r.req_id in {s.req_id for s in strays}, r.tokens_out)
+                for r in reqs]
+
+    assert run(True) == run(False)
+
+
+# -- overlapped multi-instance pump ----------------------------------------
+
+
+def test_overlapped_pump_matches_serialized_tokens(tiny_model, tiny_params):
+    """Co-located instances: the overlapped dispatch (round dispatched
+    for every granted instance before any result is pulled) must serve
+    the identical token streams the serialized pump serves."""
+    arrivals = _prompts([(6, 5)] * 6 + [(6, 3)] * 3, rng_seed=2)
+
+    def run(overlap):
+        engine = ServingEngine(window=0.1)
+        engine.deploy("f", tiny_model, tiny_params,
+                      Alloc(sm=0.3, quota_request=0.9, quota_limit=0.9),
+                      n_instances=3, max_batch=2, max_len=32)
+        reqs = [engine.submit("f", p, max_new_tokens=n)
+                for p, n in arrivals]
+        done = engine.pump(budget_s=120.0, overlap=overlap)
+        assert done == len(reqs)
+        for inst in engine.instances.values():
+            assert inst.sync_count == inst.steps
+        return [r.tokens_out for r in reqs]
+
+    assert run(True) == run(False)
+
+
+def test_measured_profile_feeds_spec(tiny_model, tiny_params):
+    """Live profiler wiring: ``measure_engine_profile`` duty-cycles the
+    real jitted executors via ``measure_callable_trial`` and returns
+    points a ``FunctionSpec`` accepts directly."""
+    from repro.control.spec import FunctionSpec
+    from repro.core.profiler import measure_engine_profile
+
+    points = measure_engine_profile(
+        tiny_model, tiny_params, spatial=(0.5,), temporal=(0.5, 1.0),
+        max_batch=2, max_len=32, prompt_len=6, new_tokens=3,
+        window=0.05, n_windows=2, sm_scale=lambda sm: sm)
+    assert len(points) == 2
+    assert all(p.throughput > 0 and p.p99_latency > 0 for p in points)
+    # The higher temporal quota admits more wall-clock per window, so the
+    # measured capacity must not shrink (monotone up to timer noise).
+    assert points[1].throughput >= 0.5 * points[0].throughput
+    spec = FunctionSpec(name="measured", profile=tuple(points),
+                        slo_latency=10 * max(p.p99_latency for p in points),
+                        model_factory=lambda: (tiny_model, tiny_params))
+    assert spec.best_point() in points
+
+
+def test_run_step_protocol_unchanged(tiny_model, tiny_params):
+    """run_step (dispatch + sync chained) still returns the completions of
+    exactly the step it ran — the synchronous seam migration relies on."""
+    engine = ServingEngine(window=0.1)
+    engine.deploy("f", tiny_model, tiny_params, FULL, max_batch=2,
+                  max_len=32)
+    engine.submit("f", np.arange(4, dtype=np.int32), max_new_tokens=3)
+    inst = next(iter(engine.instances.values()))
+    assert inst.run_step() == []          # admit (token 1) + round (token 2)
+    [done] = inst.run_step()              # round 2 emits the final token
+    assert done.done and len(done.tokens_out) == 3
+    assert inst.n_active() == 0
