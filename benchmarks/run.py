@@ -7,6 +7,7 @@
   fig12  autoscale_slo        Alg.-1 autoscaling holds the 69 ms SLO
   fig13  model_sharing_mem    model-sharing memory footprints
   fault  fault_tolerance      reconciler healing after a node failure
+  prefix prefix_sharing       prefix-cache KV dedupe: bytes + concurrency
   head   headline             3.15x / 1.34x / 3.13x aggregate claims
   roof   roofline_table       (arch x shape x mesh) roofline from dry-run
 
@@ -31,6 +32,7 @@ MODULES = [
     ("fig12", "benchmarks.autoscale_slo"),
     ("fig13", "benchmarks.model_sharing_mem"),
     ("fault", "benchmarks.fault_tolerance"),
+    ("prefix", "benchmarks.prefix_sharing"),
     ("head", "benchmarks.headline"),
     ("roof", "benchmarks.roofline_table"),
 ]
@@ -40,7 +42,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset "
-                         "(fig8..fig13,fault,head,roof)")
+                         "(fig8..fig13,fault,prefix,head,roof)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 

@@ -162,11 +162,19 @@ class LiveBackend:
         if (n_kv_blocks is None and spec.batching == "paged"
                 and point.kv_blocks >= 2):
             n_kv_blocks = point.kv_blocks
+        # Shared-fraction axis: the spec declaration and the profiled
+        # point both carry it; charge admission with the larger (the spec
+        # is the operator's override, the point the profiler's evidence).
+        shared_frac = max(spec.kv_shared_frac, point.kv_shared_frac)
+        if spec.batching != "paged" or not spec.prefix_sharing:
+            shared_frac = 0.0
         return self.frontend.place_instance(
             spec.name, model, params, alloc,
             max_batch=spec.max_batch, max_len=spec.max_len,
             batching=spec.batching, framework_bytes=spec.framework_bytes,
-            block_size=spec.block_size, n_kv_blocks=n_kv_blocks)
+            block_size=spec.block_size, n_kv_blocks=n_kv_blocks,
+            prefix_sharing=spec.prefix_sharing,
+            kv_shared_frac=shared_frac)
 
     def evict(self, spec: FunctionSpec, pod_id: str) -> None:
         # Same mid-tick failure tolerance as SimBackend.evict.

@@ -177,6 +177,16 @@ class FunctionSpec:
         the per-instance physical block budget (None = the dense pool's
         worst case, so paging can only reduce bytes-in-use).  Profile
         tables record the matching capacity in ``ProfilePoint.kv_blocks``.
+      prefix_sharing: paged mode only — content-hash prefix matching with
+        copy-on-write (default on; False deploys the unshared reference
+        plane).
+      kv_shared_frac: shared-fraction admission axis — the declared
+        fraction of KV blocks expected to be prefix-shared duplicates.
+        The live frontend discounts its KV admission charge by it (honest
+        over-admission; the engine still enforces worst-case per-request
+        block reservations).  Profile tables carry the same axis in
+        ``ProfilePoint.kv_shared_frac``; the larger of the two wins at
+        placement.
       framework_bytes: per-instance runtime footprint charged by memory
         admission on the live path.
       curve: simulator backend only — the calibrated ``ServiceCurve``.
@@ -197,6 +207,8 @@ class FunctionSpec:
     batching: str = "continuous"
     block_size: int = 16
     n_kv_blocks: Optional[int] = None
+    prefix_sharing: bool = True
+    kv_shared_frac: float = 0.0
     framework_bytes: int = DEFAULT_FRAMEWORK_BYTES
     curve: Optional[ServiceCurve] = None
 
@@ -217,6 +229,15 @@ class FunctionSpec:
                 raise ValueError(
                     "n_kv_blocks needs the null page plus one usable "
                     "block (>= 2)")
+        if not 0.0 <= self.kv_shared_frac < 1.0:
+            raise ValueError(
+                f"kv_shared_frac must be in [0, 1), got "
+                f"{self.kv_shared_frac}")
+        if self.kv_shared_frac > 0.0 and (self.batching != "paged"
+                                          or not self.prefix_sharing):
+            raise ValueError(
+                "kv_shared_frac needs batching='paged' with prefix "
+                "sharing enabled")
         if self.headroom < 1.0:
             raise ValueError("headroom < 1 provisions below offered load")
 

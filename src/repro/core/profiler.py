@@ -128,6 +128,7 @@ def measure_engine_profile(
     sm_scale=None,
     kv_budget_bytes: int = 0,
     kv_block_bytes: int = 0,
+    kv_shared_frac: float = 0.0,
 ) -> list[ProfilePoint]:
     """Spec-ready ``{<F, S, Q, T>}`` table measured on the REAL jitted
     executors (ROADMAP "Live profiler backend for specs").
@@ -147,8 +148,10 @@ def measure_engine_profile(
     ``repro.control.FunctionSpec.profile`` directly —
     ``examples/autoscale_live.py --measured-profile`` runs exactly that.
 
-    ``kv_budget_bytes`` / ``kv_block_bytes`` stamp paged capacity
-    (``ProfilePoint.kv_blocks``) as in :func:`profile_points`.
+    ``kv_budget_bytes`` / ``kv_block_bytes`` / ``kv_shared_frac`` stamp
+    paged capacity and the shared-fraction axis
+    (``ProfilePoint.kv_blocks`` / ``kv_shared_frac``) as in
+    :func:`profile_points`.
     """
     import itertools
 
@@ -166,7 +169,8 @@ def measure_engine_profile(
     rng = np.random.default_rng(seed)
     prompts = [rng.integers(0, model.cfg.vocab_size, prompt_len,
                             dtype=np.int32) for _ in range(max_batch)]
-    kv_blocks = paged_kv_capacity(kv_budget_bytes, kv_block_bytes)
+    kv_blocks = paged_kv_capacity(kv_budget_bytes, kv_block_bytes,
+                                  kv_shared_frac)
     points: list[ProfilePoint] = []
     for sm in spatial:
         inst = FunctionInstance(
@@ -190,7 +194,7 @@ def measure_engine_profile(
                 sm=sm, quota=quota,
                 throughput=r.throughput * max_batch * factor,
                 p99_latency=r.p99 / max(factor, 1e-9),
-                kv_blocks=kv_blocks))
+                kv_blocks=kv_blocks, kv_shared_frac=kv_shared_frac))
         inst.close()
     return points
 
@@ -228,13 +232,27 @@ def profile_function(
     return db
 
 
-def paged_kv_capacity(kv_budget_bytes: int, kv_block_bytes: int) -> int:
+def paged_kv_capacity(kv_budget_bytes: int, kv_block_bytes: int,
+                      shared_frac: float = 0.0) -> int:
     """TOTAL physical KV blocks a memory budget can hold — the value to
     hand the engine as ``n_kv_blocks`` (the null page is one of them, so
-    a usable pool needs at least 2; smaller budgets report 0)."""
+    a usable pool needs at least 2; smaller budgets report 0).
+
+    ``shared_frac`` is the shared-fraction axis: with fraction ``s`` of a
+    workload's blocks expected to be prefix-shared duplicates, the same
+    budget honestly covers a pool stretched by ``1 / (1 - s)`` — the
+    expected PHYSICAL use of the larger pool is back at the budget,
+    because duplicated blocks are mapped, not materialised.  This mirrors
+    the live frontend's discounted KV admission charge; the engine still
+    enforces worst-case per-request reservations inside whatever pool it
+    is handed.
+    """
+    if not 0.0 <= shared_frac < 1.0:
+        raise ValueError(
+            f"shared_frac must be in [0, 1), got {shared_frac}")
     if kv_block_bytes <= 0 or kv_budget_bytes <= 0:
         return 0
-    n = kv_budget_bytes // kv_block_bytes
+    n = int(kv_budget_bytes / (kv_block_bytes * (1.0 - shared_frac)))
     return n if n >= 2 else 0
 
 
@@ -248,6 +266,7 @@ def profile_points(
     seed: int = 0,
     kv_budget_bytes: int = 0,
     kv_block_bytes: int = 0,
+    kv_shared_frac: float = 0.0,
 ) -> list[ProfilePoint]:
     """Spec-ready profile table: ``{<F_j, S_p, Q_p, T_p>}`` with SLO p99s.
 
@@ -262,8 +281,12 @@ def profile_points(
     each point with its paged-KV capacity (``ProfilePoint.kv_blocks``) —
     the block budget a ``batching="paged"`` spec hands the engine, derived
     from the same ``Model.kv_block_bytes`` layout admission charges.
+    ``kv_shared_frac`` stretches that capacity for prefix-shared workloads
+    (see :func:`paged_kv_capacity`) and is stamped on the points so the
+    live frontend can discount its admission charge by the same axis.
     """
-    kv_blocks = paged_kv_capacity(kv_budget_bytes, kv_block_bytes)
+    kv_blocks = paged_kv_capacity(kv_budget_bytes, kv_block_bytes,
+                                  kv_shared_frac)
     points: list[ProfilePoint] = []
     for sm in spatial:
         for quota in temporal:
@@ -274,5 +297,6 @@ def profile_points(
             points.append(ProfilePoint(sm=sm, quota=quota,
                                        throughput=cap.throughput,
                                        p99_latency=lat.p99,
-                                       kv_blocks=kv_blocks))
+                                       kv_blocks=kv_blocks,
+                                       kv_shared_frac=kv_shared_frac))
     return points

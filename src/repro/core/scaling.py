@@ -38,6 +38,19 @@ class ProfilePoint:
     # budget on every point of a table — it does not scale with (sm, quota).
     # 0 = not profiled / dense slot pool.
     kv_blocks: int = 0
+    # Shared-fraction axis: the profiled fraction of KV blocks expected to
+    # be prefix-shared duplicates at this point's workload (0 = unshared /
+    # not profiled).  ``paged_kv_capacity`` folds it into kv_blocks and the
+    # live frontend discounts its KV admission charge by it — honest
+    # over-admission backed by the engine's per-request worst-case
+    # reservation and validated by observed ``kv_bytes_saved``.
+    kv_shared_frac: float = 0.0
+
+    def __post_init__(self) -> None:
+        if not 0.0 <= self.kv_shared_frac < 1.0:
+            raise ValueError(
+                f"kv_shared_frac must be in [0, 1), got "
+                f"{self.kv_shared_frac}")
 
     @property
     def rpr(self) -> float:

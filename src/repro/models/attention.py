@@ -264,9 +264,14 @@ def paged_cache_write(pages: jax.Array, new: jax.Array,
     """Write one token's (B, 1, K, Dh) K/V into (N, bs, K, Dh) pages.
 
     Each sequence's row lands in physical block ``tables[b, pos[b]//bs]``
-    at offset ``pos[b] % bs``.  Live sequences own disjoint blocks, so the
-    scatter never collides; free decode slots all target the shared null
-    block, whose contents are never attended.
+    at offset ``pos[b] % bs``.  Live sequences own disjoint WRITABLE
+    blocks, so the scatter never collides; free decode slots all target
+    the shared null block, whose contents are never attended.  Under
+    prefix sharing the write contract is stricter: the block a sequence
+    writes must be exclusively owned (refcount 1) — the engine resolves
+    copy-on-write and asserts that before every dispatched round, so a
+    shared (refcount > 1) block is never named by a write-position row
+    of ``block_tables``.
 
     ``active`` ((B,) int32/bool, optional) drops inactive sequences' rows
     entirely (scatter ``mode="drop"`` on an out-of-range block index)

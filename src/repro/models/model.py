@@ -336,9 +336,15 @@ class Model:
 
         ``entry`` is a cache returned by ``prefill`` (dense layout,
         ``max_len`` rows, ``max_len % block_size == 0``); logical block i
-        of the entry lands in physical block ``block_row[i]``.  Rows past
-        the sequence's allocation are routed to the null block by the
-        row's padding and discarded.  jit-compatible: ``block_row`` may be
+        of the entry lands in physical block ``block_row[i]``.  Write
+        contract under prefix sharing: every written entry of
+        ``block_row`` must be an exclusively-owned (refcount-1) block —
+        the engine asserts this host-side before dispatch.  Row entries
+        set to the DROP SENTINEL (``n_blocks``, one past the pool — it
+        must stay positive, a negative index would be normalised back
+        onto a live block) suppress the write entirely via scatter
+        ``mode="drop"``: shared prefix blocks and padding rows are
+        skipped, never written.  jit-compatible: ``block_row`` may be
         traced, so admitting different requests reuses one executable.
         """
         out = dict(cache)
@@ -347,7 +353,19 @@ class Model:
             l, s = leaf.shape[:2]
             bs = pages.shape[2]
             blocks = leaf.reshape(l, s // bs, bs, *leaf.shape[2:])
-            out[key] = pages.at[:, block_row].set(blocks.astype(pages.dtype))
+            out[key] = pages.at[:, block_row].set(blocks.astype(pages.dtype),
+                                                  mode="drop")
+        return out
+
+    def copy_block(self, cache: Any, src: jax.Array, dst: jax.Array) -> Any:
+        """Copy one physical page across every KV leaf (copy-on-write
+        resolution): the sequence diverging from a shared prompt-tail
+        block gets a private copy before its first append lands.
+        jit-compatible with donated ``cache``; ``src``/``dst`` may be
+        traced so every COW reuses one executable."""
+        out = dict(cache)
+        for key, pages in cache.items():
+            out[key] = pages.at[:, dst].set(pages[:, src])
         return out
 
     def gather_pages(self, cache: Any, block_row: jax.Array,

@@ -2,8 +2,10 @@ from repro.serving.engine import (FunctionInstance, ServeRequest,
                                   ServingEngine)
 from repro.serving.frontend import ClusterFrontend, InstancePlacement
 from repro.serving.paging import (NULL_BLOCK, BlockExhausted,
-                                  KVPageAllocator, PageTable, blocks_needed)
+                                  KVPageAllocator, PageTable, blocks_needed,
+                                  prompt_digests)
 
 __all__ = ["ServingEngine", "FunctionInstance", "ServeRequest",
            "ClusterFrontend", "InstancePlacement", "KVPageAllocator",
-           "PageTable", "BlockExhausted", "NULL_BLOCK", "blocks_needed"]
+           "PageTable", "BlockExhausted", "NULL_BLOCK", "blocks_needed",
+           "prompt_digests"]

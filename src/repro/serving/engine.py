@@ -68,7 +68,7 @@ from repro.core.resources import Alloc
 from repro.core.slo import SLORecorder
 from repro.models.model import Model, default_kv_blocks
 from repro.serving.paging import (NULL_BLOCK, KVPageAllocator, PageTable,
-                                  blocks_needed)
+                                  blocks_needed, prompt_digests)
 
 
 def _bucket_len(n: int) -> int:
@@ -108,7 +108,8 @@ class FunctionInstance:
                  weights_key: str, alloc: Alloc, *, max_batch: int = 4,
                  max_len: int = 64, batching: str = "continuous",
                  prefill_buckets: bool = True, block_size: int = 16,
-                 n_kv_blocks: Optional[int] = None, fused: bool = True):
+                 n_kv_blocks: Optional[int] = None, fused: bool = True,
+                 prefix_sharing: bool = True):
         if batching not in ("continuous", "static", "paged"):
             raise ValueError(f"unknown batching mode {batching!r}")
         self.inst_id = inst_id
@@ -158,6 +159,11 @@ class FunctionInstance:
         self.active: list[ServeRequest] = []
         self.refills = 0  # mid-flight slot admissions (continuous only)
         self.last_fill = 0  # slots that did work in the latest step
+        # Prefix sharing (paged only): admission matches prompt-block
+        # digests against resident pages; divergence resolves by COW.
+        self.prefix_sharing = prefix_sharing and batching == "paged"
+        self.shared_block_hits = 0  # resident blocks mapped, not re-written
+        self.cow_count = 0          # divergent appends resolved by a copy
         # -- sync-free hot-path state (fused modes) -------------------------
         self.sync_count = 0  # host synchronisation points (telemetry)
         self.uploads = 0     # paged table/pos uploads (dirty-flag telemetry)
@@ -185,17 +191,19 @@ class FunctionInstance:
             n_blocks = (n_kv_blocks if n_kv_blocks is not None
                         else default_kv_blocks(max_batch, max_len,
                                                block_size))
-            self.allocator = KVPageAllocator(n_blocks, block_size)
+            self._block_bytes = model.kv_block_bytes(block_size)
+            self.allocator = KVPageAllocator(n_blocks, block_size,
+                                             block_bytes=self._block_bytes)
             self.pages = PageTable(self.allocator)
             self._tables = np.full((max_batch, self.blocks_per_seq),
                                    NULL_BLOCK, np.int32)
             self._pos = np.zeros((max_batch,), np.int32)
-            self._block_bytes = model.kv_block_bytes(block_size)
             self._decode_paged = jax.jit(model.decode_step_paged)
             self._decode_paged_tok = jax.jit(model.decode_step_paged_tokens,
                                              donate_argnums=(1, 2, 4))
             self._append = jax.jit(model.append_paged, donate_argnums=(0,))
-            self.kv_bytes_peak = 0
+            self._copy_block = jax.jit(model.copy_block,
+                                       donate_argnums=(0,))
             self._tables_dev: Optional[jax.Array] = None
             self._pos_dev: Optional[jax.Array] = None
             self._active_dev: Optional[jax.Array] = None
@@ -220,6 +228,25 @@ class FunctionInstance:
         """What the dense slot pool would reserve for this instance's
         capacity — the baseline the paged pool is measured against."""
         return self.model.dense_kv_bytes(self.max_batch, self.max_len)
+
+    @property
+    def kv_bytes_peak(self) -> int:
+        """Peak physical KV bytes.  Paged: the allocator's block
+        high-watermark times block bytes — updated at every allocation
+        instead of sampled once per dispatch (the old sampling could miss
+        a transient peak between steps), and consistent with refcounted
+        sharing: a block mapped by N sequences is one physical block,
+        charged once.  Dense modes report the slot-pool reservation."""
+        if self.batching != "paged":
+            return self.dense_kv_reserved() if self.cache is not None else 0
+        return self.allocator.bytes_high_watermark
+
+    def kv_bytes_saved(self) -> int:
+        """Bytes prefix sharing is saving right now vs the unshared paged
+        plane (extra references minus reserved COW spares, in bytes)."""
+        if self.batching != "paged":
+            return 0
+        return self.pages.bytes_saved(self._block_bytes)
 
     def has_work(self) -> bool:
         return bool(self.queue) or self.n_active() > 0
@@ -279,6 +306,68 @@ class FunctionInstance:
         row per decode round (the final token is emitted, never cached)."""
         return int(req.prompt.shape[0]) + req.max_new_tokens - 1
 
+    def _plan_paged_admission(self, req: ServeRequest
+                              ) -> tuple[int, tuple]:
+        """Blocks a paged admission must ALLOCATE for ``req``, plus its
+        prefix-sharing plan ``(full_digests, tail_digest, shared_full,
+        tail_block)``.
+
+        The charge is ``blocks_needed - matched full blocks``: a shared
+        full block costs nothing (it is resident and immutable), while a
+        shared prompt-tail block trades its block for a reserved COW
+        spare — memory-neutral, charged as one block either way.
+        """
+        total = blocks_needed(self._kv_rows_needed(req), self.block_size)
+        if not self.prefix_sharing:
+            return total, ([], None, [], None)
+        full, tail_digest = prompt_digests(req.prompt, self.block_size)
+        shared, tail_block = self.pages.match_prefix(full, tail_digest)
+        return total - len(shared), (full, tail_digest, shared, tail_block)
+
+    def _assert_writes_exclusive(self, append_row: np.ndarray) -> None:
+        """Host-side write contract of ``Model.append_paged`` /
+        ``paged_cache_write``: every block the scatter will actually
+        write must be exclusively owned (refcount 1) — shared blocks are
+        mapped read-only and must never be written."""
+        for b in append_row:
+            b = int(b)
+            if b == NULL_BLOCK or b >= self.allocator.n_blocks:
+                continue  # null page / drop sentinel: no live write
+            assert self.allocator.refcount(b) == 1, (
+                f"append would write block {b} with refcount "
+                f"{self.allocator.refcount(b)} (shared blocks are "
+                f"read-only)")
+
+    def _map_paged_request(self, slot: int, req: ServeRequest, entry: Any,
+                           plan: tuple) -> None:
+        """Bind a slot's pages (shared prefix + private rest), publish its
+        prompt digests, and scatter its prefill entry into the PRIVATE
+        blocks only: shared prefix rows are already resident, so their
+        entries go to the append drop sentinel and are never written."""
+        rows = self._kv_rows_needed(req)
+        full_digests, tail_digest, shared, tail_block = plan
+        shared_all = shared + ([tail_block] if tail_block is not None
+                               else [])
+        if shared_all:
+            self.pages.allocate_shared(slot, rows, shared_all,
+                                       tail_shared=tail_block is not None)
+            self.shared_block_hits += len(shared_all)
+        else:
+            self.pages.allocate(slot, rows)
+        if self.prefix_sharing:
+            self.pages.register_prefix(slot, full_digests, tail_digest)
+        row = self.pages.row(slot, self.blocks_per_seq)
+        self._tables[slot] = row
+        self._pos[slot] = int(req.prompt.shape[0])
+        self._state_dirty = True
+        append_row = np.asarray(row, np.int32).copy()
+        drop = self.allocator.n_blocks  # positive OOB -> scatter drops it
+        append_row[:len(shared_all)] = drop  # resident prefix: read-only
+        append_row[len(self.pages.blocks(slot)):] = drop  # padding rows
+        self._assert_writes_exclusive(append_row)
+        self.cache = self._append(self.cache, entry,
+                                  jnp.asarray(append_row))
+
     def _admit(self) -> list[ServeRequest]:
         """Chunked admission: prefill queued requests one at a time into
         free slots and merge their caches into the live decode batch.
@@ -304,10 +393,11 @@ class FunctionInstance:
             if self.slots[slot] is not None or not self.queue:
                 continue
             head = self.queue[0]
-            if paged and head.max_new_tokens > 1 and not self.allocator.can_alloc(
-                    blocks_needed(self._kv_rows_needed(head),
-                                  self.block_size)):
-                break  # head-of-line waits for retiring requests' blocks
+            plan = ([], None, [], None)
+            if paged and head.max_new_tokens > 1:
+                need, plan = self._plan_paged_admission(head)
+                if not self.allocator.can_alloc(need):
+                    break  # head-of-line waits for retiring blocks
             req = self.queue.popleft()
             logits, entry = self._prefill_one(req.prompt)
             tok_dev = self._greedy(logits)  # (1,) int32, stays on device
@@ -339,13 +429,7 @@ class FunctionInstance:
                 # within the instance and always released before reuse,
                 # whereas req_ids from different engines can collide when
                 # an evict re-routes queued requests across nodes.
-                self.pages.allocate(slot, self._kv_rows_needed(req))
-                row = self.pages.row(slot, self.blocks_per_seq)
-                self._tables[slot] = row
-                self._pos[slot] = int(req.prompt.shape[0])
-                self._state_dirty = True
-                self.cache = self._append(self.cache, entry,
-                                          jnp.asarray(row, jnp.int32))
+                self._map_paged_request(slot, req, entry, plan)
             else:
                 self.cache = self._merge(self.cache, entry, jnp.int32(slot))
             self.slots[slot] = req
@@ -399,6 +483,31 @@ class FunctionInstance:
         self._tables[slot] = NULL_BLOCK
         self._pos[slot] = 0
         self._state_dirty = True
+
+    def _cow_round(self) -> None:
+        """Resolve copy-on-write before a decode round's writes land.
+
+        Every occupied slot's next append position is checked against the
+        COW rule: a position inside a shared (refcount > 1) prompt-tail
+        block pops that block's reserved spare, copies the device page
+        (``Model.copy_block``), and re-points the slot's block table —
+        the first divergent append then writes the private copy.  The
+        closing assert is the host-side half of the paged write contract:
+        after this pass, no dispatched write can touch a shared block.
+        """
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            pos = int(self._pos[slot])
+            block, moved = self.pages.writable_block(slot, pos)
+            if moved is not None:
+                old, new = moved
+                self.cache = self._copy_block(self.cache, jnp.int32(old),
+                                              jnp.int32(new))
+                self._tables[slot][pos // self.block_size] = new
+                self._state_dirty = True
+                self.cow_count += 1
+            assert self.allocator.refcount(block) == 1
 
     def _decode_round_paged(self) -> list[ServeRequest]:
         """Host-side argmax reference round (``fused=False``)."""
@@ -465,11 +574,11 @@ class FunctionInstance:
             return True
         finished = self._admit()
         self.last_fill = self.n_active() + len(finished)
-        if self.batching == "paged":
-            # Sample while admitted requests hold their blocks (the decode
-            # round releases finishers immediately).
-            self.kv_bytes_peak = max(self.kv_bytes_peak,
-                                     self.kv_bytes_in_use())
+        if (self.batching == "paged" and self.prefix_sharing
+                and self.n_active() > 0):
+            # COW must resolve before this round's writes dispatch —
+            # both the fused round below and the host-argmax reference.
+            self._cow_round()
         if self.fused:
             if self.n_active() > 0:
                 self._dispatch_round()
@@ -560,15 +669,35 @@ class FunctionInstance:
         if paged:
             # Same worst-case reservation admission made on the source, so
             # the migrated request can never exhaust the pool mid-flight.
-            self.pages.allocate(slot, self._kv_rows_needed(req))
+            # Prefix sharing re-establishes across a migrated cohort: FULL
+            # prompt blocks match/register on the target (bit-identical —
+            # cohort members shared the same physical pages on the
+            # source), but the prompt-tail block stays private: the
+            # gathered entry already holds decode rows past the prompt at
+            # its tail offsets, which a later sharer must never see.
+            rows = self._kv_rows_needed(req)
+            full_digests: list = []
+            if self.prefix_sharing:
+                full_digests, _ = prompt_digests(req.prompt, self.block_size)
+            shared, _ = self.pages.match_prefix(full_digests, None)
+            if shared:
+                self.pages.allocate_shared(slot, rows, shared)
+                self.shared_block_hits += len(shared)
+            else:
+                self.pages.allocate(slot, rows)
+            if self.prefix_sharing:
+                self.pages.register_prefix(slot, full_digests, None)
             row = self.pages.row(slot, self.blocks_per_seq)
             self._tables[slot] = row
             self._pos[slot] = int(entry["pos"])
             self._state_dirty = True
+            append_row = np.asarray(row, np.int32).copy()
+            drop = self.allocator.n_blocks
+            append_row[:len(shared)] = drop  # resident prefix: read-only
+            append_row[len(self.pages.blocks(slot)):] = drop  # padding
+            self._assert_writes_exclusive(append_row)
             self.cache = self._append(self.cache, entry,
-                                      jnp.asarray(row, jnp.int32))
-            self.kv_bytes_peak = max(self.kv_bytes_peak,
-                                     self.kv_bytes_in_use())
+                                      jnp.asarray(append_row))
         else:
             self.cache = self._merge(self.cache, entry, jnp.int32(slot))
         self.slots[slot] = req
@@ -663,7 +792,8 @@ class ServingEngine:
                n_instances: int = 1, max_batch: int = 4, max_len: int = 64,
                batching: str = "continuous", prefill_buckets: bool = True,
                block_size: int = 16, n_kv_blocks: Optional[int] = None,
-               fused: bool = True) -> list[str]:
+               fused: bool = True, prefix_sharing: bool = True
+               ) -> list[str]:
         if not self.alive:
             raise RuntimeError("cannot deploy to a failed node")
         if fn not in self.recorders:
@@ -678,7 +808,8 @@ class ServingEngine:
                                     batching=batching,
                                     prefill_buckets=prefill_buckets,
                                     block_size=block_size,
-                                    n_kv_blocks=n_kv_blocks, fused=fused)
+                                    n_kv_blocks=n_kv_blocks, fused=fused,
+                                    prefix_sharing=prefix_sharing)
             self.instances[inst_id] = inst
             self.scheduler.register(inst_id, alloc)
             ids.append(inst_id)
@@ -869,6 +1000,10 @@ class ServingEngine:
         """What dense slot pools would reserve for the same capacity."""
         return sum(i.dense_kv_reserved() for i in self.instances.values())
 
+    def kv_bytes_saved(self) -> int:
+        """Bytes prefix sharing is saving across this node's instances."""
+        return sum(i.kv_bytes_saved() for i in self.instances.values())
+
     # -- hot-path telemetry -------------------------------------------------
 
     def sync_counts(self) -> dict[str, int]:
@@ -879,9 +1014,11 @@ class ServingEngine:
         return {k: v.sync_count for k, v in self.instances.items()}
 
     def telemetry(self) -> dict[str, dict[str, int]]:
-        """Hot-path counters per instance: steps, host syncs, and (paged)
+        """Hot-path counters per instance: steps, host syncs, (paged)
         device-state uploads — ``uploads << steps`` proves the block
-        tables/positions stay device-resident between admission events."""
+        tables/positions stay device-resident between admission events —
+        plus prefix-sharing hits and COW resolutions."""
         return {k: {"steps": v.steps, "syncs": v.sync_count,
-                    "uploads": v.uploads}
+                    "uploads": v.uploads, "shared_hits": v.shared_block_hits,
+                    "cow": v.cow_count}
                 for k, v in self.instances.items()}

@@ -120,7 +120,8 @@ class ClusterFrontend:
                        framework_bytes: int = DEFAULT_FRAMEWORK_BYTES,
                        block_size: int = 16,
                        n_kv_blocks: Optional[int] = None,
-                       fused: bool = True) -> Optional[str]:
+                       fused: bool = True, prefix_sharing: bool = True,
+                       kv_shared_frac: float = 0.0) -> Optional[str]:
         """Place ONE instance via MRA + memory admission with spillover.
 
         Returns a ``node:inst_id`` handle, or None when no node has both a
@@ -133,10 +134,30 @@ class ClusterFrontend:
         instance, the dense ``max_batch x max_len`` slot pool otherwise —
         so a paged deployment with a tight block budget admits more
         replicas per node than its dense equivalent.
+
+        ``kv_shared_frac`` is the shared-fraction admission axis: the
+        declared fraction of KV blocks expected to be prefix-shared
+        duplicates of resident blocks (profiled, or observed via
+        ``kv_shared_fraction``).  The KV charge is discounted to
+        ``(1 - frac)`` of the physical pool — honest over-admission, in
+        HAS-GPU's sense of charging what is actually used: the engine
+        enforces the worst case per request at block granularity, and the
+        observed ``kv_bytes_saved`` telemetry validates the declared
+        fraction.  ``prefix_sharing=False`` deploys the unshared
+        reference plane (and such a function must declare frac 0).
         """
-        kv_bytes = model.kv_cache_bytes(
+        if not 0.0 <= kv_shared_frac < 1.0:
+            raise ValueError(
+                f"kv_shared_frac must be in [0, 1), got {kv_shared_frac}")
+        if kv_shared_frac > 0.0 and (batching != "paged"
+                                     or not prefix_sharing):
+            raise ValueError(
+                "kv_shared_frac needs batching='paged' with prefix "
+                "sharing enabled — nothing else can share KV blocks")
+        kv_bytes = int(model.kv_cache_bytes(
             batching=batching, max_batch=max_batch, max_len=max_len,
             block_size=block_size, n_kv_blocks=n_kv_blocks)
+            * (1.0 - kv_shared_frac))
         created_mm = fn not in self._fn_mm
         mm = self._fn_mm.setdefault(
             fn, MemoryModel(weight_bytes=pytree_nbytes(params),
@@ -173,7 +194,7 @@ class ClusterFrontend:
                 fn, model, params, alloc, n_instances=1,
                 max_batch=max_batch, max_len=max_len, batching=batching,
                 block_size=block_size, n_kv_blocks=n_kv_blocks,
-                fused=fused)[0]
+                fused=fused, prefix_sharing=prefix_sharing)[0]
         except Exception:
             # The rectangle was reserved before the engine ran; a failed
             # deploy must not leak it (or a provisional memory-model entry).
@@ -198,7 +219,8 @@ class ClusterFrontend:
                framework_bytes: int = DEFAULT_FRAMEWORK_BYTES,
                block_size: int = 16,
                n_kv_blocks: Optional[int] = None,
-               fused: bool = True) -> list[str]:
+               fused: bool = True, prefix_sharing: bool = True,
+               kv_shared_frac: float = 0.0) -> list[str]:
         """Place ``n_instances`` of ``fn`` across the fleet via MRA +
         memory admission; returns ``node:inst_id`` handles."""
         handles = []
@@ -207,7 +229,9 @@ class ClusterFrontend:
                 fn, model, params, alloc, max_batch=max_batch,
                 max_len=max_len, batching=batching,
                 framework_bytes=framework_bytes,
-                block_size=block_size, n_kv_blocks=n_kv_blocks, fused=fused)
+                block_size=block_size, n_kv_blocks=n_kv_blocks, fused=fused,
+                prefix_sharing=prefix_sharing,
+                kv_shared_frac=kv_shared_frac)
             if handle is None:
                 raise RuntimeError(
                     f"no node can host {fn} at alloc {alloc} "
@@ -391,7 +415,11 @@ class ClusterFrontend:
         slot of the target (``merge_slot`` / page re-append), queued
         requests re-route, and only then does the source close and release
         its rectangle.  Remaining decode rounds produce bit-identical
-        tokens.  Returns the new ``node:inst_id`` handle, or None when the
+        tokens.  Prefix sharing re-establishes on the target as the slots
+        import: the first cohort member to land registers its full prompt
+        blocks, later members map them read-only instead of re-writing
+        them (``import_slot``).  Returns the new ``node:inst_id`` handle,
+        or None when the
         instance cannot move (static batch, retired, target full or dead).
         """
         node_s, inst_id = handle.split(":", 1)
@@ -426,7 +454,8 @@ class ClusterFrontend:
                 block_size=getattr(inst, "block_size", 16),
                 n_kv_blocks=(inst.allocator.n_blocks
                              if inst.batching == "paged" else None),
-                fused=inst.fused)[0]
+                fused=inst.fused,
+                prefix_sharing=inst.prefix_sharing)[0]
         except Exception:
             self.pool.release(placement)
             inst.paused = False
@@ -497,6 +526,18 @@ class ClusterFrontend:
     def dense_kv_reserved(self) -> int:
         """Dense slot-pool reservation for the fleet's current capacity."""
         return sum(e.dense_kv_reserved() for e in self.engines)
+
+    def kv_bytes_saved(self) -> int:
+        """Bytes prefix sharing is saving fleet-wide right now (extra
+        block references minus reserved COW spares, in bytes)."""
+        return sum(e.kv_bytes_saved() for e in self.engines)
+
+    def kv_shared_fraction(self) -> float:
+        """Observed shared fraction: saved / (in_use + saved) — the honest
+        value to feed back into ``kv_shared_frac`` / profile tables."""
+        saved = self.kv_bytes_saved()
+        live = self.kv_bytes_in_use()
+        return saved / (saved + live) if saved + live > 0 else 0.0
 
     def recorder(self, fn: str):
         """Merged view is unnecessary: latency records live per node."""

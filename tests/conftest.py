@@ -14,6 +14,12 @@ Two jobs:
 * **Tiny model fixtures** — deterministic, CPU-cheap model configs
   (vocab 64, d_model 32) used by tier-1 serving/engine tests so one jit
   compile costs milliseconds, not minutes.
+* **One seed to replay them all** — ``--repro-seed N`` (default 0) feeds
+  every random source the suite owns: the shim's per-example draws, the
+  real hypothesis profile (registered derandomized, so failures replay
+  without a database), and the ``repro_rng`` fixture that seeds the
+  random workload generators.  A tier-1 failure reproduces with the same
+  ``--repro-seed`` it failed under.
 """
 
 from __future__ import annotations
@@ -94,7 +100,9 @@ def _install_hypothesis_shim() -> None:
         return builder
 
     def _seed(name: str, example: int) -> int:
-        return zlib.crc32(f"{name}:{example}".encode())
+        # REPRO_SEED is the module global set by --repro-seed; read at
+        # call time so the option (parsed after this shim installs) wins.
+        return zlib.crc32(f"{REPRO_SEED}:{name}:{example}".encode())
 
     def given(*strategies, **kw_strategies):
         def deco(fn):
@@ -171,6 +179,50 @@ try:  # pragma: no cover - depends on container contents
     import hypothesis  # noqa: F401
 except ModuleNotFoundError:
     _install_hypothesis_shim()
+
+
+# --------------------------------------------------------------------------
+# One seed for every random source (--repro-seed)
+# --------------------------------------------------------------------------
+
+REPRO_SEED = 0
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--repro-seed", action="store", type=int, default=0,
+        help="Seed for the hypothesis shim, hypothesis profile, and the "
+             "repro_rng workload-generator fixture (deterministic replay)")
+
+
+def pytest_configure(config):
+    global REPRO_SEED
+    REPRO_SEED = int(config.getoption("--repro-seed"))
+    hyp = sys.modules.get("hypothesis")
+    if hyp is not None and not getattr(hyp, "__is_repro_shim__", False):
+        # Real hypothesis: pin a derandomized profile so tier-1 runs are
+        # reproducible without an example database; the seed feeds the
+        # shim and repro_rng (hypothesis derives its own from the test).
+        hyp.settings.register_profile(
+            "repro", hyp.settings(derandomize=True, print_blob=True))
+        hyp.settings.load_profile("repro")
+
+
+@pytest.fixture
+def repro_seed(request) -> int:
+    """The suite-wide ``--repro-seed`` value."""
+    return REPRO_SEED
+
+
+@pytest.fixture
+def repro_rng(request):
+    """Per-test numpy Generator derived from ``--repro-seed`` and the
+    test's node id — every random workload generator seeds from this so
+    one command-line flag replays a failure exactly."""
+    import numpy as np
+
+    return np.random.default_rng(
+        zlib.crc32(f"{REPRO_SEED}:{request.node.nodeid}".encode()))
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,342 @@
+"""Property-based fuzz of the refcounted prefix-sharing KV page plane.
+
+Each property drives a random interleaving of the operations the engine
+performs on ``KVPageAllocator`` + ``PageTable`` — admit (with content-hash
+prefix matching and tail COW-spare reservation), decode append (through
+``writable_block``, the single COW enforcement point), release, migrate
+(import-then-release with full-block re-sharing, mirroring
+``import_slot``), and defrag — against a pure-python mirror of what the
+device would hold: per-block token contents and per-sequence token
+histories.  The invariants checked after EVERY operation:
+
+* a block's refcount equals the number of page-table rows mapping it
+  (COW spares are refcount-1 blocks mapped by no row, tracked apart);
+* ``blocks_in_use + free == capacity`` — no block is ever both live and
+  free, none vanishes;
+* while a mutable tail block is shared, ``spares[b]`` holds exactly
+  ``refcount(b) - 1`` reserved blocks;
+* the content registry only names live blocks;
+* every sequence's tokens reconstruct bit-identically from its mapped
+  blocks (shared blocks are never mutated — a divergent write would
+  corrupt another sequence's history and fail this check).
+
+Separate properties pin the failure modes: double/foreign frees are
+rejected atomically (no partial state change), and a write aimed at a
+refcount>1 block without a reserved spare raises instead of corrupting.
+
+Runs under real hypothesis or the deterministic conftest shim; either
+way ``--repro-seed`` replays a failing interleaving exactly.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serving.paging import (NULL_BLOCK, BlockExhausted,
+                                  KVPageAllocator, PageTable, blocks_needed,
+                                  prompt_digests)
+
+BS = 4          # small blocks so partial tails and multi-block prompts
+BYTES = 64      # are both common in short random prompts
+
+# Three prompt families over a tiny alphabet: random prompts are prefixes
+# of these (plus an optional unique suffix token), so independent draws
+# collide often enough to exercise full-block AND exact-prompt sharing.
+BASE = (tuple([1] * 16), tuple([2] * 16), tuple(range(16)))
+
+
+class Driver:
+    """Engine-shaped harness over one allocator + page table.
+
+    Mirrors device state in ``content`` (block -> offset -> token) and
+    request state in ``model`` (seq -> prompt/tokens/budget), applying
+    the same admission, write, and migration rules as
+    ``FunctionInstance`` so the bookkeeping invariants are tested under
+    realistic interleavings.
+    """
+
+    def __init__(self, n_blocks: int):
+        self.alloc = KVPageAllocator(n_blocks, BS, block_bytes=BYTES)
+        self.pt = PageTable(self.alloc)
+        self.content: dict[int, dict[int, int]] = {}
+        self.model: dict[int, dict] = {}
+        self.next_id = 0
+
+    # -- operations ---------------------------------------------------------
+
+    def admit(self, prompt, max_new: int):
+        rows = len(prompt) + max_new
+        full, tail = prompt_digests(prompt, BS)
+        shared, tail_block = self.pt.match_prefix(full, tail)
+        tail_shared = tail_block is not None
+        shared_all = shared + ([tail_block] if tail_shared else [])
+        before = (self.alloc.blocks_in_use, self.alloc.free_blocks())
+        try:
+            self.pt.allocate_shared(self.next_id, rows, shared_all,
+                                    tail_shared=tail_shared)
+        except BlockExhausted:
+            # a rejected admission must not have touched the pool
+            assert (self.alloc.blocks_in_use,
+                    self.alloc.free_blocks()) == before
+            return None
+        seq = self.next_id
+        self.next_id += 1
+        self.pt.register_prefix(seq, full, tail)
+        row = self.pt.blocks(seq)
+        for b in row[len(shared_all):]:     # fresh private blocks: stale
+            self.content[b] = {}            # reuse must not leak old rows
+        n_shared_rows = len(prompt) if tail_shared else len(shared) * BS
+        for pos, tok in enumerate(prompt):
+            b = row[pos // BS]
+            if pos < n_shared_rows:
+                # drop-sentinel semantics: shared rows are never written;
+                # the resident content must already be bit-identical
+                assert self.content[b][pos % BS] == tok
+            else:
+                self.content[b][pos % BS] = tok
+        self.model[seq] = dict(prompt=list(prompt), tokens=list(prompt),
+                               budget=max_new, rows=rows)
+        return seq
+
+    def decode(self, seq: int) -> None:
+        m = self.model[seq]
+        if m["budget"] == 0:
+            return
+        pos = len(m["tokens"])
+        tok = (pos * 7 + seq) % 64
+        block, move = self.pt.writable_block(seq, pos)
+        assert self.alloc.refcount(block) == 1, \
+            "writable_block handed out a still-shared block"
+        if move is not None:
+            old, new = move
+            assert new == block
+            self.content[new] = dict(self.content.get(old, {}))
+        self.content.setdefault(block, {})[pos % BS] = tok
+        m["tokens"].append(tok)
+        m["budget"] -= 1
+
+    def release(self, seq: int) -> None:
+        self.pt.release(seq)
+        del self.model[seq]
+
+    def migrate(self, seq: int):
+        """Import-then-release, like a live KV move: the target maps the
+        source's FULL prompt blocks (tail holds decode rows in the
+        gathered entry, so it stays private) and rewrites the rest."""
+        m = self.model[seq]
+        full, _ = prompt_digests(m["prompt"], BS)
+        shared, _ = self.pt.match_prefix(full, None)
+        try:
+            self.pt.allocate_shared(self.next_id, m["rows"], shared)
+        except BlockExhausted:
+            return None                       # no room to land the import
+        new_seq = self.next_id
+        self.next_id += 1
+        self.pt.register_prefix(new_seq, full, None)
+        row = self.pt.blocks(new_seq)
+        for b in row[len(shared):]:
+            self.content[b] = {}
+        n_shared_rows = len(shared) * BS
+        for pos, tok in enumerate(m["tokens"]):
+            b = row[pos // BS]
+            if pos < n_shared_rows:
+                assert self.content[b][pos % BS] == tok
+            else:
+                self.content[b][pos % BS] = tok
+        self.model[new_seq] = dict(prompt=list(m["prompt"]),
+                                   tokens=list(m["tokens"]),
+                                   budget=m["budget"], rows=m["rows"])
+        self.release(seq)                     # source side drops its refs
+        return new_seq
+
+    # -- invariants ---------------------------------------------------------
+
+    def check_refcounts(self) -> None:
+        counts: Counter[int] = Counter()
+        for row in self.pt.seqs.values():
+            for b in row:
+                counts[b] += 1
+        spare_blocks = [b for lst in self.pt.spares.values() for b in lst]
+        assert len(spare_blocks) == len(set(spare_blocks))
+        for b in spare_blocks:
+            # a reserved spare is allocated, exclusive, and mapped nowhere
+            assert self.alloc.refcount(b) == 1 and counts[b] == 0
+        for b, r in list(self.alloc._ref.items()):
+            expect = 1 if b in spare_blocks else counts[b]
+            assert r == expect, (
+                f"block {b}: refcount {r} != {expect} page-table rows")
+        for b, lst in self.pt.spares.items():
+            assert len(lst) == self.alloc.refcount(b) - 1, (
+                f"tail block {b}: {len(lst)} spares for refcount "
+                f"{self.alloc.refcount(b)}")
+        assert (self.alloc.blocks_in_use + self.alloc.free_blocks()
+                == self.alloc.capacity)
+        free = self.alloc._free
+        assert len(free) == len(set(free)) and NULL_BLOCK not in free
+        for b in self.alloc._digest_to_block.values():
+            assert self.alloc.refcount(b) > 0
+        assert self.pt.saved_blocks() >= 0
+
+    def check_tokens(self) -> None:
+        for seq, m in self.model.items():
+            row = self.pt.blocks(seq)
+            got = [self.content[row[p // BS]].get(p % BS)
+                   for p in range(len(m["tokens"]))]
+            assert got == m["tokens"], (
+                f"seq {seq} history diverged (a shared block was mutated)")
+
+
+def _prompt(a: int, b: int):
+    fam = BASE[a % len(BASE)]
+    prompt = list(fam[:1 + b % 8])
+    if a % 2:
+        prompt.append(32 + a % 8)             # unique-ish divergent suffix
+    return prompt
+
+
+def _run(n_blocks: int, ops, *, check_each: bool = True) -> Driver:
+    d = Driver(n_blocks)
+    for kind, a, b in ops:
+        live = sorted(d.model)
+        if kind in (0, 1):                    # admit (double weight)
+            d.admit(_prompt(a, b), max_new=1 + a % 4)
+        elif kind == 2 and live:
+            d.decode(live[a % len(live)])
+        elif kind == 3 and live:
+            d.release(live[a % len(live)])
+        elif kind == 4 and live:
+            d.migrate(live[a % len(live)])
+        elif kind == 5:
+            d.alloc.defrag()
+        if check_each:
+            d.check_refcounts()
+            d.check_tokens()
+    return d
+
+
+ops_st = st.lists(st.tuples(st.integers(0, 5), st.integers(0, 31),
+                            st.integers(0, 31)),
+                  min_size=1, max_size=40)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(8, 28), ops_st)
+def test_refcount_equals_mapping_rows(n_blocks, ops):
+    """After every op: refcount == rows mapping the block, spares are
+    exclusive and rowless, pool conservation holds."""
+    _run(n_blocks, ops)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(8, 28), ops_st)
+def test_no_leaks_at_quiesce(n_blocks, ops):
+    """Releasing every live sequence returns the pool to pristine: zero
+    blocks in use, full free list, empty registry, no orphaned spares."""
+    d = _run(n_blocks, ops, check_each=False)
+    d.check_refcounts()
+    for seq in sorted(d.model):
+        d.release(seq)
+    assert d.alloc.blocks_in_use == 0
+    assert d.alloc.free_blocks() == d.alloc.capacity
+    assert set(d.alloc._free) == set(range(1, n_blocks))
+    assert d.alloc.registered_blocks == 0
+    assert d.pt.n_spares == 0 and not d.pt.spares
+    assert d.alloc.bytes_in_use == 0
+    # alloc/free ledger balances: every physical alloc was physically freed
+    assert d.alloc.n_allocs == d.alloc.n_frees
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(8, 28), ops_st, st.integers(0, 31))
+def test_double_free_rejected_atomically(n_blocks, ops, pick):
+    """Freeing a dead block, a foreign block, or the same block twice in
+    one call raises — and a rejected free changes nothing."""
+    d = _run(n_blocks, ops, check_each=False)
+    snap = (dict(d.alloc._ref), list(d.alloc._free), d.alloc.n_frees)
+
+    def unchanged():
+        return (dict(d.alloc._ref), list(d.alloc._free),
+                d.alloc.n_frees) == snap
+
+    with pytest.raises(ValueError):
+        d.alloc.free([NULL_BLOCK])            # never allocatable
+    assert unchanged()
+    if d.model:
+        seq = sorted(d.model)[pick % len(d.model)]
+        row = list(d.pt.blocks(seq))
+        b = row[pick % len(row)]
+        with pytest.raises(ValueError):
+            d.alloc.free([b, b])              # duplicate within one call
+        assert unchanged()
+        d.release(seq)
+        if d.alloc.refcount(b) == 0:          # physically freed: dead now
+            with pytest.raises(ValueError):
+                d.alloc.free([b])
+    d.check_refcounts()
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(1, 12), st.integers(1, 4), st.booleans())
+def test_shared_block_write_impossible(plen, max_new, exact):
+    """A write aimed at a refcount>1 block either COW-resolves through a
+    reserved spare (exact-prompt tail share) or raises (full shared block
+    / no spare) — it can never land in shared memory."""
+    d = Driver(32)
+    prompt = list(BASE[2][:plen])
+    s1 = d.admit(prompt, max_new)
+    p2 = list(prompt) if exact else prompt + [40]
+    s2 = d.admit(p2, max_new)
+    row2 = d.pt.blocks(s2)
+    shared = [b for b in row2 if d.alloc.refcount(b) > 1]
+    for b in shared:
+        pos = row2.index(b) * BS
+        if b in d.pt.spares:
+            continue                          # tail share: COW path below
+        with pytest.raises(RuntimeError):
+            d.pt.writable_block(s2, pos)
+        assert d.alloc.refcount(b) > 1        # refused, nothing changed
+    # exact-match tail share: the divergent append must COW, not corrupt
+    if exact and plen % BS:
+        t1_before = list(d.model[s1]["tokens"])
+        for _ in range(max_new):
+            d.decode(s2)
+        assert d.model[s1]["tokens"] == t1_before
+        d.check_tokens()
+    d.check_refcounts()
+    # an artificially shared block with NO spare must refuse the write
+    s3 = d.admit([50, 51, 52, 53, 54], 1)
+    b3 = d.pt.blocks(s3)[0]
+    d.alloc.incref(b3)
+    with pytest.raises(RuntimeError):
+        d.pt.writable_block(s3, 0)
+    d.alloc.free([b3])                        # drop the artificial ref
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(8, 28), ops_st)
+def test_histories_reconstruct_bit_identically(n_blocks, ops):
+    """Every live sequence's token history reconstructs exactly from its
+    mapped blocks after every op — shared blocks are never mutated, COW
+    copies preserve content, migration re-lands every row."""
+    d = _run(n_blocks, ops)                   # check_tokens runs per-op
+    d.check_tokens()
+
+
+def test_saved_blocks_accounting():
+    """Sharing telemetry: extra_refs minus reserved spares, bytes forms
+    consistent with block forms at the configured block_bytes."""
+    d = Driver(32)
+    prompt = list(BASE[0][:10])               # 2 full blocks + tail of 2
+    d.admit(prompt, 2)
+    d.admit(list(prompt), 2)                  # exact match: 2 full + tail
+    # 3 extra refs (2 full + tail), 1 spare reserved -> 2 blocks saved
+    assert d.alloc.extra_refs == 3
+    assert d.pt.n_spares == 1
+    assert d.pt.saved_blocks() == 2
+    assert d.pt.bytes_saved(BYTES) == 2 * BYTES
+    assert d.pt.bytes_in_use(BYTES) == d.alloc.blocks_in_use * BYTES
+    assert d.alloc.stats()["extra_refs"] == 3

@@ -1,0 +1,321 @@
+"""Prefix sharing end to end: token equivalence, lifecycle seams, stats.
+
+The sharing plane's correctness bar is *bit-identity*: with content-hash
+prefix matching and COW on, every request must emit exactly the tokens
+the unshared paged plane and the static reference batcher emit — per
+model family (dense, MoE, int8-quantized KV), across mid-stream live
+migration, and through retire-drain of one sharer.  The accounting bar:
+``kv_bytes_peak`` charges a shared block once (allocator high-watermark
+in bytes, updated at every allocation, not sampled per dispatch), and
+the shared-fraction axis threads from ``FunctionSpec`` / ``ProfilePoint``
+through ``paged_kv_capacity`` into frontend memory admission.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny_config
+from repro.core.resources import Alloc
+from repro.models import build_model
+from repro.serving import ClusterFrontend, ServingEngine
+
+FULL = Alloc(sm=1.0, quota_request=0.9, quota_limit=0.9)
+HALF = Alloc(sm=0.4, quota_request=0.4, quota_limit=0.5)
+MOE_KW = dict(name="tiny-moe", family="moe", n_experts=4, top_k=2)
+
+
+def _shared_arrivals(n=4, prefix_len=12, suffix_len=4, seed=0, vocab=64,
+                     max_new=(2, 6, 4, 5), rng=None):
+    """n prompts sharing one prefix, each with a unique suffix and its own
+    decode budget (staggered finishes exercise release-while-shared).
+    Pass the ``repro_rng`` fixture as ``rng`` to put the workload under
+    the suite-wide ``--repro-seed``."""
+    rng = np.random.default_rng(seed) if rng is None else rng
+    prefix = rng.integers(0, vocab, prefix_len, dtype=np.int32)
+    return [(np.concatenate(
+        [prefix, rng.integers(0, vocab, suffix_len, dtype=np.int32)]),
+        max_new[i % len(max_new)]) for i in range(n)]
+
+
+def _serve(model, params, batching, arrivals, *, prefix_sharing=True,
+           max_batch=2, max_len=32, block_size=8):
+    engine = ServingEngine(window=0.1)
+    engine.deploy("f", model, params, FULL, max_batch=max_batch,
+                  max_len=max_len, batching=batching, block_size=block_size,
+                  prefix_sharing=prefix_sharing)
+    reqs = [engine.submit("f", p, max_new_tokens=n) for p, n in arrivals]
+    done = engine.pump(budget_s=120.0)
+    assert done == len(reqs)
+    inst = next(iter(engine.instances.values()))
+    inst._engine_telemetry = next(iter(engine.telemetry().values()))
+    return reqs, inst
+
+
+# -- differential token equivalence, per family ----------------------------
+
+
+@pytest.mark.parametrize("family", ["dense", "moe", "kv-int8"])
+def test_shared_tokens_bit_identical_across_planes(family, monkeypatch,
+                                                   repro_rng):
+    """Shared-paged == unshared-paged == static token streams, exactly,
+    while sharing actually engages and shrinks the physical peak.  The
+    workload draws from ``repro_rng``: equivalence must hold for ANY
+    prompt mix, so ``--repro-seed`` varies it (and replays failures)."""
+    if family == "kv-int8":
+        monkeypatch.setenv("REPRO_KV_INT8", "1")
+        cfg = tiny_config()
+    else:
+        monkeypatch.delenv("REPRO_KV_INT8", raising=False)
+        cfg = tiny_config(**(MOE_KW if family == "moe" else {}))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    arrivals = _shared_arrivals(rng=repro_rng)
+
+    shared, inst_s = _serve(model, params, "paged", arrivals)
+    unshared, inst_u = _serve(model, params, "paged", arrivals,
+                              prefix_sharing=False)
+    static, _ = _serve(model, params, "static", arrivals)
+
+    toks = [r.tokens_out for r in shared]
+    assert toks == [r.tokens_out for r in unshared]
+    assert toks == [r.tokens_out for r in static]
+    assert inst_s.shared_block_hits > 0, "trace must actually share"
+    assert inst_u.shared_block_hits == 0
+    assert inst_s.allocator.high_watermark < inst_u.allocator.high_watermark
+    # staggered finishes released sharers mid-flight; nothing leaked
+    assert inst_s.allocator.blocks_in_use == 0
+    assert inst_s.pages.n_spares == 0
+
+
+def test_exact_prompt_share_cow_resolves(tiny_model, tiny_params):
+    """Bit-identical prompts share the partial tail block too; the first
+    divergent decode append COWs through the reserved spare."""
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, 64, 20, dtype=np.int32)  # 2 full + tail of 4
+    arrivals = [(prompt.copy(), 4) for _ in range(3)]
+    shared, inst_s = _serve(tiny_model, tiny_params, "paged", arrivals,
+                            max_batch=4)
+    unshared, _ = _serve(tiny_model, tiny_params, "paged", arrivals,
+                         max_batch=4, prefix_sharing=False)
+    assert ([r.tokens_out for r in shared]
+            == [r.tokens_out for r in unshared])
+    assert inst_s.cow_count > 0, "tail share must COW on divergence"
+    assert inst_s.allocator.blocks_in_use == 0
+    assert inst_s.pages.n_spares == 0
+
+
+# -- lifecycle seams: migration and retire-drain ---------------------------
+
+
+def test_sharing_survives_midstream_migration(tiny_model, tiny_params):
+    """Live-migrating sharers re-establishes sharing on the target (first
+    import registers its full prompt blocks, later imports match them)
+    with token streams identical to the unshared fleet's."""
+    arrivals = _shared_arrivals(n=3, prefix_len=16, suffix_len=2,
+                                max_new=(8,), seed=4)
+
+    def run(prefix_sharing):
+        fe = ClusterFrontend(n_nodes=2, window=0.1)
+        [h0] = fe.deploy("f", tiny_model, tiny_params, HALF, max_batch=2,
+                         max_len=32, batching="paged", block_size=8,
+                         prefix_sharing=prefix_sharing)
+        reqs = [fe.submit("f", p, max_new_tokens=n) for p, n in arrivals]
+        fe.pump(budget_s=0.05)  # some slots mid-decode
+        src = fe.engines[0].instances
+        assert src and any(i.n_active() > 0 for i in src.values())
+        assert fe.migrate("f", h0, tiny_model, tiny_params,
+                          target=1) is not None
+        tgt = next(iter(fe.engines[1].instances.values()))
+        done = fe.pump(budget_s=120.0)
+        assert done == len(reqs) and all(r.done for r in reqs)
+        assert fe.kv_bytes_in_use() == 0
+        return [r.tokens_out for r in reqs], tgt
+
+    shared_toks, tgt = run(True)
+    unshared_toks, _ = run(False)
+    assert shared_toks == unshared_toks
+    # sharing re-engaged on the target: imported or re-admitted sharers
+    # took extra references on resident prompt blocks
+    assert tgt.allocator.n_increfs > 0
+
+
+def test_retire_drain_of_sharers_releases_cleanly(tiny_model, tiny_params):
+    """Retiring the instance mid-flight drains sharers to completion with
+    unshared-identical tokens; refcounts and COW spares all unwind."""
+    arrivals = _shared_arrivals(n=4, prefix_len=16, suffix_len=2,
+                                max_new=(6, 6, 3, 4), seed=7)
+    reference, _ = _serve(tiny_model, tiny_params, "paged", arrivals,
+                          prefix_sharing=False)
+
+    engine = ServingEngine(window=0.1)
+    [iid] = engine.deploy("f", tiny_model, tiny_params, FULL, max_batch=2,
+                          max_len=32, batching="paged", block_size=8)
+    reqs = [engine.submit("f", p, max_new_tokens=n) for p, n in arrivals]
+    engine.pump(budget_s=0.05)
+    inst = engine.instances[iid]
+    alloc_ref, pages_ref = inst.allocator, inst.pages
+    assert alloc_ref.blocks_in_use > 0, "test needs live paged slots"
+    strays = engine.retire(iid, strip_queue=True)
+    engine.pump(budget_s=120.0)
+    assert iid not in engine.instances, "drained instance must close"
+    assert alloc_ref.blocks_in_use == 0, "retire leaked shared KV blocks"
+    assert pages_ref.n_spares == 0, "retire leaked COW spares"
+    assert alloc_ref.registered_blocks == 0
+    for r, ref in zip(reqs, reference):
+        if r not in strays:
+            assert r.done and r.tokens_out == ref.tokens_out
+
+
+# -- stats: bytes-denominated, sharing-consistent (satellite fix) ----------
+
+
+def test_kv_bytes_peak_charges_shared_blocks_once(tiny_model, tiny_params):
+    """``kv_bytes_peak`` is the allocator's byte high-watermark: shared
+    blocks count once, the peak survives the drain (every-alloc update,
+    not per-dispatch sampling), and the stats dict reports blocks AND
+    bytes consistently."""
+    arrivals = _shared_arrivals(n=4, prefix_len=16, suffix_len=2,
+                                max_new=(4,), seed=2)
+    _, inst_s = _serve(tiny_model, tiny_params, "paged", arrivals,
+                       max_batch=4)
+    _, inst_u = _serve(tiny_model, tiny_params, "paged", arrivals,
+                       max_batch=4, prefix_sharing=False)
+    bb = tiny_model.kv_block_bytes(8)
+    for inst in (inst_s, inst_u):
+        stats = inst.allocator.stats()
+        assert inst.kv_bytes_peak == inst.allocator.bytes_high_watermark
+        assert stats["bytes_high_watermark"] == stats["high_watermark"] * bb
+        assert stats["bytes_in_use"] == 0, "drained pool still charged"
+        assert inst.kv_bytes_peak > 0, "peak must survive the drain"
+    assert inst_s.kv_bytes_peak < inst_u.kv_bytes_peak, \
+        "sharing must shrink the physical byte peak"
+    assert inst_s._engine_telemetry["shared_hits"] == inst_s.shared_block_hits
+    assert inst_s._engine_telemetry["cow"] == inst_s.cow_count
+
+
+def test_frontend_reports_live_shared_fraction(tiny_model, tiny_params):
+    """Fleet-wide sharing telemetry mid-flight: bytes saved > 0 and the
+    observed shared fraction sits in (0, 1); both return to zero after
+    the drain."""
+    arrivals = _shared_arrivals(n=4, prefix_len=16, suffix_len=2,
+                                max_new=(8,), seed=3)
+    fe = ClusterFrontend(n_nodes=1, window=0.1)
+    fe.deploy("f", tiny_model, tiny_params, FULL, max_batch=4, max_len=32,
+              batching="paged", block_size=8)
+    reqs = [fe.submit("f", p, max_new_tokens=n) for p, n in arrivals]
+    fe.pump(budget_s=0.05)
+    assert fe.kv_bytes_saved() > 0
+    assert 0.0 < fe.kv_shared_fraction() < 1.0
+    done = fe.pump(budget_s=120.0)
+    assert done == len(reqs) and all(r.done for r in reqs)
+    assert fe.kv_bytes_saved() == 0 and fe.kv_shared_fraction() == 0.0
+
+
+# -- shared-fraction admission axis (spec -> profiler -> frontend) ---------
+
+
+def test_paged_kv_capacity_shared_fraction_axis(tiny_model):
+    from repro.core.profiler import paged_kv_capacity
+
+    bb = tiny_model.kv_block_bytes(8)
+    assert paged_kv_capacity(10 * bb, bb) == 10
+    # a 0.5 shared fraction stretches the same byte budget to 2x blocks
+    assert paged_kv_capacity(10 * bb, bb, shared_frac=0.5) == 20
+    with pytest.raises(ValueError, match="shared_frac"):
+        paged_kv_capacity(10 * bb, bb, shared_frac=1.0)
+    with pytest.raises(ValueError, match="shared_frac"):
+        paged_kv_capacity(10 * bb, bb, shared_frac=-0.1)
+
+
+def test_shared_frac_validation_on_spec_and_point():
+    from repro.control.spec import FunctionSpec
+    from repro.core.scaling import ProfilePoint
+
+    point = ProfilePoint(sm=0.3, quota=0.3, throughput=1.0,
+                         kv_shared_frac=0.3)
+    assert point.kv_shared_frac == 0.3
+    with pytest.raises(ValueError, match="kv_shared_frac"):
+        ProfilePoint(sm=0.3, quota=0.3, throughput=1.0, kv_shared_frac=1.0)
+    FunctionSpec(name="f", profile=(point,), batching="paged",
+                 kv_shared_frac=0.5)
+    with pytest.raises(ValueError, match="kv_shared_frac"):
+        FunctionSpec(name="f", profile=(point,), kv_shared_frac=0.5)
+    with pytest.raises(ValueError, match="kv_shared_frac"):
+        FunctionSpec(name="f", profile=(point,), batching="paged",
+                     prefix_sharing=False, kv_shared_frac=0.5)
+
+
+def test_shared_frac_discounts_memory_admission(tiny_model, tiny_params):
+    """A KV budget too small at frac=0 admits at frac=0.5 — the declared
+    duplicate fraction is not double-charged by admission."""
+    from repro.core.model_sharing import (SERVER_CONTEXT_OVERHEAD,
+                                          pytree_nbytes)
+
+    alloc = Alloc(sm=0.2, quota_request=0.2, quota_limit=0.3)
+    paged_kv = tiny_model.kv_cache_bytes(batching="paged", max_batch=4,
+                                         max_len=64, block_size=16,
+                                         n_kv_blocks=8)
+    base = pytree_nbytes(tiny_params) + SERVER_CONTEXT_OVERHEAD
+    fw = 1024
+    budget = base + fw + int(paged_kv * 0.5) + paged_kv // 4
+
+    def place(frac):
+        fe = ClusterFrontend(n_nodes=1, mem_bytes=budget)
+        return fe.place_instance("f", tiny_model, tiny_params, alloc,
+                                 batching="paged", n_kv_blocks=8,
+                                 framework_bytes=fw, kv_shared_frac=frac)
+
+    assert place(0.0) is None
+    assert place(0.5) is not None
+    with pytest.raises(ValueError, match="kv_shared_frac"):
+        fe = ClusterFrontend(n_nodes=1)
+        fe.place_instance("f", tiny_model, tiny_params, alloc,
+                          kv_shared_frac=0.5)  # continuous: no sharing
+
+
+def test_backend_places_with_profiled_shared_frac(tiny_model, tiny_params):
+    """LiveBackend.place charges max(spec, point) shared fraction: a
+    profile table carrying evidence of sharing admits where frac=0 does
+    not."""
+    from repro.control.backend import LiveBackend
+    from repro.control.spec import FunctionSpec
+    from repro.core.model_sharing import (SERVER_CONTEXT_OVERHEAD,
+                                          pytree_nbytes)
+    from repro.core.scaling import ProfilePoint
+
+    paged_kv = tiny_model.kv_cache_bytes(batching="paged", max_batch=4,
+                                         max_len=64, block_size=16,
+                                         n_kv_blocks=8)
+    budget = (pytree_nbytes(tiny_params) + SERVER_CONTEXT_OVERHEAD + 1024
+              + int(paged_kv * 0.5) + paged_kv // 4)
+
+    def place(frac):
+        spec = FunctionSpec(
+            name="f",
+            profile=(ProfilePoint(sm=0.2, quota=0.2, throughput=1.0,
+                                  kv_shared_frac=frac),),
+            batching="paged", block_size=16, n_kv_blocks=8,
+            framework_bytes=1024,
+            model_factory=lambda: (tiny_model, tiny_params))
+        backend = LiveBackend(ClusterFrontend(n_nodes=1, mem_bytes=budget))
+        backend.register(spec)
+        return backend.place(spec, spec.profile[0])
+
+    assert place(0.0) is None
+    assert place(0.5) is not None
+
+
+def test_profiler_stamps_shared_frac_on_points(tiny_model):
+    from repro.core.profiler import profile_points
+    from repro.core.workload import ServiceCurve
+
+    curve = ServiceCurve(name="chat", r_max=5.0, sm_sat=0.45, p=1.0,
+                         weight_bytes=1 << 20, framework_bytes=32 << 20)
+    bb = tiny_model.kv_block_bytes(8)
+    pts = profile_points(curve, spatial=(0.3,), temporal=(1.0,),
+                         duration=2.0, kv_budget_bytes=8 * bb,
+                         kv_block_bytes=bb, kv_shared_frac=0.25)
+    assert pts and all(p.kv_shared_frac == 0.25 for p in pts)
+    # the stamped capacity is the stretched one: 8 / 0.75 -> 10 blocks
+    assert all(p.kv_blocks == int(8 / 0.75) for p in pts)
