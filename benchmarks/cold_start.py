@@ -1,0 +1,225 @@
+"""Cold-start tier: scale-from-zero TTFT across the fleet weight tiers.
+
+Measures time-to-first-token (place_instance entry -> first landed
+token) for one function scaling from zero under each source tier of the
+fleet model store (``repro.serving.modelstore``):
+
+* **cold, blocking** — nothing staged anywhere: the placement pays the
+  origin fetch (``weights_loader``: init from scratch, fully
+  materialized), host staging, and a full synchronous weight upload
+  (``cold_start="blocking"``: device-resident before the engine
+  deploys);
+* **cold, overlap** — the same genuinely-cold placement, but every
+  staged leaf is ``jax.device_put`` asynchronously and left in flight
+  while instance creation and the first chunked-prefill admissions
+  proceed (``cold_start="overlap"``, the default pipelined mode);
+* **host-warm** — the node's own host-RAM cache holds the staged
+  shards: TTFT is just the re-upload plus first prefill;
+* **peer-warm** — only a peer node's cache holds them: one host-to-host
+  copy ahead of the host-warm path.
+
+Methodology: executors are compiled once during a warm-up placement and
+shared per model (``engine._executor``) — jit compile is the same
+additive constant in every tier and mode, so the benchmark isolates the
+weight movement the tier actually changes.  The Python garbage
+collector is paused inside each measured window (a collection pass over
+the accumulated dead frontends costs more than the effects being
+measured) and TTFT floors are min-of-N.
+
+Hard acceptance checks: the overlapped and blocking cold paths produce
+bit-identical tokens, host-warm TTFT <= 0.5x cold TTFT, and the
+overlapped upload beats blocking on the cold scale-from-zero path —
+asserted on the upload stall it removes from the critical path, with
+end-to-end TTFT no worse than blocking.
+
+Emits ``BENCH_coldstart.json`` (the artifact uploaded by CI) and runs
+as a tier-1 smoke step with ``--smoke``.
+
+Run:  PYTHONPATH=src python -m benchmarks.cold_start [--smoke]
+"""
+
+from __future__ import annotations
+
+import gc
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core.resources import Alloc
+from repro.models import build_model
+from repro.models.config import ModelConfig
+from repro.serving import ClusterFrontend, FleetModelStore, stage_params
+
+FN = "chat"
+MAX_BATCH = 2
+MAX_LEN = 64
+PROMPT_LEN = 8
+HOST_WARM_CEIL = 0.5  # host-warm TTFT <= ceil x cold TTFT (acceptance)
+TTFT_REGRESS_CEIL = 1.1  # overlap cold TTFT <= ceil x blocking (no regression)
+ALLOC = Alloc(sm=0.5, quota_request=0.9, quota_limit=0.9)
+
+
+def _model():
+    # Fat-but-shallow on purpose: ~57 MB of staged weights makes the
+    # origin fetch and the blocking upload's host re-stack dominate the
+    # run-to-run noise floor, while first-token execution (which scales
+    # with the same parameter count) stays ~100 ms.
+    cfg = ModelConfig(name="cold-bench", family="dense", n_layers=4,
+                      d_model=512, n_heads=4, n_kv_heads=2, d_ff=4096,
+                      vocab_size=128, vocab_pad_multiple=32)
+    return build_model(cfg)
+
+
+def _measure(model, loader, staged, prompt, max_new: int, *, tier: str,
+             mode: str = "overlap") -> tuple[dict, list[int]]:
+    """One placement + one request through the requested tier; returns
+    the resolved cold-start event stats and the request's tokens."""
+    store = FleetModelStore()
+    if tier == "host":
+        # Every node's own cache is warm: the placement hits host
+        # wherever it lands.
+        for node in range(2):
+            store.cache(node).put(FN, staged.copy())
+    elif tier == "peer":
+        # Only node 1 is warm and node 1 is cordoned, so the placement
+        # lands on node 0 and pulls the shards from its peer.
+        store.cache(1).put(FN, staged.copy())
+    frontend = ClusterFrontend(n_nodes=2, window=0.05, model_store=store,
+                               cold_start=mode)
+    if tier == "peer":
+        frontend.pool.cordon(1)
+    gc.collect()
+    gc.disable()  # no collection pauses inside the measured window
+    try:
+        handle = frontend.place_instance(FN, model, None, ALLOC,
+                                         max_batch=MAX_BATCH,
+                                         max_len=MAX_LEN,
+                                         weights_loader=loader)
+        assert handle is not None
+        req = frontend.submit(FN, prompt, max_new_tokens=max_new)
+        frontend.pump(budget_s=300.0)
+    finally:
+        gc.enable()
+    assert req.done, "request did not complete"
+    events = frontend.cold_start_events()
+    assert len(events) == 1, f"expected one placement, saw {len(events)}"
+    e = events[0]
+    assert e.ttft_s is not None, "first token never landed"
+    assert e.tier == tier, f"expected {tier} tier, hit {e.tier}"
+    if tier == "peer":
+        assert e.peer == 1 and handle.startswith("0:")
+    return ({"tier": e.tier, "mode": e.mode, "nbytes": e.nbytes,
+             "upload_s": e.upload_s, "peer": e.peer, "ttft_s": e.ttft_s},
+            list(req.tokens_out))
+
+
+def run(smoke: bool = False) -> list[Row]:
+    repeats = 3 if smoke else 5
+    max_new = 4 if smoke else 8
+    model = _model()
+
+    def loader():
+        # The origin fetch: init from scratch, fully materialized — paid
+        # inside the measured cold-start window.
+        return jax.block_until_ready(model.init(jax.random.key(0)))
+
+    prompt = np.asarray(
+        np.random.default_rng(0).integers(0, model.cfg.vocab_size,
+                                          PROMPT_LEN), dtype=np.int32)
+    staged = stage_params(model, loader())
+    # Warm-up: compile the model's shared executors (and the RNG cascade
+    # the loader uses) once, so every measured run sees the same warm
+    # jit caches — the tiers differ in weight movement, not compile.
+    _measure(model, loader, staged, prompt, max_new, tier="cold")
+
+    samples: dict[str, list[dict]] = {}
+    tokens: dict[str, list[int]] = {}
+    scenarios = [("cold_blocking", "cold", "blocking"),
+                 ("cold_overlap", "cold", "overlap"),
+                 ("host_warm", "host", "overlap"),
+                 ("peer_warm", "peer", "overlap")]
+    for name, tier, mode in scenarios:
+        runs = [_measure(model, loader, staged, prompt, max_new,
+                         tier=tier, mode=mode) for _ in range(repeats)]
+        samples[name] = [s for s, _ in runs]
+        tokens[name] = runs[0][1]
+
+    floor = {name: min(s["ttft_s"] for s in samples[name])
+             for name in samples}
+    # Upload stall: how long the placement is blocked on the weight
+    # upload (upload_params duration).  Blocking mode re-stacks the
+    # layer shards on host and waits for residency; overlap mode only
+    # dispatches the per-layer transfers — this is the cold-start time
+    # the pipelined upload removes from the critical path.
+    stall = {name: min(s["upload_s"] for s in samples[name])
+             for name in samples}
+    t_cold = min(floor["cold_blocking"], floor["cold_overlap"])
+
+    report = {
+        "config": {"model_nbytes": staged.nbytes, "prompt_len": PROMPT_LEN,
+                   "max_new_tokens": max_new, "repeats": repeats,
+                   "host_warm_ceil": HOST_WARM_CEIL, "smoke": smoke},
+        "samples": samples,
+        "ttft_s": floor,
+        "upload_stall_s": stall,
+    }
+    rows = [
+        Row("cold", "cold_blocking_ttft_s", floor["cold_blocking"],
+            note="scale-from-zero, full synchronous upload"),
+        Row("cold", "cold_overlap_ttft_s", floor["cold_overlap"],
+            note="scale-from-zero, pipelined per-layer upload"),
+        Row("cold", "cold_blocking_upload_stall_s", stall["cold_blocking"],
+            note="placement blocked on host re-stack + sync transfer"),
+        Row("cold", "cold_overlap_upload_stall_s", stall["cold_overlap"],
+            note="placement only dispatches; transfers stay in flight"),
+        Row("cold", "overlap_vs_blocking_stall",
+            stall["cold_overlap"] / stall["cold_blocking"],
+            note="cold upload-stall ratio; pipelined upload must win"),
+        Row("cold", "overlap_vs_blocking_ttft",
+            floor["cold_overlap"] / floor["cold_blocking"],
+            note=f"cold TTFT ratio; overlap must not regress "
+                 f"(<= {TTFT_REGRESS_CEIL})"),
+        Row("cold", "host_warm_ttft_s", floor["host_warm"]),
+        Row("cold", "peer_warm_ttft_s", floor["peer_warm"]),
+        Row("cold", "host_warm_vs_cold", floor["host_warm"] / t_cold,
+            note=f"acceptance: <= {HOST_WARM_CEIL} x cold"),
+        Row("cold", "peer_warm_vs_cold", floor["peer_warm"] / t_cold),
+        Row("cold", "staged_mbytes", staged.nbytes / 1e6),
+    ]
+    # Hard acceptance checks.  "Overlap beats blocking" is asserted on
+    # the upload stall (the serial cold-start time the pipelined mode
+    # provably removes) plus a no-regression bound on end-to-end TTFT:
+    # on this container H2D transfers are host memcpys, so the stall is
+    # the structural difference while TTFT floors differ only by it.
+    assert tokens["cold_blocking"] == tokens["cold_overlap"], (
+        f"overlapped upload changed tokens: {tokens['cold_overlap']} vs "
+        f"{tokens['cold_blocking']}")
+    assert floor["host_warm"] <= HOST_WARM_CEIL * t_cold, (
+        f"host-warm TTFT {floor['host_warm']:.3f}s > {HOST_WARM_CEIL} x "
+        f"cold {t_cold:.3f}s")
+    assert stall["cold_overlap"] < stall["cold_blocking"], (
+        f"overlapped upload stall {stall['cold_overlap']*1e3:.1f}ms did "
+        f"not beat blocking {stall['cold_blocking']*1e3:.1f}ms")
+    assert (floor["cold_overlap"]
+        <= TTFT_REGRESS_CEIL * floor["cold_blocking"]), (
+        f"overlapped cold TTFT {floor['cold_overlap']:.3f}s regressed "
+        f"past blocking {floor['cold_blocking']:.3f}s")
+    assert floor["peer_warm"] < t_cold, (
+        f"peer-warm TTFT {floor['peer_warm']:.3f}s did not beat cold "
+        f"{t_cold:.3f}s")
+    with open("BENCH_coldstart.json", "w") as f:
+        json.dump(report, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    t0 = time.perf_counter()
+    rows = run(smoke="--smoke" in sys.argv[1:])
+    for r in rows:
+        print(r.csv())
+    print(f"# total {time.perf_counter() - t0:.1f}s")

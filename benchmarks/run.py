@@ -10,6 +10,7 @@
   prefix prefix_sharing       prefix-cache KV dedupe: bytes + concurrency
   head   headline             3.15x / 1.34x / 3.13x aggregate claims
   roof   roofline_table       (arch x shape x mesh) roofline from dry-run
+  cold   cold_start           fleet model-store cold-start tiers (TTFT)
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only fig10,fig11]
 Output: ``bench,metric,value,paper_target,status,note`` CSV rows; exits
@@ -35,6 +36,7 @@ MODULES = [
     ("prefix", "benchmarks.prefix_sharing"),
     ("head", "benchmarks.headline"),
     ("roof", "benchmarks.roofline_table"),
+    ("cold", "benchmarks.cold_start"),
 ]
 
 
@@ -42,7 +44,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset "
-                         "(fig8..fig13,fault,prefix,head,roof)")
+                         "(fig8..fig13,fault,prefix,head,roof,cold)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 

@@ -26,6 +26,9 @@ it sees a fleet through a small verb set:
   ``DemandSource``s).
 * ``inflight(fn)``         — queued + slot-occupying requests (reported in
   reconcile telemetry).
+* ``warm_nodes(fn)``       — nodes holding warm weights for ``fn`` (the
+  cold-start tier; scale-up and defrag prefer them, empty when the tier
+  is off).
 
 Two implementations ship: ``SimBackend`` over the discrete-event
 ``repro.core.cluster.Cluster`` and ``LiveBackend`` over the real JAX
@@ -69,6 +72,8 @@ class Backend(Protocol):
 
     def inflight(self, fn: str) -> int: ...
 
+    def warm_nodes(self, fn: str) -> list[int]: ...
+
     def now(self) -> float: ...
 
 
@@ -95,7 +100,8 @@ class SimBackend:
         # track=False: the ControlPlane owns the L_j capacity queue.
         return self.cluster.deploy(spec.name, point,
                                    elastic_limit=spec.elastic_limit,
-                                   track=False)
+                                   track=False,
+                                   cold_start_s=spec.cold_start_s)
 
     def evict(self, spec: FunctionSpec, pod_id: str) -> None:
         # Idempotent by design, but NOT the dead-pod authority: the
@@ -127,6 +133,9 @@ class SimBackend:
 
     def inflight(self, fn: str) -> int:
         return self.cluster.inflight(fn)
+
+    def warm_nodes(self, fn: str) -> list[int]:
+        return self.cluster.warm_nodes(fn)
 
     def now(self) -> float:
         return self.cluster.sim.now
@@ -204,6 +213,9 @@ class LiveBackend:
 
     def inflight(self, fn: str) -> int:
         return self.frontend.inflight(fn)
+
+    def warm_nodes(self, fn: str) -> list[int]:
+        return self.frontend.warm_nodes(fn)
 
     def now(self) -> float:
         return self.frontend.now()

@@ -189,6 +189,13 @@ class FunctionSpec:
         placement.
       framework_bytes: per-instance runtime footprint charged by memory
         admission on the live path.
+      cold_start_s: estimated scale-from-zero cold-start latency (origin
+        fetch + staging + full weight upload) — the cold-start axis.  The
+        simulator delays a freshly placed pod's first token grant by it
+        (scaled down for host-warm / peer-warm nodes); the live path
+        measures the real thing through the fleet model store and reports
+        it in ``ClusterFrontend.cold_start_events()``.  0 keeps the
+        legacy instant-ready model.
       curve: simulator backend only — the calibrated ``ServiceCurve``.
     """
 
@@ -210,6 +217,7 @@ class FunctionSpec:
     prefix_sharing: bool = True
     kv_shared_frac: float = 0.0
     framework_bytes: int = DEFAULT_FRAMEWORK_BYTES
+    cold_start_s: float = 0.0
     curve: Optional[ServiceCurve] = None
 
     def __post_init__(self) -> None:
@@ -240,6 +248,9 @@ class FunctionSpec:
                 "sharing enabled")
         if self.headroom < 1.0:
             raise ValueError("headroom < 1 provisions below offered load")
+        if self.cold_start_s < 0.0:
+            raise ValueError(
+                f"cold_start_s must be >= 0, got {self.cold_start_s}")
 
     def feasible_points(self) -> list[ProfilePoint]:
         """Profile points meeting the SLO (all points when none do, so the

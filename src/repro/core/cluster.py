@@ -112,6 +112,9 @@ class PodRuntime:
     retired: bool = False
     steps: int = 0
     refills: int = 0  # mid-flight slot admissions (continuous only)
+    # Virtual time the pod's weights finish uploading (cold-start tier):
+    # no token is granted before it.  0 = instantly ready (legacy model).
+    ready_at: float = 0.0
 
     def pending(self) -> bool:
         """Work exists: queued requests or slots with rounds remaining."""
@@ -133,6 +136,11 @@ class Node:
         # function -> instance count, for the shared-memory footprint model
         self._fn_instances: dict[str, int] = {}
         self._fn_memmodel: dict[str, MemoryModel] = {}
+        # Functions whose weights are staged in this node's host RAM — the
+        # simulator's model of the fleet store's warm tier.  Populated by
+        # deploys that model a cold start (``cold_start_s > 0``); cleared
+        # when the node dies (host RAM dies with it).
+        self.warm_fns: set[str] = set()
 
     def mem_used(self) -> int:
         return sum(
@@ -214,6 +222,9 @@ class Cluster:
         self.dropped = 0
         self.rescheduled = 0
         self.migrated = 0
+        # Cold-start tier telemetry: one entry per delayed deploy —
+        # {pod, fn, node, tier, delay}.
+        self.cold_events: list[dict] = []
         # Periodic scheduler pump so window rolls release blocked pods.
         for node in self.nodes:
             self._tick(node, scheduler_period)
@@ -234,36 +245,78 @@ class Cluster:
 
     def deploy(self, fn: str, point: ProfilePoint,
                elastic_limit: float | None = None,
-               track: bool = True) -> Optional[str]:
+               track: bool = True,
+               cold_start_s: float = 0.0) -> Optional[str]:
         """Place one pod of ``fn`` at profile point ``point`` via MRA.
 
         ``track=False`` skips the L_j capacity-queue push — used by
         ``autoscale``, which manages L_j itself (Alg. 1 already pushed a
         provisional entry).
+
+        ``cold_start_s`` models the weight-upload tier: node selection
+        prefers warm nodes (whose host RAM already stages the function's
+        weights), and the pod's first token grant is delayed by the full
+        ``cold_start_s`` on a cold node, half of it on a peer-warm
+        placement (host-to-host copy + upload), and nothing on a warm
+        node.  The delay never enters scale decisions — ``decision_
+        signature`` replay is unaffected by whether a fleet modeled it.
         """
         alloc = point.to_alloc(elastic_limit)
         pod_id = f"{fn}-{next(self._pod_seq)}"
         mm = self.memory_model(fn)
-        excluded: set[int] = set()
-        while True:
-            placement = self.pool.schedule(alloc, pod_id, exclude=excluded)
-            if placement is None:
-                return None
-            if placement.node >= len(self.nodes):  # pool grew (allow_grow)
-                self.nodes.append(Node(placement.node,
-                                       self.nodes[0].mem_bytes,
-                                       self.window,
-                                       self.nodes[0].sharing))
-                self._tick(self.nodes[-1], 0.05)
-            node = self.nodes[placement.node]
-            if node.alive and node.admits(fn, mm):
+        warm_ids = ({n.node_id for n in self.nodes
+                     if n.alive and fn in n.warm_fns}
+                    if cold_start_s > 0 else set())
+        all_ids = {n.node_id for n in self.pool.nodes}
+        phases: list[set[int]] = []
+        if warm_ids and warm_ids != all_ids:
+            phases.append(all_ids - warm_ids)  # warm-first pass
+        phases.append(set())
+        placement = None
+        for base_exclude in phases:
+            excluded = set(base_exclude)
+            while True:
+                placement = self.pool.schedule(alloc, pod_id,
+                                               exclude=excluded)
+                if placement is None:
+                    break
+                if placement.node >= len(self.nodes):  # grew (allow_grow)
+                    self.nodes.append(Node(placement.node,
+                                           self.nodes[0].mem_bytes,
+                                           self.window,
+                                           self.nodes[0].sharing))
+                    self._tick(self.nodes[-1], 0.05)
+                node = self.nodes[placement.node]
+                if node.alive and node.admits(fn, mm):
+                    break
+                # Rectangle fit but node infeasible (dead / memory): retry
+                # the remaining nodes.
+                self.pool.release(placement)
+                excluded.add(placement.node)
+            if placement is not None:
                 break
-            # Rectangle fit but node infeasible (dead / memory): retry others.
-            self.pool.release(placement)
-            excluded.add(placement.node)
+        if placement is None:
+            return None
+        node = self.nodes[placement.node]
         pod = PodRuntime(pod_id=pod_id, fn=fn, curve=self.fn_curves[fn],
                          alloc=alloc, point=point, placement=placement,
                          max_batch=self.max_batch)
+        if cold_start_s > 0:
+            if placement.node in warm_ids:
+                tier, delay = "host", 0.0
+            elif warm_ids:
+                tier, delay = "peer", 0.5 * cold_start_s
+            else:
+                tier, delay = "cold", cold_start_s
+            pod.ready_at = self.sim.now + delay
+            node.warm_fns.add(fn)  # staged by this placement's upload
+            self.cold_events.append({"pod": pod_id, "fn": fn,
+                                     "node": placement.node, "tier": tier,
+                                     "delay": delay})
+            if delay > 0:
+                # Wake the pod once its weights land (idempotent: the
+                # ready gate in _want_token refuses earlier grants).
+                self.sim.at(pod.ready_at, lambda: self._want_token(pod))
         node.add_pod(pod, mm)
         self.pods[pod_id] = pod
         self.fn_pods[fn].append(pod_id)
@@ -331,6 +384,10 @@ class Cluster:
     def _want_token(self, pod: PodRuntime) -> None:
         node = self.nodes[pod.placement.node]
         if not node.alive or pod.waiting_token or not pod.pending():
+            return
+        if self.sim.now < pod.ready_at - 1e-12:
+            # Weights still uploading (cold-start tier): the wake event
+            # scheduled at deploy re-arms the pod at ready_at.
             return
         if node.scheduler.pods[pod.pod_id].holding is not None:
             return
@@ -477,6 +534,7 @@ class Cluster:
         """
         node = self.nodes[node_id]
         node.alive = False
+        node.warm_fns.clear()  # host RAM (staged weights) dies with it
         self.pool.drain_node(node_id)
         displaced: list[PodRuntime] = list(node.pods.values())
         strays: list[Request] = []
@@ -516,6 +574,13 @@ class Cluster:
         """Per-node allocated-area fraction over schedulable nodes."""
         return self.pool.node_load()
 
+    def warm_nodes(self, fn: str) -> list[int]:
+        """Alive nodes whose host RAM stages ``fn``'s weights (the
+        simulator's fleet-store warm tier; empty unless deploys modeled a
+        ``cold_start_s``)."""
+        return sorted(n.node_id for n in self.nodes
+                      if n.alive and fn in n.warm_fns)
+
     def migrate(self, pod_id: str, target: int) -> Optional[str]:
         """Move one pod to ``target``: the simulator's KV migration.
 
@@ -552,6 +617,10 @@ class Cluster:
                              alloc=pod.alloc, point=pod.point,
                              placement=placement, max_batch=pod.max_batch,
                              steps=pod.steps, refills=pod.refills)
+        if pod.fn in src_node.warm_fns:
+            # The move stages the weights on the target; the source's host
+            # copy stays cached (both nodes are warm afterwards).
+            tnode.warm_fns.add(pod.fn)
         # Pause -> move: between steps the queue and slot state are host
         # data; the live path's gather/merge per slot collapses to this.
         new_pod.queue, pod.queue = pod.queue, deque()

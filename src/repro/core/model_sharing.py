@@ -160,13 +160,22 @@ class MemoryModel:
     framework_bytes: int
     server_overhead: int = SERVER_CONTEXT_OVERHEAD
 
-    def footprint(self, n_instances: int, sharing: bool) -> int:
+    def footprint(self, n_instances: int, sharing: bool, *,
+                  server: bool = True) -> int:
+        """Bytes ``n_instances`` of this function occupy on a node.
+
+        ``server=False`` drops the storage-server context from the shared
+        footprint — used by :func:`node_shared_footprint` when ONE store
+        tier owns every function's weights on the node, so the context is
+        charged once per tier rather than once per function.
+        """
         if n_instances == 0:
             return 0
         if not sharing:
             return n_instances * (self.weight_bytes + self.framework_bytes)
-        server = self.weight_bytes + self.server_overhead
-        return server + n_instances * self.framework_bytes
+        server_bytes = self.server_overhead if server else 0
+        return (self.weight_bytes + server_bytes
+                + n_instances * self.framework_bytes)
 
     def reduction(self, n_instances: int) -> float:
         """Fractional footprint reduction from sharing at ``n_instances``."""
@@ -181,3 +190,26 @@ class MemoryModel:
         while self.footprint(n + 1, sharing) <= capacity_bytes:
             n += 1
         return n
+
+
+def node_shared_footprint(entries) -> int:
+    """Node footprint when one store TIER owns every function's weights.
+
+    The paper's Fig.-13 model charges one storage-server context per
+    shared function; with the fleet model store there is exactly one
+    server process per node, so the context is charged ONCE per node —
+    ``max`` of the participating overheads, conservatively covering the
+    largest context any function would have needed.
+
+    ``entries`` iterates ``(MemoryModel, n_instances)`` pairs for the
+    functions resident on the node (``n_instances == 0`` pairs are
+    skipped).
+    """
+    total = 0
+    overhead = 0
+    for mm, n in entries:
+        if n <= 0:
+            continue
+        total += mm.footprint(n, sharing=True, server=False)
+        overhead = max(overhead, mm.server_overhead)
+    return total + overhead

@@ -1,6 +1,9 @@
 from repro.serving.engine import (FunctionInstance, ServeRequest,
                                   ServingEngine)
 from repro.serving.frontend import ClusterFrontend, InstancePlacement
+from repro.serving.modelstore import (ColdStartEvent, FleetModelStore,
+                                      HostWeightCache, StagedWeights,
+                                      stage_params, upload_params)
 from repro.serving.paging import (NULL_BLOCK, BlockExhausted,
                                   KVPageAllocator, PageTable, blocks_needed,
                                   prompt_digests)
@@ -8,4 +11,6 @@ from repro.serving.paging import (NULL_BLOCK, BlockExhausted,
 __all__ = ["ServingEngine", "FunctionInstance", "ServeRequest",
            "ClusterFrontend", "InstancePlacement", "KVPageAllocator",
            "PageTable", "BlockExhausted", "NULL_BLOCK", "blocks_needed",
-           "prompt_digests"]
+           "prompt_digests", "FleetModelStore", "HostWeightCache",
+           "ColdStartEvent", "StagedWeights", "stage_params",
+           "upload_params"]

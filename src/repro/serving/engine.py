@@ -76,6 +76,25 @@ def _bucket_len(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length()
 
 
+def _executor(model: Model, key: tuple, build) -> Any:
+    """Per-model shared jit wrapper: ``jax.jit`` caches compiled
+    executables per *wrapper object*, so per-instance wrappers would pay
+    a fresh trace + compile on every deployment.  Sharing them across
+    instances (keyed on the model, stored on it so the cache dies with
+    it) is what makes a warm node warm in the cold-start sense: it holds
+    the function's compiled executors, not just its weights.  Donation
+    is per-call semantics, so shared donated wrappers are safe."""
+    cache = model.__dict__.setdefault("_jit_executors", {})
+    fn = cache.get(key)
+    if fn is None:
+        fn = cache[key] = build()
+    return fn
+
+
+# Model-independent: scatter one sampled token into the donated vector.
+_SET_TOK = jax.jit(lambda t, s, v: t.at[s].set(v), donate_argnums=(0,))
+
+
 @dataclasses.dataclass
 class ServeRequest:
     req_id: int
@@ -123,34 +142,45 @@ class FunctionInstance:
         self.weights_key = weights_key
         self.params = store.get(weights_key)  # shared, zero-copy
         self.queue: deque[ServeRequest] = deque()
-        self._prefill = jax.jit(
-            lambda p, t: model.prefill(p, t, max_len=max_len))
+        self._prefill = _executor(model, ("prefill", max_len), lambda:
+                                  jax.jit(lambda p, t: model.prefill(
+                                      p, t, max_len=max_len)))
         # Bucketed chunked admission: prompts are right-padded to power-of-
         # two buckets so the jitted prefill sees O(log max_len) distinct
         # shapes instead of one per prompt length (each a recompile).
         self.bucketed = (batching in ("continuous", "paged")
                          and prefill_buckets
                          and model.supports_bucketed_prefill())
-        self._prefill_len = jax.jit(
-            lambda p, t, n: model.prefill(p, t, max_len=max_len, length=n)
-        ) if self.bucketed else None
-        self._decode = jax.jit(model.decode_step)
+        self._prefill_len = _executor(model, ("prefill_len", max_len),
+                                      lambda: jax.jit(
+                                          lambda p, t, n: model.prefill(
+                                              p, t, max_len=max_len,
+                                              length=n))
+                                      ) if self.bucketed else None
+        self._decode = _executor(model, ("decode",),
+                                 lambda: jax.jit(model.decode_step))
         # Fused executors: the decode round samples on device and returns
         # (B,) int32 tokens; the token vector and the whole KV pool are
         # DONATED — after dispatch the old buffers are dead and XLA writes
         # the new round in place (no per-round cache copy).  Never alias a
         # donated buffer after dispatch (serving/README.md "Hot path").
-        self._decode_tok = jax.jit(model.decode_step_tokens,
-                                   donate_argnums=(1, 2))
-        self._greedy = jax.jit(model.sample_greedy)
-        self._set_tok = jax.jit(lambda t, s, v: t.at[s].set(v),
-                                donate_argnums=(0,))
+        self._decode_tok = _executor(model, ("decode_tok",), lambda:
+                                     jax.jit(model.decode_step_tokens,
+                                             donate_argnums=(1, 2)))
+        self._greedy = _executor(model, ("greedy",),
+                                 lambda: jax.jit(model.sample_greedy))
+        self._set_tok = _SET_TOK
         # The slot pool is donated on merge/append too: admitting a request
         # scatters its prefill entry into the pool in place.
-        self._merge = jax.jit(model.merge_slot, donate_argnums=(0,))
+        self._merge = _executor(model, ("merge",), lambda:
+                                jax.jit(model.merge_slot,
+                                        donate_argnums=(0,)))
         self.steps = 0
         self.retired = False  # draining: no new routing, slots finish
         self.paused = False   # migrating: no admission, no decode
+        # Wall-clock of the FIRST token this instance ever landed on a
+        # request — the cold-start tier's time-to-first-token anchor.
+        self.first_token_at: Optional[float] = None
         # continuous state: slot i holds the request decoding in cache row i.
         self.slots: list[Optional[ServeRequest]] = [None] * max_batch
         self._slot_tok = np.zeros((max_batch,), np.int32)
@@ -198,12 +228,19 @@ class FunctionInstance:
             self._tables = np.full((max_batch, self.blocks_per_seq),
                                    NULL_BLOCK, np.int32)
             self._pos = np.zeros((max_batch,), np.int32)
-            self._decode_paged = jax.jit(model.decode_step_paged)
-            self._decode_paged_tok = jax.jit(model.decode_step_paged_tokens,
-                                             donate_argnums=(1, 2, 4))
-            self._append = jax.jit(model.append_paged, donate_argnums=(0,))
-            self._copy_block = jax.jit(model.copy_block,
-                                       donate_argnums=(0,))
+            self._decode_paged = _executor(
+                model, ("decode_paged",),
+                lambda: jax.jit(model.decode_step_paged))
+            self._decode_paged_tok = _executor(
+                model, ("decode_paged_tok",),
+                lambda: jax.jit(model.decode_step_paged_tokens,
+                                donate_argnums=(1, 2, 4)))
+            self._append = _executor(
+                model, ("append",),
+                lambda: jax.jit(model.append_paged, donate_argnums=(0,)))
+            self._copy_block = _executor(
+                model, ("copy_block",),
+                lambda: jax.jit(model.copy_block, donate_argnums=(0,)))
             self._tables_dev: Optional[jax.Array] = None
             self._pos_dev: Optional[jax.Array] = None
             self._active_dev: Optional[jax.Array] = None
@@ -262,6 +299,12 @@ class FunctionInstance:
 
     def _clip_tok(self, tok: np.ndarray) -> np.ndarray:
         return np.minimum(tok, self.model.cfg.vocab_size - 1)
+
+    def _mark_first_token(self) -> None:
+        """Record the instant the instance's first token became visible
+        host-side (every token-landing path calls this)."""
+        if self.first_token_at is None:
+            self.first_token_at = time.perf_counter()
 
     # -- device-resident decode state (fused path) --------------------------
 
@@ -413,6 +456,7 @@ class FunctionInstance:
                 self.sync_count += 1
                 tok = int(np.asarray(tok_dev)[0])
                 req.tokens_out.append(tok)
+                self._mark_first_token()
                 if len(req.tokens_out) >= req.max_new_tokens:
                     req.done = True
                     finished.append(req)
@@ -449,6 +493,7 @@ class FunctionInstance:
         fused sync and both host-argmax reference rounds."""
         req = self.slots[slot]
         req.tokens_out.append(tok)
+        self._mark_first_token()
         self._slot_tok[slot] = tok
         if self.batching == "paged":
             self._pos[slot] += 1
@@ -612,6 +657,7 @@ class FunctionInstance:
         for req, tok_dev, slot in self._pending_prefill:
             tok = int(np.asarray(tok_dev)[0])
             req.tokens_out.append(tok)
+            self._mark_first_token()
             if slot is None:  # whole request served by its prefill
                 req.done = True
                 finished.append(req)
@@ -721,6 +767,7 @@ class FunctionInstance:
         finished = []
         for r, t in zip(batch, next_tok):
             r.tokens_out.append(int(t))
+            self._mark_first_token()
             if len(r.tokens_out) >= r.max_new_tokens:
                 r.done = True
                 finished.append(r)

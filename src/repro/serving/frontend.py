@@ -39,11 +39,13 @@ from typing import Any, Optional
 import numpy as np
 
 from repro.core.maximal_rectangles import MaxRectsPool, Placement
-from repro.core.model_sharing import MemoryModel, pytree_nbytes
+from repro.core.model_sharing import (MemoryModel, node_shared_footprint,
+                                      pytree_nbytes)
 from repro.core.resources import Alloc
 from repro.core.slo import observed_rate, record_arrival
 from repro.models.model import Model
 from repro.serving.engine import ServeRequest, ServingEngine
+from repro.serving.modelstore import ColdStartEvent, FleetModelStore
 from repro.serving.paging import blocks_needed
 
 # Per-instance runtime footprint (jit executables, slot KV pool, host
@@ -65,9 +67,22 @@ class ClusterFrontend:
     """Join-shortest-queue router over N token-scheduled engine nodes."""
 
     def __init__(self, n_nodes: int = 2, *,
-                 mem_bytes: int = 16 * 1024**3, window: float = 0.2):
+                 mem_bytes: int = 16 * 1024**3, window: float = 0.2,
+                 model_store: Optional[FleetModelStore] = None,
+                 cold_start: str = "overlap"):
         if n_nodes <= 0:
             raise ValueError("need at least one node")
+        if cold_start not in ("overlap", "blocking"):
+            raise ValueError(f"unknown cold_start mode {cold_start!r}")
+        # Optional fleet weight tier (serving/modelstore.py): placements
+        # source their params through it (device -> host -> peer -> cold),
+        # scale-up prefers warm nodes, and memory admission charges the
+        # storage-server context once per node instead of per function.
+        self.model_store = model_store
+        self.cold_start = cold_start
+        # (event, node, inst_id): TTFT resolved lazily from the instance's
+        # first landed token by cold_start_events().
+        self._cold_instances: list[tuple[ColdStartEvent, int, str]] = []
         self.engines = [ServingEngine(window=window) for _ in range(n_nodes)]
         for i, eng in enumerate(self.engines):
             eng.on_instance_closed = functools.partial(
@@ -102,15 +117,41 @@ class ClusterFrontend:
         return counts
 
     def mem_used(self, node: int) -> int:
+        counts = self._fn_instances_on(node)
+        if self.model_store is not None:
+            # The fleet store is the node's single storage server: its
+            # context overhead is charged once per node, not per function.
+            return node_shared_footprint(
+                (self._fn_mm[fn], n) for fn, n in counts.items())
         return sum(self._fn_mm[fn].footprint(n, sharing=True)
-                   for fn, n in self._fn_instances_on(node).items() if n > 0)
+                   for fn, n in counts.items() if n > 0)
 
     def admits(self, node: int, fn: str, mm: MemoryModel) -> bool:
         n = self._fn_instances_on(node).get(fn, 0)
-        projected = (self.mem_used(node)
-                     - mm.footprint(n, sharing=True)
-                     + mm.footprint(n + 1, sharing=True))
+        if self.model_store is not None:
+            counts = self._fn_instances_on(node)
+            counts[fn] = n + 1
+            mms = {**self._fn_mm, fn: mm}
+            projected = node_shared_footprint(
+                (mms[f], c) for f, c in counts.items())
+        else:
+            projected = (self.mem_used(node)
+                         - mm.footprint(n, sharing=True)
+                         + mm.footprint(n + 1, sharing=True))
         return projected <= self.mem_bytes
+
+    # -- warm-node lookup (cold-start tier) --------------------------------
+
+    def warm_nodes(self, fn: str) -> list[int]:
+        """Nodes that can serve ``fn``'s weights without a cold stage:
+        device-resident (engine ModelStore) or host-staged (fleet store).
+        Empty without a fleet store — warm-aware selection is then off."""
+        if self.model_store is None:
+            return []
+        warm = set(self.model_store.warm_nodes(fn))
+        warm |= {i for i, eng in enumerate(self.engines)
+                 if eng.alive and eng.store.contains(fn)}
+        return sorted(warm)
 
     # -- deployment --------------------------------------------------------
 
@@ -121,7 +162,9 @@ class ClusterFrontend:
                        block_size: int = 16,
                        n_kv_blocks: Optional[int] = None,
                        fused: bool = True, prefix_sharing: bool = True,
-                       kv_shared_frac: float = 0.0) -> Optional[str]:
+                       kv_shared_frac: float = 0.0,
+                       weights_loader: Optional[Any] = None
+                       ) -> Optional[str]:
         """Place ONE instance via MRA + memory admission with spillover.
 
         Returns a ``node:inst_id`` handle, or None when no node has both a
@@ -145,7 +188,16 @@ class ClusterFrontend:
         observed ``kv_bytes_saved`` telemetry validates the declared
         fraction.  ``prefix_sharing=False`` deploys the unshared
         reference plane (and such a function must declare frac 0).
+
+        With a fleet ``model_store`` attached, placement prefers warm
+        nodes (host-staged or device-resident weights) over cold ones,
+        sources the params through the tier (device -> host -> peer ->
+        cold), and records a ``ColdStartEvent``.  ``params=None`` is
+        then allowed: a host/peer hit re-uploads the staged shards, and
+        a true cold miss calls ``weights_loader()`` — the origin fetch
+        is paid inside the measured cold-start window.
         """
+        t_start = time.perf_counter()
         if not 0.0 <= kv_shared_frac < 1.0:
             raise ValueError(
                 f"kv_shared_frac must be in [0, 1), got {kv_shared_frac}")
@@ -158,9 +210,25 @@ class ClusterFrontend:
             batching=batching, max_batch=max_batch, max_len=max_len,
             block_size=block_size, n_kv_blocks=n_kv_blocks)
             * (1.0 - kv_shared_frac))
+        if params is None:
+            if self.model_store is None:
+                raise ValueError(
+                    "params=None requires a fleet model_store")
+            weight_bytes = self.model_store.staged_nbytes(fn)
+            if weight_bytes is None:
+                if weights_loader is None:
+                    raise ValueError(
+                        f"function {fn!r} has no staged weights and no "
+                        "weights_loader — nothing to place")
+                # Origin fetch: genuinely cold, and charged to this
+                # placement's cold-start window.
+                params = weights_loader()
+                weight_bytes = pytree_nbytes(params)
+        else:
+            weight_bytes = pytree_nbytes(params)
         created_mm = fn not in self._fn_mm
         mm = self._fn_mm.setdefault(
-            fn, MemoryModel(weight_bytes=pytree_nbytes(params),
+            fn, MemoryModel(weight_bytes=weight_bytes,
                             framework_bytes=framework_bytes + kv_bytes))
         if mm.framework_bytes != framework_bytes + kv_bytes:
             # The per-function MemoryModel is shared by all replicas; a
@@ -177,30 +245,61 @@ class ClusterFrontend:
                 del self._fn_mm[fn]
 
         pod_id = f"{fn}-{next(self._pod_seq)}"
-        excluded: set[int] = set()
-        while True:
-            placement = self.pool.schedule(alloc, pod_id, exclude=excluded)
-            if placement is None:
-                rollback_mm()
-                return None
-            if self.admits(placement.node, fn, mm):
+        # Warm-first phases: with a fleet store attached, the MRA search
+        # first restricts itself to warm nodes (host-staged or
+        # device-resident weights) and only then falls back to the whole
+        # fleet — warm-aware selection riding next to the existing fit.
+        all_nodes = {n.node_id for n in self.pool.nodes}
+        phases: list[set[int]] = []
+        warm = set(self.warm_nodes(fn))
+        if warm and warm != all_nodes:
+            phases.append(all_nodes - warm)
+        phases.append(set())
+        placement = None
+        for base_exclude in phases:
+            excluded = set(base_exclude)
+            while True:
+                placement = self.pool.schedule(alloc, pod_id,
+                                               exclude=excluded)
+                if placement is None:
+                    break
+                if self.admits(placement.node, fn, mm):
+                    break
+                # Spillover: rectangle fit but memory admission failed on
+                # this node — release and retry the remaining nodes.
+                self.pool.release(placement)
+                excluded.add(placement.node)
+            if placement is not None:
                 break
-            # Spillover: rectangle fit but memory admission failed on this
-            # node — release and retry the remaining nodes.
-            self.pool.release(placement)
-            excluded.add(placement.node)
+        if placement is None:
+            rollback_mm()
+            return None
+        event = None
+        deploy_params = params
+        if self.model_store is not None:
+            resident = self.engines[placement.node].store.contains(fn)
+            deploy_params, event = self.model_store.acquire(
+                placement.node, fn, model, params=params,
+                loader=weights_loader, resident=resident,
+                mode=self.cold_start)
+            event.placed_at = t_start  # TTFT window opens at call entry
         try:
             inst_id = self.engines[placement.node].deploy(
-                fn, model, params, alloc, n_instances=1,
+                fn, model, deploy_params, alloc, n_instances=1,
                 max_batch=max_batch, max_len=max_len, batching=batching,
                 block_size=block_size, n_kv_blocks=n_kv_blocks,
                 fused=fused, prefix_sharing=prefix_sharing)[0]
         except Exception:
             # The rectangle was reserved before the engine ran; a failed
-            # deploy must not leak it (or a provisional memory-model entry).
+            # deploy must not leak it (or a provisional memory-model entry,
+            # or a host-cache pin).
             self.pool.release(placement)
+            if self.model_store is not None:
+                self.model_store.release(placement.node, fn)
             rollback_mm()
             raise
+        if event is not None:
+            self._cold_instances.append((event, placement.node, inst_id))
         self.placements.append(InstancePlacement(
             fn=fn, inst_id=inst_id, node=placement.node,
             placement=placement))
@@ -387,6 +486,9 @@ class ClusterFrontend:
         """
         eng = self.engines[node]
         strays = eng.fail()
+        if self.model_store is not None:
+            # Host RAM died with the node; peer caches stay warm.
+            self.model_store.drop_node(node)
         self.pool.drain_node(node)
         lost = [p for p in self.placements if p.node == node]
         self.placements = [p for p in self.placements if p.node != node]
@@ -445,10 +547,17 @@ class ClusterFrontend:
         if placement.node != target:
             self.pool.release(placement)
             return None
+        event = None
+        deploy_params = params
+        if self.model_store is not None:
+            resident = self.engines[target].store.contains(fn)
+            deploy_params, event = self.model_store.acquire(
+                target, fn, model, params=params, resident=resident,
+                mode=self.cold_start)
         inst.paused = True  # pause admission + decode while the KV moves
         try:
             new_inst_id = self.engines[target].deploy(
-                fn, model, params, inst.alloc, n_instances=1,
+                fn, model, deploy_params, inst.alloc, n_instances=1,
                 max_batch=inst.max_batch, max_len=inst.max_len,
                 batching=inst.batching,
                 block_size=getattr(inst, "block_size", 16),
@@ -458,8 +567,12 @@ class ClusterFrontend:
                 prefix_sharing=inst.prefix_sharing)[0]
         except Exception:
             self.pool.release(placement)
+            if self.model_store is not None:
+                self.model_store.release(target, fn)
             inst.paused = False
             raise
+        if event is not None:
+            self._cold_instances.append((event, target, new_inst_id))
         new_inst = self.engines[target].instances[new_inst_id]
         # Gather -> merge, slot by slot: same slot index on the target, so
         # the decode batch resumes exactly where it paused.
@@ -486,6 +599,11 @@ class ClusterFrontend:
             if p.node == node and p.inst_id == inst_id:
                 self.pool.release(p.placement)
                 self.placements.remove(p)
+                if self.model_store is not None:
+                    # The pod's hold on its host-staged weights ends here;
+                    # the entry stays cached (evictable) for the next
+                    # scale-up to hit warm.
+                    self.model_store.release(node, p.fn)
                 if not any(q.fn == p.fn for q in self.placements):
                     # Fully drained: drop the per-function MemoryModel so a
                     # redeploy may use a different data-plane config.
@@ -531,6 +649,20 @@ class ClusterFrontend:
         """Bytes prefix sharing is saving fleet-wide right now (extra
         block references minus reserved COW spares, in bytes)."""
         return sum(e.kv_bytes_saved() for e in self.engines)
+
+    def cold_start_events(self) -> list[ColdStartEvent]:
+        """Every placement's trip through the weight tier, with
+        time-to-first-token resolved lazily: ``ttft_s`` fills in once the
+        placed instance lands its first token (``first_token_at``)."""
+        out = []
+        for event, node, inst_id in self._cold_instances:
+            if event.ttft_s is None:
+                inst = self.engines[node].instances.get(inst_id)
+                first = inst.first_token_at if inst is not None else None
+                if first is not None:
+                    event.ttft_s = first - event.placed_at
+            out.append(event)
+        return out
 
     def kv_shared_fraction(self) -> float:
         """Observed shared fraction: saved / (in_use + saved) — the honest

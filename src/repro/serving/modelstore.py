@@ -1,0 +1,390 @@
+"""Fleet-level model store: a weight-swap cold-start tier.
+
+The per-node :class:`repro.core.model_sharing.ModelStore` shares one
+device-resident copy of a function's weights between co-located
+instances (paper §3.5).  This module generalizes that into a *fleet*
+tier, the Torpor/FaaSTube direction from the roadmap:
+
+    device HBM  →  host RAM  →  peer node's host RAM  →  init from scratch
+
+* ``FleetModelStore`` keeps a per-node host-RAM cache of *staged*
+  weights (numpy shards, LRU with refcount pinning — a pod's live
+  weights can never be evicted) and resolves every placement through
+  the tier order above, counting hits, misses, and bytes moved.
+* ``stage_params`` splits a param pytree into per-layer host shards
+  (leaves stacked under a leading ``"layers"`` axis become one shard
+  per layer); ``upload_params`` re-assembles them on device either
+  ``"blocking"`` (full pytree resident before returning — the
+  reference mode tests diff against) or ``"overlap"`` (one
+  asynchronous ``jax.device_put`` per layer shard, left in flight, so
+  instance creation and the first chunked-prefill admissions overlap
+  the upload).  Both modes produce bit-identical values by
+  construction.
+
+The live frontend sources weights through ``acquire`` at placement
+time; the control plane reads ``warm_nodes`` for warm-aware scale-up
+and defrag targeting.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from time import perf_counter
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "StagedWeights",
+    "stage_params",
+    "upload_params",
+    "HostWeightCache",
+    "ColdStartEvent",
+    "FleetModelStore",
+]
+
+
+def _name_leaves(model) -> Optional[list]:
+    """Leaf-aligned logical names for ``model``'s params, or None."""
+    try:
+        names = model.param_names()
+    except Exception:
+        return None
+    return jax.tree_util.tree_leaves(
+        names, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+@dataclass
+class StagedWeights:
+    """A param pytree staged as host numpy shards.
+
+    ``leaves[i]`` is either one ndarray (unstacked leaf) or, when
+    ``stacked[i]``, a list of per-layer ndarrays split along the
+    leading ``"layers"`` axis — the unit of pipelined upload.
+    """
+
+    treedef: Any
+    leaves: List[Any]
+    stacked: List[bool]
+    nbytes: int
+
+    def copy(self) -> "StagedWeights":
+        """Deep host-to-host copy (the peer-transfer payload)."""
+        leaves = [
+            [shard.copy() for shard in leaf] if stacked else leaf.copy()
+            for leaf, stacked in zip(self.leaves, self.stacked)
+        ]
+        return StagedWeights(self.treedef, leaves, list(self.stacked), self.nbytes)
+
+
+def stage_params(model, params) -> StagedWeights:
+    """Stage a device param pytree into per-layer host shards."""
+    dev_leaves, treedef = jax.tree_util.tree_flatten(params)
+    names = _name_leaves(model)
+    if names is not None and len(names) != len(dev_leaves):
+        names = None
+    leaves: List[Any] = []
+    stacked: List[bool] = []
+    nbytes = 0
+    for i, leaf in enumerate(dev_leaves):
+        host = np.asarray(leaf)
+        name = names[i] if names is not None else ()
+        if name and name[0] == "layers" and host.ndim > 0 and host.shape[0] > 0:
+            shards = [np.ascontiguousarray(host[j]) for j in range(host.shape[0])]
+            leaves.append(shards)
+            stacked.append(True)
+            nbytes += sum(s.nbytes for s in shards)
+        else:
+            host = np.ascontiguousarray(host)
+            leaves.append(host)
+            stacked.append(False)
+            nbytes += host.nbytes
+    return StagedWeights(treedef, leaves, stacked, nbytes)
+
+
+def upload_params(staged: StagedWeights, *, mode: str = "overlap"):
+    """Re-assemble staged shards on device.
+
+    ``"blocking"`` stacks layer shards on host and blocks until the
+    full pytree is resident; ``"overlap"`` dispatches one asynchronous
+    ``jax.device_put`` per layer shard (plus a device-side stack) and
+    returns with the transfers still in flight — downstream jit
+    tracing and the first prefill dispatch overlap the upload.  Values
+    are identical either way.
+    """
+    if mode not in ("blocking", "overlap"):
+        raise ValueError(f"unknown upload mode {mode!r}")
+    out = []
+    for leaf, stacked in zip(staged.leaves, staged.stacked):
+        if stacked:
+            if mode == "blocking":
+                # Re-assemble on host, then one synchronous transfer.
+                out.append(jnp.asarray(np.stack(leaf)))
+            else:
+                # One async device_put per layer shard; the device-side
+                # stack is dispatched, not executed, so the call returns
+                # with the whole pipeline in flight.
+                out.append(jnp.stack([jax.device_put(s) for s in leaf]))
+        else:
+            out.append(jnp.asarray(leaf) if mode == "blocking"
+                       else jax.device_put(leaf))
+    params = jax.tree_util.tree_unflatten(staged.treedef, out)
+    if mode == "blocking":
+        params = jax.block_until_ready(params)
+    return params
+
+
+@dataclass
+class _CacheEntry:
+    staged: StagedWeights
+    nbytes: int
+    pins: int = 0
+
+
+class HostWeightCache:
+    """One node's host-RAM weight cache: byte-budgeted LRU with pinning.
+
+    ``pin``/``unpin`` track live pods whose weights came from this
+    entry; eviction only ever considers unpinned entries and refuses
+    (raises ``MemoryError``) rather than evict a pinned one.
+    """
+
+    def __init__(self, capacity_bytes: int = 4 << 30):
+        if capacity_bytes <= 0:
+            raise ValueError("capacity_bytes must be positive")
+        self.capacity_bytes = int(capacity_bytes)
+        self._entries: "OrderedDict[str, _CacheEntry]" = OrderedDict()
+        self.evictions = 0
+
+    def contains(self, key: str) -> bool:
+        return key in self._entries
+
+    def keys(self):
+        return list(self._entries)
+
+    def used_bytes(self) -> int:
+        return sum(e.nbytes for e in self._entries.values())
+
+    def pins(self, key: str) -> int:
+        e = self._entries.get(key)
+        return e.pins if e is not None else 0
+
+    def get(self, key: str) -> StagedWeights:
+        entry = self._entries[key]
+        self._entries.move_to_end(key)
+        return entry.staged
+
+    def peek(self, key: str) -> Optional[StagedWeights]:
+        entry = self._entries.get(key)
+        return entry.staged if entry is not None else None
+
+    def put(self, key: str, staged: StagedWeights) -> None:
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            return
+        self._evict_for(staged.nbytes)
+        self._entries[key] = _CacheEntry(staged, staged.nbytes)
+
+    def pin(self, key: str) -> None:
+        entry = self._entries.get(key)
+        if entry is not None:
+            entry.pins += 1
+
+    def unpin(self, key: str) -> None:
+        entry = self._entries.get(key)
+        if entry is not None and entry.pins > 0:
+            entry.pins -= 1
+
+    def drop(self, key: str) -> None:
+        self._entries.pop(key, None)
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    def _evict_for(self, need_bytes: int) -> None:
+        free = self.capacity_bytes - self.used_bytes()
+        if free >= need_bytes:
+            return
+        # LRU order: oldest unpinned first.
+        for key in list(self._entries):
+            if free >= need_bytes:
+                break
+            entry = self._entries[key]
+            if entry.pins > 0:
+                continue
+            del self._entries[key]
+            self.evictions += 1
+            free += entry.nbytes
+        if free < need_bytes:
+            raise MemoryError(
+                f"host weight cache over capacity: need {need_bytes - free} "
+                "more bytes but remaining entries are pinned"
+            )
+
+
+@dataclass
+class ColdStartEvent:
+    """One placement's trip through the weight tier."""
+
+    fn: str
+    node: int
+    tier: str  # "device" | "host" | "peer" | "cold"
+    mode: str  # "blocking" | "overlap"
+    nbytes: int
+    upload_s: float  # host-side dispatch time of the upload
+    peer: Optional[int] = None
+    ttft_s: Optional[float] = None  # resolved by the frontend
+    placed_at: float = field(default=0.0, repr=False)
+
+
+class FleetModelStore:
+    """The fleet weight tier: per-node host caches + warm lookup.
+
+    ``acquire`` resolves one placement: device-resident weights are
+    reused as-is; a host hit re-uploads from the node's own cache; a
+    peer hit copies the staged shards from another node's cache first
+    (counted in ``bytes_peer``); a cold miss stages from ``params`` or
+    ``loader()``.  Every non-device tier pins the host entry until
+    ``release`` — live pods' weights are never evictable.
+    """
+
+    def __init__(self, host_budget_bytes: int = 4 << 30):
+        self.host_budget_bytes = int(host_budget_bytes)
+        self._caches: Dict[int, HostWeightCache] = {}
+        self._lock = threading.Lock()
+        self.device_hits = 0
+        self.host_hits = 0
+        self.peer_hits = 0
+        self.cold_misses = 0
+        self.bytes_h2d = 0
+        self.bytes_peer = 0
+        self.bytes_staged = 0
+        self.events: List[ColdStartEvent] = []
+
+    def _cache_for(self, node: int) -> HostWeightCache:
+        cache = self._caches.get(node)
+        if cache is None:
+            cache = self._caches[node] = HostWeightCache(self.host_budget_bytes)
+        return cache
+
+    def warm_nodes(self, key: str) -> List[int]:
+        """Nodes whose host cache holds ``key`` (ascending id)."""
+        with self._lock:
+            return sorted(n for n, c in self._caches.items() if c.contains(key))
+
+    def staged_nbytes(self, key: str) -> Optional[int]:
+        """Byte size of ``key``'s staged weights, from any node's cache."""
+        with self._lock:
+            for cache in self._caches.values():
+                staged = cache.peek(key)
+                if staged is not None:
+                    return staged.nbytes
+        return None
+
+    def acquire(
+        self,
+        node: int,
+        key: str,
+        model,
+        params=None,
+        loader: Optional[Callable[[], Any]] = None,
+        *,
+        resident: bool = False,
+        mode: str = "overlap",
+    ):
+        """Source ``key``'s weights for a placement on ``node``.
+
+        Returns ``(device_params, ColdStartEvent)`` and pins the host
+        entry backing them (pair with :meth:`release`).
+        """
+        with self._lock:
+            cache = self._cache_for(node)
+            if resident:
+                # Device tier: the node's engine ModelStore already holds
+                # the pytree — ``params`` is returned untouched (it may be
+                # None; the engine deploy ignores it on a store hit).
+                self.device_hits += 1
+                cache.pin(key)
+                event = ColdStartEvent(key, node, "device", mode, 0, 0.0,
+                                       placed_at=perf_counter())
+                self.events.append(event)
+                return params, event
+
+            peer = None
+            if cache.contains(key):
+                tier = "host"
+                self.host_hits += 1
+                staged = cache.get(key)
+            else:
+                peer = next(
+                    (n for n in sorted(self._caches)
+                     if n != node and self._caches[n].contains(key)),
+                    None,
+                )
+                if peer is not None:
+                    tier = "peer"
+                    self.peer_hits += 1
+                    staged = self._caches[peer].peek(key).copy()
+                    self.bytes_peer += staged.nbytes
+                    cache.put(key, staged)
+                else:
+                    tier = "cold"
+                    self.cold_misses += 1
+                    if params is None and loader is None:
+                        raise ValueError(
+                            f"cold miss for {key!r} with neither params "
+                            "nor a loader")
+                    source = params if params is not None else loader()
+                    staged = stage_params(model, source)
+                    self.bytes_staged += staged.nbytes
+                    cache.put(key, staged)
+            cache.pin(key)
+
+        t0 = perf_counter()
+        device_params = upload_params(staged, mode=mode)
+        upload_s = perf_counter() - t0
+        with self._lock:
+            self.bytes_h2d += staged.nbytes
+            event = ColdStartEvent(key, node, tier, mode, staged.nbytes,
+                                   upload_s, peer=peer, placed_at=perf_counter())
+            self.events.append(event)
+        return device_params, event
+
+    def release(self, node: int, key: str) -> None:
+        """Unpin one placement's hold on ``key``'s host entry."""
+        with self._lock:
+            cache = self._caches.get(node)
+            if cache is not None:
+                cache.unpin(key)
+
+    def drop_node(self, node: int) -> None:
+        """A node died: its host RAM (and every pin on it) is gone."""
+        with self._lock:
+            cache = self._caches.pop(node, None)
+            if cache is not None:
+                cache.clear()
+
+    def cache(self, node: int) -> HostWeightCache:
+        with self._lock:
+            return self._cache_for(node)
+
+    def telemetry(self) -> dict:
+        with self._lock:
+            return {
+                "device_hits": self.device_hits,
+                "host_hits": self.host_hits,
+                "peer_hits": self.peer_hits,
+                "cold_misses": self.cold_misses,
+                "bytes_h2d": self.bytes_h2d,
+                "bytes_peer": self.bytes_peer,
+                "bytes_staged": self.bytes_staged,
+                "host_used_bytes": {
+                    n: c.used_bytes() for n, c in self._caches.items()
+                },
+                "events": len(self.events),
+            }

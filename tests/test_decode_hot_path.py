@@ -183,9 +183,13 @@ def test_fused_migration_matches_host_path(tiny_model, tiny_params,
                          max_batch=2, max_len=32, batching=batching,
                          block_size=8, fused=fused)
         reqs = [fe.submit("f", p, max_new_tokens=n) for p, n in arrivals]
-        fe.pump(budget_s=0.05)  # some slots mid-decode
-        src = fe.engines[0].instances
-        assert src and any(i.n_active() > 0 for i in src.values())
+        # A fixed number of steps (not a wall-clock pump budget) so slots
+        # are mid-decode at migration regardless of how warm the shared
+        # executor cache is.
+        inst0 = next(iter(fe.engines[0].instances.values()))
+        inst0.run_step()
+        inst0.run_step()
+        assert inst0.n_active() > 0
         new_handle = fe.migrate("f", h0, tiny_model, tiny_params, target=1)
         assert new_handle is not None
         tgt = next(iter(fe.engines[1].instances.values()))
@@ -212,8 +216,11 @@ def test_fused_retire_drain_matches_host_path(tiny_model, tiny_params,
                               block_size=8, fused=fused)
         reqs = [engine.submit("f", p, max_new_tokens=n)
                 for p, n in arrivals]
-        engine.pump(budget_s=0.05)
+        # Step a fixed count (not a wall-clock pump) so slots are still
+        # mid-decode at retire even with warm shared executor caches.
         inst = engine.instances[iid]
+        inst.run_step()
+        inst.run_step()
         assert inst.n_active() > 0, "test needs live decode slots"
         strays = engine.retire(iid, strip_queue=True)
         engine.pump(budget_s=120.0)

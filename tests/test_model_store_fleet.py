@@ -1,0 +1,349 @@
+"""Fleet model store: host-RAM weight tier, staging, pipelined upload.
+
+Covers the cold-start subsystem (``repro.serving.modelstore``) — the
+per-node ``HostWeightCache`` (byte-budgeted LRU with refcount pinning),
+``stage_params``/``upload_params`` (per-layer shards, blocking vs
+overlapped upload bit-identity), and ``FleetModelStore`` tier
+resolution (device/host/peer/cold) with pins, telemetry, and node-death
+semantics — plus the per-node ``ModelStore`` eviction edge cases and
+the Fig.-13 per-node storage-server accounting
+(``node_shared_footprint``) the tier changes.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.model_sharing import (SERVER_CONTEXT_OVERHEAD, MemoryModel,
+                                      ModelStore, node_shared_footprint,
+                                      pytree_nbytes)
+from repro.serving import (ClusterFrontend, FleetModelStore, HostWeightCache,
+                           StagedWeights, stage_params, upload_params)
+from repro.core.resources import Alloc
+
+# -------------------------------------------------------------------------
+# helpers
+# -------------------------------------------------------------------------
+
+_LIST_TREEDEF = jax.tree_util.tree_structure([0])
+
+
+def fake_staged(nbytes: int) -> StagedWeights:
+    """A StagedWeights of one flat uint8 leaf — cheap cache ballast."""
+    arr = np.zeros(nbytes, dtype=np.uint8)
+    return StagedWeights(_LIST_TREEDEF, [arr], [False], arr.nbytes)
+
+
+# -------------------------------------------------------------------------
+# HostWeightCache: LRU + pinning
+# -------------------------------------------------------------------------
+
+
+def test_cache_lru_evicts_oldest_unpinned_first():
+    cache = HostWeightCache(capacity_bytes=100)
+    cache.put("a", fake_staged(40))
+    cache.put("b", fake_staged(40))
+    cache.get("a")  # a is now most-recently-used
+    cache.put("c", fake_staged(40))  # needs 20 bytes: evicts b, not a
+    assert cache.keys() == ["a", "c"]
+    assert cache.evictions == 1
+    assert cache.used_bytes() == 80
+
+
+def test_cache_refuses_to_evict_pinned_entries():
+    cache = HostWeightCache(capacity_bytes=100)
+    cache.put("a", fake_staged(60))
+    cache.pin("a")
+    with pytest.raises(MemoryError, match="pinned"):
+        cache.put("b", fake_staged(60))
+    # The failed put must not have dropped the pinned entry.
+    assert cache.contains("a") and cache.pins("a") == 1
+    # Unpinning makes it evictable and the same put succeeds.
+    cache.unpin("a")
+    cache.put("b", fake_staged(60))
+    assert cache.keys() == ["b"]
+    assert cache.evictions == 1
+
+
+def test_cache_eviction_skips_pinned_evicts_next_lru():
+    cache = HostWeightCache(capacity_bytes=100)
+    cache.put("a", fake_staged(40))  # oldest, but pinned
+    cache.put("b", fake_staged(40))
+    cache.pin("a")
+    cache.put("c", fake_staged(40))  # must step over a, evict b
+    assert cache.keys() == ["a", "c"]
+
+
+def test_cache_pin_unpin_bookkeeping():
+    cache = HostWeightCache(capacity_bytes=100)
+    cache.put("a", fake_staged(10))
+    cache.pin("a")
+    cache.pin("a")
+    assert cache.pins("a") == 2
+    cache.unpin("a")
+    cache.unpin("a")
+    cache.unpin("a")  # floor at zero, never negative
+    assert cache.pins("a") == 0
+    # pin/unpin of a missing key are no-ops, not errors.
+    cache.pin("ghost")
+    cache.unpin("ghost")
+    assert cache.pins("ghost") == 0
+
+
+def test_cache_put_existing_key_refreshes_recency_without_duplicating():
+    cache = HostWeightCache(capacity_bytes=100)
+    cache.put("a", fake_staged(40))
+    cache.put("b", fake_staged(40))
+    cache.put("a", fake_staged(40))  # refresh, no second copy
+    assert cache.used_bytes() == 80
+    cache.put("c", fake_staged(40))  # evicts b (a was refreshed)
+    assert cache.keys() == ["a", "c"]
+
+
+def test_cache_oversized_entry_and_bad_capacity():
+    with pytest.raises(ValueError):
+        HostWeightCache(capacity_bytes=0)
+    cache = HostWeightCache(capacity_bytes=50)
+    with pytest.raises(MemoryError):
+        cache.put("big", fake_staged(60))
+
+
+def test_cache_drop_and_clear():
+    cache = HostWeightCache(capacity_bytes=100)
+    cache.put("a", fake_staged(10))
+    cache.put("b", fake_staged(10))
+    cache.drop("a")
+    cache.drop("ghost")  # idempotent
+    assert cache.keys() == ["b"]
+    cache.clear()
+    assert cache.used_bytes() == 0 and not cache.contains("b")
+
+
+# -------------------------------------------------------------------------
+# stage_params / upload_params: per-layer shards, upload bit-identity
+# -------------------------------------------------------------------------
+
+
+def test_stage_splits_layer_stacked_leaves(tiny_model, tiny_params):
+    staged = stage_params(tiny_model, tiny_params)
+    assert staged.nbytes == pytree_nbytes(tiny_params)
+    assert any(staged.stacked), "no per-layer shards were produced"
+    n_layers = tiny_model.cfg.n_layers
+    for leaf, stacked in zip(staged.leaves, staged.stacked):
+        if stacked:
+            assert isinstance(leaf, list) and len(leaf) == n_layers
+            assert all(s.flags["C_CONTIGUOUS"] for s in leaf)
+        else:
+            assert isinstance(leaf, np.ndarray)
+
+
+@pytest.mark.parametrize("mode", ["blocking", "overlap"])
+def test_upload_roundtrips_bit_identical(tiny_model, tiny_params, mode):
+    staged = stage_params(tiny_model, tiny_params)
+    up = jax.block_until_ready(upload_params(staged, mode=mode))
+    orig = jax.tree_util.tree_leaves(tiny_params)
+    new = jax.tree_util.tree_leaves(up)
+    assert len(orig) == len(new)
+    for a, b in zip(orig, new):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_upload_rejects_unknown_mode(tiny_model, tiny_params):
+    staged = stage_params(tiny_model, tiny_params)
+    with pytest.raises(ValueError, match="unknown upload mode"):
+        upload_params(staged, mode="streaming")
+
+
+def test_staged_copy_is_deep():
+    staged = fake_staged(16)
+    clone = staged.copy()
+    clone.leaves[0][:] = 7
+    assert not np.any(staged.leaves[0]), "copy aliased the source shards"
+    assert clone.nbytes == staged.nbytes
+
+
+# -------------------------------------------------------------------------
+# FleetModelStore: tier resolution, pins, telemetry
+# -------------------------------------------------------------------------
+
+
+def test_fleet_tier_order_cold_host_peer(tiny_model, tiny_params):
+    store = FleetModelStore()
+    # Cold miss on node 0: stages from params, uploads, pins.
+    params, e = store.acquire(0, "fn", tiny_model, tiny_params)
+    assert e.tier == "cold" and e.peer is None and e.nbytes > 0
+    assert store.cache(0).pins("fn") == 1
+    assert store.warm_nodes("fn") == [0]
+    # Host hit on the same node.
+    _, e = store.acquire(0, "fn", tiny_model)
+    assert e.tier == "host"
+    assert store.cache(0).pins("fn") == 2
+    # Peer hit on node 1: copies node 0's shards, both warm after.
+    _, e = store.acquire(1, "fn", tiny_model)
+    assert e.tier == "peer" and e.peer == 0
+    assert store.warm_nodes("fn") == [0, 1]
+    t = store.telemetry()
+    assert (t["cold_misses"], t["host_hits"], t["peer_hits"]) == (1, 1, 1)
+    assert t["bytes_peer"] == e.nbytes
+    assert t["bytes_staged"] == e.nbytes
+    assert t["bytes_h2d"] == 3 * e.nbytes
+    assert t["events"] == 3
+
+
+def test_fleet_device_tier_passes_params_through(tiny_model, tiny_params):
+    store = FleetModelStore()
+    store.acquire(0, "fn", tiny_model, tiny_params)
+    sentinel = object()
+    out, e = store.acquire(0, "fn", tiny_model, sentinel, resident=True)
+    assert out is sentinel and e.tier == "device" and e.nbytes == 0
+    assert store.device_hits == 1
+    assert store.cache(0).pins("fn") == 2  # device tier still pins
+
+
+def test_fleet_release_unpins_and_drop_node_forgets(tiny_model, tiny_params):
+    store = FleetModelStore()
+    store.acquire(0, "fn", tiny_model, tiny_params)
+    store.release(0, "fn")
+    assert store.cache(0).pins("fn") == 0
+    store.release(5, "fn")  # unknown node: no-op
+    assert store.staged_nbytes("fn") == pytree_nbytes(tiny_params)
+    store.drop_node(0)
+    assert store.warm_nodes("fn") == []
+    assert store.staged_nbytes("fn") is None
+
+
+def test_fleet_cold_miss_without_source_raises(tiny_model):
+    store = FleetModelStore()
+    with pytest.raises(ValueError, match="cold miss"):
+        store.acquire(0, "fn", tiny_model)
+    # A loader-backed miss works and is only called once.
+    calls = []
+
+    def loader():
+        calls.append(1)
+        return tiny_model.init(jax.random.key(0))
+
+    _, e = store.acquire(1, "fn", tiny_model, loader=loader)
+    assert e.tier == "cold" and len(calls) == 1
+    store.acquire(1, "fn", tiny_model)  # host hit: loader not re-run
+    assert len(calls) == 1
+
+
+def test_fleet_loader_preferred_only_on_missing_params(tiny_model,
+                                                       tiny_params):
+    store = FleetModelStore()
+    _, e = store.acquire(0, "fn", tiny_model, tiny_params,
+                         loader=lambda: pytest.fail("params given"))
+    assert e.tier == "cold"
+
+
+# -------------------------------------------------------------------------
+# Frontend integration: shared executors make redeploys compile-free
+# -------------------------------------------------------------------------
+
+
+def test_instances_share_jit_executors(tiny_model, tiny_params):
+    fe = ClusterFrontend(n_nodes=2, window=0.05)
+    alloc = Alloc(sm=0.3, quota_request=0.3, quota_limit=0.4)
+    h0 = fe.place_instance("f", tiny_model, tiny_params, alloc,
+                           max_batch=2, max_len=32)
+    h1 = fe.place_instance("f", tiny_model, tiny_params, alloc,
+                           max_batch=2, max_len=32)
+    assert h0 and h1
+    insts = [i for eng in fe.engines for i in eng.instances.values()]
+    assert len(insts) == 2
+    a, b = insts
+    # Same model => the jit wrappers (and their compile caches) are the
+    # same objects; a redeploy never re-traces.
+    assert a._prefill is b._prefill
+    assert a._decode is b._decode
+    assert a._decode_tok is b._decode_tok
+    assert "_jit_executors" in tiny_model.__dict__
+
+
+# -------------------------------------------------------------------------
+# Per-node ModelStore eviction edge cases (paper §3.5 STORE/GET)
+# -------------------------------------------------------------------------
+
+
+def _tree(nbytes: int):
+    return [np.zeros(nbytes, dtype=np.uint8)]
+
+
+def test_model_store_refuses_evicting_referenced_entries():
+    store = ModelStore(capacity_bytes=100)
+    store.store("a", _tree(60))
+    store.get("a")  # refcount 1: not evictable
+    with pytest.raises(MemoryError, match="over capacity"):
+        store.store("b", _tree(60))
+    assert store.contains("a")
+    # Releasing the reference makes the same store succeed.
+    store.put_back("a")
+    store.store("b", _tree(60))
+    assert store.contains("b") and not store.contains("a")
+
+
+def test_model_store_refcount_underflow_raises():
+    store = ModelStore()
+    store.store("a", _tree(8))
+    store.get("a")
+    store.put_back("a")
+    with pytest.raises(RuntimeError, match="underflow"):
+        store.put_back("a")
+
+
+def test_model_store_overwrite_preserves_refcount():
+    store = ModelStore()
+    store.store("a", _tree(8))
+    store.get("a")
+    store.store("a", _tree(16))  # weight push while an instance holds it
+    assert store.refcount("a") == 1
+    assert store.used_bytes() == 16
+
+
+def test_model_store_get_miss_without_loader_raises():
+    store = ModelStore()
+    with pytest.raises(KeyError):
+        store.get("ghost")
+
+
+# -------------------------------------------------------------------------
+# Fig.-13 accounting: one storage-server context per NODE, not per fn
+# -------------------------------------------------------------------------
+
+
+def test_memory_model_share_slope_and_intercept():
+    mm = MemoryModel(weight_bytes=500 << 20, framework_bytes=800 << 20)
+    assert mm.footprint(0, sharing=True) == 0
+    assert mm.footprint(3, sharing=False) == 3 * (mm.weight_bytes
+                                                  + mm.framework_bytes)
+    # share(n) = weights + overhead + n * framework: the slope is the
+    # per-instance framework cost, the intercept the shared weight copy
+    # plus the storage-server context (Fig. 13's hatched area).
+    for n in range(1, 5):
+        assert (mm.footprint(n + 1, sharing=True)
+                - mm.footprint(n, sharing=True)) == mm.framework_bytes
+    assert (mm.footprint(1, sharing=True) - mm.framework_bytes
+            == mm.weight_bytes + SERVER_CONTEXT_OVERHEAD)
+    # server=False drops exactly the context, nothing else.
+    assert (mm.footprint(2, sharing=True)
+            - mm.footprint(2, sharing=True, server=False)
+            == SERVER_CONTEXT_OVERHEAD)
+
+
+def test_node_shared_footprint_charges_one_context_per_node():
+    a = MemoryModel(weight_bytes=100 << 20, framework_bytes=50 << 20)
+    b = MemoryModel(weight_bytes=200 << 20, framework_bytes=80 << 20,
+                    server_overhead=400 << 20)
+    got = node_shared_footprint([(a, 2), (b, 1), (a, 0)])
+    # Zero-instance entries are skipped; overhead charged once (the max),
+    # not summed per function.
+    expect = (a.footprint(2, sharing=True, server=False)
+              + b.footprint(1, sharing=True, server=False)
+              + max(a.server_overhead, b.server_overhead))
+    assert got == expect
+    per_fn = a.footprint(2, sharing=True) + b.footprint(1, sharing=True)
+    assert per_fn - got == min(a.server_overhead, b.server_overhead)
+    assert node_shared_footprint([]) == 0
+    assert node_shared_footprint([(a, 0)]) == 0

@@ -199,9 +199,12 @@ def test_blocks_released_on_retire_drain(tiny_model, tiny_params):
     arrivals = _prompts([(8, 6), (8, 6), (8, 3)])
     reqs = [engine.submit("f", p, max_new_tokens=n) for p, n in arrivals]
     # Admit into slots, then retire mid-flight: queued strays come back,
-    # occupied slots keep decoding under the token scheduler.
-    engine.pump(budget_s=0.05)
+    # occupied slots keep decoding under the token scheduler.  Step a
+    # fixed count (not a wall-clock pump) so slots are still mid-decode
+    # at retire even with warm shared executor caches.
     inst = engine.instances[ids[0]]
+    inst.run_step()
+    inst.run_step()
     alloc_ref = inst.allocator
     assert alloc_ref.blocks_in_use > 0, "test needs live paged slots"
     strays = engine.retire(ids[0], strip_queue=True)
@@ -421,7 +424,15 @@ def test_paged_evict_reroute_across_nodes(tiny_model, tiny_params):
                              batching="paged", block_size=8)
     reqs = [frontend.submit("f", p, max_new_tokens=n)
             for p, n in _prompts([(8, 6)] * 6, rng_seed=9)]
-    frontend.pump(budget_s=0.05)  # some admitted, some still queued
+    # Fixed step counts (not a wall-clock pump) so each node has slots
+    # admitted AND requests still queued at evict time, regardless of
+    # how warm the shared executor caches are.
+    insts = [i for e in frontend.engines for i in e.instances.values()]
+    assert len(insts) == 2
+    for inst in insts:
+        inst.run_step()
+        inst.run_step()
+        assert inst.n_active() > 0
     frontend.evict(h0)  # queued strays re-route to the other node
     done = frontend.pump(budget_s=120.0)
     assert done == len(reqs) and all(r.done for r in reqs)

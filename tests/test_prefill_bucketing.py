@@ -24,6 +24,10 @@ def test_bucket_len_rounds_up_to_power_of_two():
 
 
 def test_prompts_in_one_bucket_share_one_compile(tiny_model, tiny_params):
+    # Executors are shared per model across instances (and so across the
+    # session-scoped fixture's tests): start from a fresh cache so the
+    # lowering counts below are exact, not polluted by earlier tests.
+    tiny_model.__dict__.pop("_jit_executors", None)
     engine = ServingEngine(window=0.1)
     (inst_id,) = engine.deploy("lm", tiny_model, tiny_params, ALLOC,
                                max_batch=2, max_len=32)
