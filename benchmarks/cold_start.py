@@ -41,13 +41,12 @@ Run:  PYTHONPATH=src python -m benchmarks.cold_start [--smoke]
 from __future__ import annotations
 
 import gc
-import json
 import time
 
 import jax
 import numpy as np
 
-from benchmarks.common import Row
+from benchmarks.common import Row, write_report
 from repro.core.resources import Alloc
 from repro.models import build_model
 from repro.models.config import ModelConfig
@@ -210,8 +209,7 @@ def run(smoke: bool = False) -> list[Row]:
     assert floor["peer_warm"] < t_cold, (
         f"peer-warm TTFT {floor['peer_warm']:.3f}s did not beat cold "
         f"{t_cold:.3f}s")
-    with open("BENCH_coldstart.json", "w") as f:
-        json.dump(report, f, indent=2)
+    write_report("BENCH_coldstart.json", report)
     return rows
 
 

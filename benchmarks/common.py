@@ -3,8 +3,23 @@
 from __future__ import annotations
 
 import dataclasses
+import json
+import pathlib
 import time
 from typing import Callable, Optional
+
+# All BENCH_*.json artifacts land in the repo root regardless of the CWD
+# the suite was launched from — CI uploads them by that fixed path and the
+# perf-trajectory files are committed there.
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def write_report(name: str, payload: dict) -> pathlib.Path:
+    """Dump one benchmark's JSON report to ``REPO_ROOT/name``."""
+    path = REPO_ROOT / name
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    return path
 
 
 @dataclasses.dataclass

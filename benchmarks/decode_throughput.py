@@ -16,31 +16,45 @@ round on a tiny deterministic config (real jitted executors, CPU-cheap):
   asserts the overlapped aggregate tokens/s is >= 0.9x the serialized
   reference (``overlap=False``: dispatch + sync one instance at a time).
 
-Emits ``BENCH_decode.json`` (the perf-trajectory artifact uploaded by
-CI) and runs as a tier-1 smoke step with ``--smoke``.
+``--speculate`` instead benchmarks the **speculative draft/verify round**
+on the same hot path (``run_spec``): draft == target on the
+synthetic-agreement harness, so greedy acceptance is ~1.0 and the
+effective decode tokens/s must reach ``SPEC_SPEEDUP_FLOOR`` x the plain
+fused round (``SPEC_SMOKE_FLOOR`` under ``--smoke``), while still
+spending exactly one host sync per pump pass and emitting a
+bit-identical greedy token stream.
 
-Run:  PYTHONPATH=src python -m benchmarks.decode_throughput [--smoke]
+Emits ``BENCH_decode.json`` / ``BENCH_spec.json`` (the perf-trajectory
+artifacts uploaded by CI, committed at the repo root) and runs as a
+tier-1 smoke step with ``--smoke``.
+
+Run:  PYTHONPATH=src python -m benchmarks.decode_throughput \
+          [--smoke] [--speculate]
 """
 
 from __future__ import annotations
 
-import json
 import time
 
 import jax
 import numpy as np
 
-from benchmarks.common import Row
+from benchmarks.common import Row, write_report
 from repro.core.resources import Alloc
 from repro.models import build_model
 from repro.models.config import ModelConfig
 from repro.serving import ServingEngine
+from repro.serving.speculative import SpecConfig, expected_tokens_per_round
 
 MAX_BATCH = 4
 MAX_LEN = 64
 BLOCK_SIZE = 16
 PROMPT_LEN = 8
 OVERLAP_FLOOR = 0.9  # overlapped >= floor x serialized (relative check)
+SPEC_K = 6  # draft depth for the speculative benchmark
+SPEC_ACCEPT_FLOOR = 0.6  # measured acceptance floor (draft == target)
+SPEC_SPEEDUP_FLOOR = 1.5  # effective tokens/s vs plain fused greedy
+SPEC_SMOKE_FLOOR = 0.9  # CI smoke floor (shared runners, tiny workload)
 
 
 def _model():
@@ -51,9 +65,57 @@ def _model():
     return model, model.init(jax.random.key(7))
 
 
+DRAFT_LAYERS = 2
+TARGET_LAYERS = 12
+
+
+def _spec_models():
+    """Synthetic-agreement draft/target pair.
+
+    The target is a ``TARGET_LAYERS``-deep model whose layers beyond
+    ``DRAFT_LAYERS`` have zeroed output projections (``attn/wo`` and
+    ``mlp/w_down``), so they contribute exactly 0 to the residual stream;
+    embed / head / ln_f and the live layers are shared with the
+    ``DRAFT_LAYERS``-deep draft.  Target and draft logits are therefore
+    bit-identical (greedy acceptance ~1.0) while a draft step costs
+    ``DRAFT_LAYERS / TARGET_LAYERS`` of a target step — the regime
+    speculative decoding is for, constructed instead of trained.
+    """
+    import jax.numpy as jnp
+
+    dcfg = ModelConfig(name="bench-draft", family="dense",
+                       n_layers=DRAFT_LAYERS, d_model=32, n_heads=4,
+                       n_kv_heads=2, d_ff=64, vocab_size=64,
+                       vocab_pad_multiple=32)
+    tcfg = ModelConfig(name="bench-target", family="dense",
+                       n_layers=TARGET_LAYERS, d_model=32, n_heads=4,
+                       n_kv_heads=2, d_ff=64, vocab_size=64,
+                       vocab_pad_multiple=32)
+    draft = build_model(dcfg)
+    dparams = draft.init(jax.random.key(7))
+    target = build_model(tcfg)
+    tparams = target.init(jax.random.key(8))
+
+    def splice(path, tleaf):
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        dleaf = dparams
+        for k in keys:
+            dleaf = dleaf[k]
+        if keys[0] != "layers":
+            return dleaf  # embed / head / ln_f: shared verbatim
+        tail = tleaf[DRAFT_LAYERS:]
+        if keys[-1] in ("wo", "w_down"):
+            tail = jnp.zeros_like(tail)
+        return jnp.concatenate([dleaf, tail], axis=0)
+
+    tparams = jax.tree_util.tree_map_with_path(splice, tparams)
+    return target, tparams, dcfg, dparams
+
+
 def _measure(model, params, *, batching: str, n_instances: int,
              overlap: bool, fused: bool = True, n_reqs: int,
-             max_new: int) -> dict:
+             max_new: int, speculate: SpecConfig | None = None,
+             draft_params=None) -> dict:
     """Serve ``n_reqs`` decode-heavy requests; returns the steady-state
     stats dict (tokens/s, syncs per round, paged uploads per round)."""
     engine = ServingEngine(window=0.1)
@@ -62,7 +124,8 @@ def _measure(model, params, *, batching: str, n_instances: int,
                   Alloc(sm=sm, quota_request=0.9, quota_limit=0.9),
                   n_instances=n_instances, max_batch=MAX_BATCH,
                   max_len=MAX_LEN, batching=batching,
-                  block_size=BLOCK_SIZE, fused=fused)
+                  block_size=BLOCK_SIZE, fused=fused, speculate=speculate,
+                  draft_params=draft_params)
     rng = np.random.default_rng(3)
 
     def submit(n):
@@ -90,11 +153,16 @@ def _measure(model, params, *, batching: str, n_instances: int,
                 for k, v in post.items())
     uploads = sum(v["uploads"] - pre.get(k, {}).get("uploads", 0)
                   for k, v in post.items())
+    proposed = sum(v["spec_proposed"] - pre.get(k, {}).get("spec_proposed", 0)
+                   for k, v in post.items())
+    accepted = sum(v["spec_accepted"] - pre.get(k, {}).get("spec_accepted", 0)
+                   for k, v in post.items())
     return {
         "batching": batching,
         "n_instances": n_instances,
         "overlap": overlap,
         "fused": fused,
+        "spec_k": speculate.k if speculate is not None else 0,
         "requests": len(reqs),
         "tokens": tokens,
         "elapsed_s": elapsed,
@@ -103,6 +171,10 @@ def _measure(model, params, *, batching: str, n_instances: int,
         "host_syncs": syncs,
         "syncs_per_round": syncs / max(steps, 1),
         "paged_uploads_per_round": uploads / max(steps, 1),
+        "spec_proposed": proposed,
+        "spec_accepted": accepted,
+        "acceptance": accepted / proposed if proposed else 0.0,
+        "tokens_out": [list(r.tokens_out) for r in reqs],
     }
 
 
@@ -111,6 +183,11 @@ def _best_of(n: int, measure) -> dict:
     the syncs/uploads counters are deterministic across repeats)."""
     results = [measure() for _ in range(n)]
     return max(results, key=lambda r: r["tokens_per_s"])
+
+
+def _strip(stats: dict) -> dict:
+    """Report form of a ``_measure`` dict (drop the raw token streams)."""
+    return {k: v for k, v in stats.items() if k != "tokens_out"}
 
 
 def run(smoke: bool = False) -> list[Row]:
@@ -137,9 +214,10 @@ def run(smoke: bool = False) -> list[Row]:
         serial = _best_of(repeats, lambda: _measure(
             model, params, batching=batching, n_instances=4,
             overlap=False, n_reqs=n_reqs, max_new=max_new))
-        report[batching] = {"single": single, "single_host_argmax": host,
-                            "colocated4_overlapped": multi,
-                            "colocated4_serialized": serial}
+        report[batching] = {"single": _strip(single),
+                            "single_host_argmax": _strip(host),
+                            "colocated4_overlapped": _strip(multi),
+                            "colocated4_serialized": _strip(serial)}
         rows += [
             Row("decode", f"{batching}.single_tokens_per_s",
                 single["tokens_per_s"]),
@@ -174,14 +252,98 @@ def run(smoke: bool = False) -> list[Row]:
             f"{batching}: overlapped 4-instance throughput "
             f"{multi['tokens_per_s']:.0f} tok/s < {OVERLAP_FLOOR}x the "
             f"serialized {serial['tokens_per_s']:.0f} tok/s")
-    with open("BENCH_decode.json", "w") as f:
-        json.dump(report, f, indent=2)
+    write_report("BENCH_decode.json", report)
+    return rows
+
+
+def run_spec(smoke: bool = False) -> list[Row]:
+    """Speculative decoding on the sync-free hot path (``--speculate``).
+
+    Draft == target (the synthetic-agreement harness): greedy acceptance
+    is ~1.0, so each verify round emits up to ``SPEC_K + 1`` tokens for
+    one pump pass — the effective tokens/s floor is pure hot-path
+    arithmetic, not model quality.  Asserts, per batching plane:
+
+    * exactly ONE host sync per pump pass with speculation on;
+    * measured acceptance >= ``SPEC_ACCEPT_FLOOR``;
+    * effective tokens/s >= floor x the plain fused greedy round
+      (``SPEC_SPEEDUP_FLOOR`` full, ``SPEC_SMOKE_FLOOR`` smoke);
+    * the emitted greedy token streams are bit-identical to the
+      non-speculative fused path.
+    """
+    n_reqs = 16 if smoke else 48
+    max_new = 12 if smoke else 24
+    repeats = 2
+    floor = SPEC_SMOKE_FLOOR if smoke else SPEC_SPEEDUP_FLOOR
+    model, params, dcfg, dparams = _spec_models()
+    spec_cfg = SpecConfig(draft_cfg=dcfg, k=SPEC_K)
+    report: dict = {"config": {"max_batch": MAX_BATCH, "max_len": MAX_LEN,
+                               "block_size": BLOCK_SIZE,
+                               "prompt_len": PROMPT_LEN, "n_reqs": n_reqs,
+                               "max_new_tokens": max_new, "spec_k": SPEC_K,
+                               "accept_floor": SPEC_ACCEPT_FLOOR,
+                               "speedup_floor": floor,
+                               "target_layers": TARGET_LAYERS,
+                               "draft_layers": DRAFT_LAYERS,
+                               "draft": "layer-spliced synthetic agreement "
+                                        "(bit-identical logits)"}}
+    rows: list[Row] = []
+    for batching in ("continuous", "paged"):
+        base = _best_of(repeats, lambda: _measure(
+            model, params, batching=batching, n_instances=1,
+            overlap=True, n_reqs=n_reqs, max_new=max_new))
+        spec = _best_of(repeats, lambda: _measure(
+            model, params, batching=batching, n_instances=1,
+            overlap=True, n_reqs=n_reqs, max_new=max_new,
+            speculate=spec_cfg, draft_params=dparams))
+        speedup = spec["tokens_per_s"] / max(base["tokens_per_s"], 1e-9)
+        expected = expected_tokens_per_round(SPEC_K, spec["acceptance"])
+        report[batching] = {"fused_greedy": _strip(base),
+                            "speculative": _strip(spec),
+                            "effective_speedup": speedup,
+                            "expected_tokens_per_round": expected}
+        rows += [
+            Row("spec", f"{batching}.effective_tokens_per_s",
+                spec["tokens_per_s"]),
+            Row("spec", f"{batching}.baseline_tokens_per_s",
+                base["tokens_per_s"],
+                note="PR-5 plain fused greedy round"),
+            Row("spec", f"{batching}.effective_speedup", speedup,
+                note=f"floor {floor}x at acceptance >= "
+                     f"{SPEC_ACCEPT_FLOOR}"),
+            Row("spec", f"{batching}.acceptance", spec["acceptance"],
+                note="draft == target: greedy acceptance ~1.0"),
+            Row("spec", f"{batching}.syncs_per_round",
+                spec["syncs_per_round"],
+                note="speculative round keeps the one-sync rule"),
+            Row("spec", f"{batching}.tokens_per_slot_round",
+                spec["acceptance"] * SPEC_K + 1,
+                note=f"accepted drafts + 1 bonus per slot per verify "
+                     f"round; <= k+1 = {SPEC_K + 1}"),
+        ]
+        # Hard acceptance checks.
+        assert spec["syncs_per_round"] <= 1.0 + 1e-9, (
+            f"{batching}: speculative path spent "
+            f"{spec['syncs_per_round']:.2f} host syncs per round")
+        assert spec["acceptance"] >= SPEC_ACCEPT_FLOOR, (
+            f"{batching}: acceptance {spec['acceptance']:.2f} < "
+            f"{SPEC_ACCEPT_FLOOR} with draft == target")
+        assert spec["tokens_out"] == base["tokens_out"], (
+            f"{batching}: speculative greedy stream diverged from the "
+            f"non-speculative fused stream")
+        assert speedup >= floor, (
+            f"{batching}: effective speedup {speedup:.2f}x < {floor}x "
+            f"(spec {spec['tokens_per_s']:.0f} vs base "
+            f"{base['tokens_per_s']:.0f} tok/s)")
+    write_report("BENCH_spec.json", report)
     return rows
 
 
 if __name__ == "__main__":
     import sys
 
-    rows = run(smoke="--smoke" in sys.argv[1:])
+    argv = sys.argv[1:]
+    entry = run_spec if "--speculate" in argv else run
+    rows = entry(smoke="--smoke" in argv)
     for r in rows:
         print(r.csv())

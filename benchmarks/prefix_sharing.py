@@ -27,10 +27,9 @@ tiny config, so it doubles as the tier-1 prefix-sharing smoke.
 
 from __future__ import annotations
 
-import json
 import time
 
-from benchmarks.common import Row
+from benchmarks.common import Row, write_report
 
 BLOCK = 8
 MAX_LEN = 64
@@ -165,8 +164,7 @@ def run() -> list[Row]:
                     mem["peak_bytes_ratio"] / RATIO_CEIL,
                     note=f"must be <= 1 (ceiling {RATIO_CEIL})"))
 
-    with open("BENCH_prefix.json", "w") as f:
-        json.dump(report, f, indent=2)
+    write_report("BENCH_prefix.json", report)
     return rows
 
 

@@ -11,6 +11,11 @@
   head   headline             3.15x / 1.34x / 3.13x aggregate claims
   roof   roofline_table       (arch x shape x mesh) roofline from dry-run
   cold   cold_start           fleet model-store cold-start tiers (TTFT)
+  decode decode_throughput    sync-free fused decode hot path
+  spec   decode_throughput    speculative draft/verify round (--speculate)
+
+Every module writes its ``BENCH_*.json`` artifact to the repo root
+(``benchmarks.common.write_report``) regardless of the launch CWD.
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only fig10,fig11]
 Output: ``bench,metric,value,paper_target,status,note`` CSV rows; exits
@@ -25,18 +30,21 @@ import time
 
 from benchmarks.common import HEADER, Row
 
+# (key, module, entry-point attr): one module may expose several benches.
 MODULES = [
-    ("fig8", "benchmarks.profiler_curves"),
-    ("fig9", "benchmarks.isolation"),
-    ("fig10", "benchmarks.spatial_sharing"),
-    ("fig11", "benchmarks.scheduler_packing"),
-    ("fig12", "benchmarks.autoscale_slo"),
-    ("fig13", "benchmarks.model_sharing_mem"),
-    ("fault", "benchmarks.fault_tolerance"),
-    ("prefix", "benchmarks.prefix_sharing"),
-    ("head", "benchmarks.headline"),
-    ("roof", "benchmarks.roofline_table"),
-    ("cold", "benchmarks.cold_start"),
+    ("fig8", "benchmarks.profiler_curves", "run"),
+    ("fig9", "benchmarks.isolation", "run"),
+    ("fig10", "benchmarks.spatial_sharing", "run"),
+    ("fig11", "benchmarks.scheduler_packing", "run"),
+    ("fig12", "benchmarks.autoscale_slo", "run"),
+    ("fig13", "benchmarks.model_sharing_mem", "run"),
+    ("fault", "benchmarks.fault_tolerance", "run"),
+    ("prefix", "benchmarks.prefix_sharing", "run"),
+    ("head", "benchmarks.headline", "run"),
+    ("roof", "benchmarks.roofline_table", "run"),
+    ("cold", "benchmarks.cold_start", "run"),
+    ("decode", "benchmarks.decode_throughput", "run"),
+    ("spec", "benchmarks.decode_throughput", "run_spec"),
 ]
 
 
@@ -44,7 +52,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset "
-                         "(fig8..fig13,fault,prefix,head,roof,cold)")
+                         "(fig8..fig13,fault,prefix,head,roof,cold,"
+                         "decode,spec)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -52,13 +61,13 @@ def main() -> None:
     all_rows: list[Row] = []
     print(HEADER)
     t_total = time.perf_counter()
-    for key, modname in MODULES:
+    for key, modname, attr in MODULES:
         if only and key not in only:
             continue
         t0 = time.perf_counter()
         mod = importlib.import_module(modname)
         try:
-            rows = mod.run()
+            rows = getattr(mod, attr)()
         except Exception as e:  # noqa: BLE001 — report and keep going
             rows = [Row(key, "crashed", 0.0, target=1.0, tol=0.0,
                         note=f"{type(e).__name__}: {e}")]

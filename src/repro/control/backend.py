@@ -152,12 +152,21 @@ class LiveBackend:
     def __init__(self, frontend: Any):
         self.frontend = frontend
         self._models: dict[str, tuple[Any, Any]] = {}
+        self._drafts: dict[str, Any] = {}
 
     def register(self, spec: FunctionSpec) -> None:
         if spec.model_factory is None:
             raise ValueError(
                 f"spec {spec.name!r} needs a model_factory for live serving")
         self._models[spec.name] = spec.model_factory()
+        if spec.speculate is not None:
+            if spec.draft_factory is None:
+                raise ValueError(
+                    f"spec {spec.name!r} sets speculate but no "
+                    f"draft_factory for the draft weights")
+            # Draft weights built once per spec, shared by every placement
+            # through the per-node store (same sharing as the target).
+            self._drafts[spec.name] = spec.draft_factory()
 
     def place(self, spec: FunctionSpec,
               point: ProfilePoint) -> Optional[str]:
@@ -183,7 +192,9 @@ class LiveBackend:
             batching=spec.batching, framework_bytes=spec.framework_bytes,
             block_size=spec.block_size, n_kv_blocks=n_kv_blocks,
             prefix_sharing=spec.prefix_sharing,
-            kv_shared_frac=shared_frac)
+            kv_shared_frac=shared_frac,
+            speculate=spec.speculate,
+            draft_params=self._drafts.get(spec.name))
 
     def evict(self, spec: FunctionSpec, pod_id: str) -> None:
         # Same mid-tick failure tolerance as SimBackend.evict.

@@ -196,6 +196,19 @@ class FunctionSpec:
         measures the real thing through the fleet model store and reports
         it in ``ClusterFrontend.cold_start_events()``.  0 keeps the
         legacy instant-ready model.
+      speculate: speculative-decoding axis — a
+        ``repro.serving.speculative.SpecConfig`` (duck-typed here so the
+        control plane stays import-free of the serving engine).  Live
+        placements run the draft/verify round on the fused hot path; the
+        profile table should carry the matching ``spec_k`` / ``acceptance``
+        so Alg. 1 budgets *effective* tokens/s.  The simulator treats the
+        axis as already folded into the profile throughputs, which keeps
+        sim-vs-live decision signatures equal with the axis on.
+      draft_factory: live backend only — builds the draft model's params
+        once at registration (the draft config ships inside ``speculate``).
+        Required when ``speculate`` is set on a live fleet; the weights are
+        staged per node under ``"{fn}#draft"`` and admission charges them
+        on top of the target weights.
       curve: simulator backend only — the calibrated ``ServiceCurve``.
     """
 
@@ -218,6 +231,8 @@ class FunctionSpec:
     kv_shared_frac: float = 0.0
     framework_bytes: int = DEFAULT_FRAMEWORK_BYTES
     cold_start_s: float = 0.0
+    speculate: Optional[Any] = None
+    draft_factory: Optional[Callable[[], Any]] = None
     curve: Optional[ServiceCurve] = None
 
     def __post_init__(self) -> None:
@@ -251,6 +266,14 @@ class FunctionSpec:
         if self.cold_start_s < 0.0:
             raise ValueError(
                 f"cold_start_s must be >= 0, got {self.cold_start_s}")
+        if self.speculate is not None:
+            if self.batching == "static":
+                raise ValueError(
+                    "speculative decoding needs a slot batching mode "
+                    "(continuous/paged)")
+            if getattr(self.speculate, "k", 0) < 1:
+                raise ValueError(
+                    "speculate must be a SpecConfig-like object with k >= 1")
 
     def feasible_points(self) -> list[ProfilePoint]:
         """Profile points meeting the SLO (all points when none do, so the

@@ -25,7 +25,7 @@ import time
 from typing import Callable, Sequence
 
 from repro.core.cluster import Cluster
-from repro.core.scaling import ProfilePoint
+from repro.core.scaling import ProfilePoint, expected_tokens_per_round
 from repro.core.workload import Request, ServiceCurve, poisson_arrivals
 
 TEMPORAL_GRID: tuple[float, ...] = (0.2, 0.4, 0.6, 0.8, 1.0)
@@ -129,6 +129,9 @@ def measure_engine_profile(
     kv_budget_bytes: int = 0,
     kv_block_bytes: int = 0,
     kv_shared_frac: float = 0.0,
+    sampling=None,
+    speculate=None,
+    draft_params=None,
 ) -> list[ProfilePoint]:
     """Spec-ready ``{<F, S, Q, T>}`` table measured on the REAL jitted
     executors (ROADMAP "Live profiler backend for specs").
@@ -152,6 +155,16 @@ def measure_engine_profile(
     paged capacity and the shared-fraction axis
     (``ProfilePoint.kv_blocks`` / ``kv_shared_frac``) as in
     :func:`profile_points`.
+
+    ``speculate`` (a ``repro.serving.speculative.SpecConfig``) profiles
+    the speculative draft/verify hot path: ``draft_params`` are staged
+    next to the target weights and each trial drives the real fused
+    speculative round.  The measured throughput is then already
+    *effective* requests/s (requests complete in fewer rounds); the
+    points carry ``spec_k`` and the instance's MEASURED acceptance so the
+    reconciler and sim replay see the same axis.  ``sampling`` (a
+    ``SamplingConfig``) profiles the stochastic-sampling executor
+    instead of greedy argmax.
     """
     import itertools
 
@@ -165,6 +178,15 @@ def measure_engine_profile(
 
     store = ModelStore()
     store.store("__profile__", params)
+    draft_model = None
+    draft_key = None
+    if speculate is not None:
+        from repro.models.model import build_model
+        if draft_params is None:
+            raise ValueError("speculate set but no draft_params staged")
+        draft_model = build_model(speculate.draft_cfg)
+        draft_key = "__profile__#draft"
+        store.store(draft_key, draft_params)
     req_ids = itertools.count()
     rng = np.random.default_rng(seed)
     prompts = [rng.integers(0, model.cfg.vocab_size, prompt_len,
@@ -176,7 +198,9 @@ def measure_engine_profile(
         inst = FunctionInstance(
             "__profile__/0", model, store, "__profile__",
             Alloc(sm=sm, quota_request=1.0, quota_limit=1.0),
-            max_batch=max_batch, max_len=max_len, batching=batching)
+            max_batch=max_batch, max_len=max_len, batching=batching,
+            sampling=sampling, speculate=speculate,
+            draft_model=draft_model, draft_key=draft_key)
 
         def step_fn() -> None:
             for p in prompts:
@@ -187,14 +211,22 @@ def measure_engine_profile(
                 inst.run_step()
 
         factor = sm_scale(sm) if sm_scale is not None else 1.0
-        for quota in temporal:
-            r = measure_callable_trial(step_fn, sm, quota, window=window,
-                                       n_windows=n_windows)
+        trials = [(quota, measure_callable_trial(step_fn, sm, quota,
+                                                 window=window,
+                                                 n_windows=n_windows))
+                  for quota in temporal]
+        # Stamp the speculation axis with the acceptance the instance
+        # actually measured over this sweep (telemetry accumulates across
+        # trials), not a declared estimate.
+        acc = inst.acceptance_rate() if speculate is not None else 0.0
+        for quota, r in trials:
             points.append(ProfilePoint(
                 sm=sm, quota=quota,
                 throughput=r.throughput * max_batch * factor,
                 p99_latency=r.p99 / max(factor, 1e-9),
-                kv_blocks=kv_blocks, kv_shared_frac=kv_shared_frac))
+                kv_blocks=kv_blocks, kv_shared_frac=kv_shared_frac,
+                spec_k=speculate.k if speculate is not None else 0,
+                acceptance=acc))
         inst.close()
     return points
 
@@ -267,6 +299,8 @@ def profile_points(
     kv_budget_bytes: int = 0,
     kv_block_bytes: int = 0,
     kv_shared_frac: float = 0.0,
+    spec_k: int = 0,
+    acceptance: float = 0.0,
 ) -> list[ProfilePoint]:
     """Spec-ready profile table: ``{<F_j, S_p, Q_p, T_p>}`` with SLO p99s.
 
@@ -284,9 +318,17 @@ def profile_points(
     ``kv_shared_frac`` stretches that capacity for prefix-shared workloads
     (see :func:`paged_kv_capacity`) and is stamped on the points so the
     live frontend can discount its admission charge by the same axis.
+
+    ``spec_k`` / ``acceptance`` stamp the speculation axis: the simulated
+    curve models the non-speculative round rate, so with ``spec_k > 0``
+    each point's throughput is scaled by
+    ``expected_tokens_per_round(spec_k, acceptance)`` — the reconciler
+    then budgets *effective* tokens/s, exactly matching what a live
+    speculating instance completes per verify round.
     """
     kv_blocks = paged_kv_capacity(kv_budget_bytes, kv_block_bytes,
                                   kv_shared_frac)
+    spec_factor = expected_tokens_per_round(spec_k, acceptance)
     points: list[ProfilePoint] = []
     for sm in spatial:
         for quota in temporal:
@@ -295,8 +337,11 @@ def profile_points(
             lat = simulate_trial(curve, sm, quota, duration=duration,
                                  overload_factor=loaded_factor, seed=seed)
             points.append(ProfilePoint(sm=sm, quota=quota,
-                                       throughput=cap.throughput,
+                                       throughput=cap.throughput
+                                       * spec_factor,
                                        p99_latency=lat.p99,
                                        kv_blocks=kv_blocks,
-                                       kv_shared_frac=kv_shared_frac))
+                                       kv_shared_frac=kv_shared_frac,
+                                       spec_k=spec_k,
+                                       acceptance=acceptance))
     return points

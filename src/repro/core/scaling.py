@@ -45,12 +45,26 @@ class ProfilePoint:
     # over-admission backed by the engine's per-request worst-case
     # reservation and validated by observed ``kv_bytes_saved``.
     kv_shared_frac: float = 0.0
+    # Speculation axis: the profiled speculation depth and the measured
+    # draft-token acceptance fraction at this point's workload.  When
+    # ``spec_k > 0`` the point's ``throughput`` is already *effective*
+    # (verify rounds x expected_tokens_per_round(spec_k, acceptance)), so
+    # Alg. 1 budgets real emitted tokens/s — 0 = not speculating.
+    spec_k: int = 0
+    acceptance: float = 0.0
 
     def __post_init__(self) -> None:
         if not 0.0 <= self.kv_shared_frac < 1.0:
             raise ValueError(
                 f"kv_shared_frac must be in [0, 1), got "
                 f"{self.kv_shared_frac}")
+        if self.spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {self.spec_k}")
+        if not 0.0 <= self.acceptance <= 1.0:
+            raise ValueError(
+                f"acceptance must be in [0, 1], got {self.acceptance}")
+        if self.acceptance > 0.0 and self.spec_k == 0:
+            raise ValueError("acceptance > 0 needs spec_k > 0")
 
     @property
     def rpr(self) -> float:
@@ -62,6 +76,21 @@ class ProfilePoint:
         limit = self.quota if elastic_limit is None else max(self.quota, elastic_limit)
         return Alloc(sm=self.sm, quota_request=self.quota,
                      quota_limit=limit, mem_bytes=mem_bytes)
+
+
+def expected_tokens_per_round(k: int, acceptance: float) -> float:
+    """Expected emitted tokens per speculative verify round under i.i.d.
+    per-position acceptance probability ``a``: sum_{i=0..k} a^i =
+    (1 - a^(k+1)) / (1 - a), saturating at ``k + 1`` for a = 1.  The factor
+    the profiler scales verify-round throughput by to get *effective*
+    tokens/s (the canonical definition; ``repro.serving.speculative``
+    re-exports it)."""
+    if k <= 0:
+        return 1.0
+    a = min(max(acceptance, 0.0), 1.0)
+    if a >= 1.0:
+        return float(k + 1)
+    return (1.0 - a ** (k + 1)) / (1.0 - a)
 
 
 @dataclasses.dataclass(frozen=True)

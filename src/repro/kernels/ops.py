@@ -177,6 +177,133 @@ def greedy_sample(logits: jax.Array, vocab_size: int) -> jax.Array:
     return jnp.minimum(tok, vocab_size - 1)
 
 
+def _filtered_logits(logits: jax.Array, vocab_size: int, temperature: float,
+                     top_k: int, top_p: float) -> jax.Array:
+    """Vocab-clipped, temperature-scaled logits with top-k / top-p (nucleus)
+    filtering applied; excluded entries sit at ``NEG_INF``.
+
+    The padded-vocab mask runs *before* the filters so a top-k/top-p cutoff
+    can never be consumed by padding columns, and the top-1 entry always
+    survives (top-p keeps the head of the nucleus even when
+    ``top_p -> 0``).  Shared by ``sample_tokens`` and
+    ``speculative_verify`` so the draft-proposal and verify distributions
+    are computed by the same code path.
+    """
+    v = logits.shape[-1]
+    idx = jnp.arange(v)
+    logits = jnp.where(idx < vocab_size, logits.astype(jnp.float32), NEG_INF)
+    logits = logits / max(temperature, 1e-6)
+    if top_k > 0 and top_k < vocab_size:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, NEG_INF, logits)
+    if top_p < 1.0:
+        sort = jnp.sort(logits, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sort, axis=-1)
+        # mass strictly before each sorted entry; keep while < top_p so the
+        # nucleus always includes the argmax.
+        before = jnp.cumsum(probs, axis=-1) - probs
+        cutoff = jnp.maximum(
+            jnp.sum(jnp.where(before < top_p, 1, 0), axis=-1, keepdims=True),
+            1)
+        thresh = jnp.take_along_axis(sort, cutoff - 1, axis=-1)
+        logits = jnp.where(logits < thresh, NEG_INF, logits)
+    return logits
+
+
+@functools.partial(jax.jit, static_argnames=("vocab_size", "temperature",
+                                             "top_k", "top_p"))
+def sample_tokens(logits: jax.Array, key: jax.Array, vocab_size: int, *,
+                  temperature: float = 1.0, top_k: int = 0,
+                  top_p: float = 1.0) -> jax.Array:
+    """Fused on-device stochastic sampler (temperature / top-k / top-p).
+
+    Categorical sampling via the Gumbel trick on the filtered logits —
+    an argmax the compiler fuses into the lm-head consumer exactly like
+    ``greedy_sample``, so the fused decode round still pulls only a (B,)
+    int32 vector.  ``temperature == 0`` degenerates to ``greedy_sample``
+    (bit-identical argmax).  Padded vocab columns are masked before the
+    filters, so a sampled id is always ``< vocab_size``.
+    """
+    if temperature == 0.0:
+        return greedy_sample(logits, vocab_size)
+    filt = _filtered_logits(logits, vocab_size, temperature, top_k, top_p)
+    g = jax.random.gumbel(key, filt.shape, dtype=jnp.float32)
+    tok = jnp.argmax(filt + g, axis=-1).astype(jnp.int32)
+    return jnp.minimum(tok, vocab_size - 1)
+
+
+@functools.partial(jax.jit, static_argnames=("vocab_size", "temperature",
+                                             "top_k", "top_p", "greedy"))
+def speculative_verify(
+    target_logits: jax.Array,  # (B, k+1, V) — scores of [t0, d_1..d_k]
+    draft_logits: jax.Array,   # (B, k, Vd) — draft scores that proposed d_j
+    draft_tokens: jax.Array,   # (B, k) int32 — proposed tokens d_1..d_k
+    key: jax.Array,
+    vocab_size: int,
+    *,
+    temperature: float = 1.0,
+    top_k: int = 0,
+    top_p: float = 1.0,
+    greedy: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """On-device speculative rejection sampling (Leviathan-style).
+
+    Returns ``(out_tokens (B, k+1), n_accept (B,))``: the emitted token
+    stream is ``out_tokens[:, :n_accept + 1]`` — the accepted draft prefix
+    followed by one token drawn from the corrected residual distribution
+    (or the bonus target sample when every draft was accepted).  Greedy
+    mode (``greedy`` or ``temperature == 0``) accepts while the target
+    argmax agrees with the draft, so draft == target yields the exact
+    non-speculative greedy stream.  Both logit tensors are sliced to the
+    shared real ``vocab_size`` so draft / target padding may differ.
+    """
+    b, kp1, _ = target_logits.shape
+    k = kp1 - 1
+    if greedy or temperature == 0.0:
+        # argmax over the PADDED width + clip — exactly ``greedy_sample``
+        # on the raw lm-head logits, so an accepted greedy stream is
+        # bit-identical to the non-speculative fused path.
+        g = greedy_sample(target_logits, vocab_size)            # (B, k+1)
+        accept = (g[:, :k] == draft_tokens).astype(jnp.int32)   # (B, k)
+        n_accept = jnp.cumprod(accept, axis=1).sum(axis=1)
+        # accepted draft tokens equal the target argmax, so the emitted
+        # stream *is* the target argmax over the window.
+        return g, n_accept.astype(jnp.int32)
+    tl = target_logits[..., :vocab_size]
+    dl = draft_logits[..., :vocab_size]
+    ukey, ckey = jax.random.split(key)
+    p_t = jax.nn.softmax(
+        _filtered_logits(tl, vocab_size, temperature, top_k, top_p), axis=-1)
+    p_d = jax.nn.softmax(
+        _filtered_logits(dl, vocab_size, temperature, top_k, top_p), axis=-1)
+    d = draft_tokens[..., None]
+    pt_d = jnp.take_along_axis(p_t[:, :k], d, axis=-1)[..., 0]  # (B, k)
+    pd_d = jnp.take_along_axis(p_d, d, axis=-1)[..., 0]
+    u = jax.random.uniform(ukey, (b, k), dtype=jnp.float32)
+    accept = (u * pd_d < pt_d).astype(jnp.int32)
+    n_accept = jnp.cumprod(accept, axis=1).sum(axis=1)          # (B,)
+    # Residual distribution at the first rejected position; at position k
+    # (all accepted) the draft contributes nothing and the residual is the
+    # plain target distribution (bonus token).
+    pad = jnp.zeros_like(p_t[:, :1])
+    p_d_pad = jnp.concatenate([p_d, pad], axis=1)               # (B, k+1, V)
+    at = n_accept[:, None, None]
+    pt_at = jnp.take_along_axis(p_t, at, axis=1)[:, 0]          # (B, V)
+    pd_at = jnp.take_along_axis(p_d_pad, at, axis=1)[:, 0]
+    residual = jnp.maximum(pt_at - pd_at, 0.0)
+    mass = residual.sum(axis=-1, keepdims=True)
+    residual = jnp.where(mass > 0, residual, pt_at)
+    logr = jnp.where(residual > 0, jnp.log(jnp.maximum(residual, 1e-30)),
+                     NEG_INF)
+    g = jax.random.gumbel(ckey, logr.shape, dtype=jnp.float32)
+    corr = jnp.minimum(jnp.argmax(logr + g, axis=-1).astype(jnp.int32),
+                       vocab_size - 1)                          # (B,)
+    dpad = jnp.concatenate([draft_tokens, corr[:, None]], axis=1)
+    out = jnp.where(jnp.arange(kp1)[None, :] < n_accept[:, None],
+                    dpad, corr[:, None])
+    return out, n_accept.astype(jnp.int32)
+
+
 @functools.partial(jax.jit, static_argnames=("window", "backend"))
 def decode_attention(
     q: jax.Array,        # (B, 1, H, D) — one new token per sequence
@@ -209,6 +336,38 @@ def decode_attention(
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgqs,bskd->bqkgd", p, v_cache.astype(jnp.float32))
     return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def verify_attention(
+    q: jax.Array,          # (B, W, H, D) — W window tokens per sequence
+    k_cache: jax.Array,    # (B, S, K, D) with rows pos..pos+W-1 written
+    v_cache: jax.Array,
+    cache_len: jax.Array,  # (B,) int32 — valid rows *before* the window
+    *,
+    backend: str = DEFAULT_BACKEND,
+) -> jax.Array:
+    """Multi-token verify attention for speculative decoding.
+
+    ``decode_attention``'s (B, S) validity mask is shared by all query
+    rows, which is wrong for W > 1: window query ``j`` (absolute position
+    ``cache_len + j``) may attend rows ``< cache_len + j + 1`` only —
+    earlier draft rows plus itself, never later ones.  Same einsum layout
+    as the decode path with a per-query-row (B, W, S) mask.
+    """
+    b, w, h, d = q.shape
+    _, s, n_kv, _ = k_cache.shape
+    scale = d ** -0.5
+    qg = _gqa_expand(q, n_kv).astype(jnp.float32) * scale  # (B,W,K,G,D)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg,
+                        k_cache.astype(jnp.float32))  # (B,K,G,W,S)
+    pos = jnp.arange(s)
+    valid = (pos[None, None, :] <
+             cache_len[:, None, None] + jnp.arange(w)[None, :, None] + 1)
+    scores = jnp.where(valid[:, None, None, :, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, w, h, d).astype(q.dtype)
 
 
 def _gather_pages(pages: jax.Array, block_tables: jax.Array) -> jax.Array:
@@ -244,6 +403,23 @@ def paged_decode_attention(
     k = _gather_pages(k_pages, block_tables)
     v = _gather_pages(v_pages, block_tables)
     return decode_attention(q, k, v, cache_len, backend=backend)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def paged_verify_attention(
+    q: jax.Array,             # (B, W, H, D)
+    k_pages: jax.Array,       # (N, bs, K, D)
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (B, M) int32
+    cache_len: jax.Array,     # (B,) int32 — valid rows before the window
+    *,
+    backend: str = DEFAULT_BACKEND,
+) -> jax.Array:
+    """``verify_attention`` against a block-paged KV cache (gather
+    materialization, same per-query-row causal mask)."""
+    k = _gather_pages(k_pages, block_tables)
+    v = _gather_pages(v_pages, block_tables)
+    return verify_attention(q, k, v, cache_len, backend=backend)
 
 
 @functools.partial(jax.jit, static_argnames=("backend",))

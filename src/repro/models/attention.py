@@ -317,6 +317,71 @@ def attn_decode_paged(params: dict, x: jax.Array,
     return _output(params, o), k_pages, v_pages
 
 
+def cache_write_window(cache: jax.Array, new: jax.Array, start: jax.Array
+                       ) -> jax.Array:
+    """Write (B, W, K, Dh) into (B, C, K, Dh) at per-sequence row ``start``
+    (a (B,) vector) — the W-row generalization of ``cache_write`` used by
+    the speculative verify step.  Requires ``start + W <= C`` (the engine
+    reserves the +k speculation margin at submit time); XLA's clamped
+    start would otherwise silently shift the window."""
+    return jax.vmap(
+        lambda c, n, s: jax.lax.dynamic_update_slice(c, n, (s, 0, 0))
+    )(cache, new.astype(cache.dtype), start)
+
+
+def attn_verify(params: dict, x: jax.Array, kc: jax.Array, vc: jax.Array,
+                pos: jax.Array, cfg: ModelConfig
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """W-token verify attention against (and updating) a dense cache.
+
+    x: (B, W, D) — the speculative window [last accepted token, k draft
+    tokens]; pos: (B,) absolute position of the window start.  Writes the
+    window's K/V rows at pos..pos+W-1 and attends them with the
+    per-query-row causal mask (window query j sees rows < pos + j + 1).
+    Returns (output (B, W, D), kc', vc').
+    """
+    b, w, _ = x.shape
+    pos_b = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(pos)), (b,))
+    positions = pos_b[:, None] + jnp.arange(w)[None, :]
+    q = _project_q(params, x, cfg)
+    k, v = _project_kv(params, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    kc = cache_write_window(kc, k, pos_b)
+    vc = cache_write_window(vc, v, pos_b)
+    o = ops.verify_attention(q, kc, vc, pos_b.astype(jnp.int32))
+    return _output(params, o), kc, vc
+
+
+def attn_verify_paged(params: dict, x: jax.Array,
+                      k_pages: jax.Array, v_pages: jax.Array,
+                      block_tables: jax.Array, pos: jax.Array,
+                      cfg: ModelConfig,
+                      active: Optional[jax.Array] = None
+                      ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """W-token verify attention against (and updating) a paged cache.
+
+    Scatters the window's rows one position at a time (W is small — the
+    draft length plus one) through ``paged_cache_write`` so inactive
+    slots' rows drop and the COW write contract stays per-position, then
+    attends with the per-query-row causal mask.
+    """
+    w = x.shape[1]
+    positions = pos[:, None] + jnp.arange(w)[None, :]
+    q = _project_q(params, x, cfg)
+    k, v = _project_kv(params, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    for j in range(w):
+        k_pages = paged_cache_write(k_pages, k[:, j:j + 1], block_tables,
+                                    pos + j, active)
+        v_pages = paged_cache_write(v_pages, v[:, j:j + 1], block_tables,
+                                    pos + j, active)
+    o = ops.paged_verify_attention(q, k_pages, v_pages, block_tables,
+                                   pos.astype(jnp.int32))
+    return _output(params, o), k_pages, v_pages
+
+
 def attn_decode_paged_quant(params: dict, x: jax.Array,
                             k_pages: jax.Array, v_pages: jax.Array,
                             ks_pages: jax.Array, vs_pages: jax.Array,

@@ -102,22 +102,67 @@ class Model:
         fused decode steps and the engine's prefill admission path."""
         return transformer.greedy_tokens(logits, self.cfg)
 
-    def decode_step_tokens(self, params, token, cache):
+    def sample_tokens(self, logits, key, sampling):
+        """Device-side sampler with a PRNG key: greedy when ``sampling`` is
+        ``None``, else temperature/top-k/top-p via ``ops.sample_tokens``."""
+        return transformer.sampled_tokens(logits, self.cfg, key, sampling)
+
+    def decode_step_tokens(self, params, token, cache, key=None,
+                           sampling=None):
         """One decode round returning ``((B,) int32 tokens, cache)`` — the
-        logits never leave the device (any family)."""
+        logits never leave the device (any family).  With a PRNG ``key``
+        the round splits it in-jit, routes the logits through the shared
+        fused sampler (``transformer.sampled_tokens``), and returns the
+        advanced key as a third element; the rwkv6/hybrid/encdec families
+        take the same split-then-sample path so their fused rounds keep
+        the one-sync guarantee under stochastic sampling too."""
         if self.cfg.family in ("dense", "moe", "vlm"):
             return transformer.decode_step_tokens(params, token, cache,
-                                                  self.cfg)
+                                                  self.cfg, key=key,
+                                                  sampling=sampling)
         logits, cache = self.decode_step(params, token, cache)
-        return self.sample_greedy(logits), cache
+        if key is None:
+            return transformer.greedy_tokens(logits, self.cfg), cache
+        key, sub = jax.random.split(key)
+        return (transformer.sampled_tokens(logits, self.cfg, sub, sampling),
+                cache, key)
 
     def decode_step_paged_tokens(self, params, token, cache, block_tables,
-                                 pos, active):
+                                 pos, active, key=None, sampling=None):
         """Fused paged round: ``(tokens, cache, pos + active)`` with free
-        slots' writes suppressed (see transformer.decode_step_paged_tokens).
+        slots' writes suppressed (see transformer.decode_step_paged_tokens);
+        a threaded PRNG key adds stochastic sampling and a returned key.
         """
         return transformer.decode_step_paged_tokens(
-            params, token, cache, block_tables, pos, active, self.cfg)
+            params, token, cache, block_tables, pos, active, self.cfg,
+            key=key, sampling=sampling)
+
+    # -- speculative verify --------------------------------------------------
+
+    def supports_speculative(self) -> bool:
+        """Whether the batched verify step covers this config (full-cache
+        dense/MoE, no int8 KV)."""
+        return (self.cfg.family in ("dense", "moe")
+                and transformer.supports_speculative(self.cfg))
+
+    def verify_step(self, params, tokens, cache):
+        """Score a (B, W) speculative window in one forward against the
+        dense slot cache: ``(logits (B, W, V), cache)``, positions
+        untouched (see transformer.verify_step)."""
+        if not self.supports_speculative():
+            raise NotImplementedError(
+                f"speculative verify unsupported for {self.cfg.name}")
+        return transformer.verify_step(params, tokens, cache, self.cfg)
+
+    def verify_step_paged(self, params, tokens, cache, block_tables, pos,
+                          active=None):
+        """Paged-window variant of ``verify_step``."""
+        if not self.supports_speculative():
+            raise NotImplementedError(
+                f"speculative verify unsupported for {self.cfg.name}")
+        return transformer.verify_step_paged(params, tokens, cache,
+                                             block_tables, pos, self.cfg,
+                                             active)
 
     # -- caches ------------------------------------------------------------------
 

@@ -640,27 +640,151 @@ def greedy_tokens(logits: jax.Array, cfg: ModelConfig) -> jax.Array:
     return ops.greedy_sample(logits, cfg.vocab_size)
 
 
+def sampled_tokens(logits: jax.Array, cfg: ModelConfig, key, sampling
+                   ) -> jax.Array:
+    """Shared fused sampler: greedy when no key/sampling config is given,
+    otherwise ``ops.sample_tokens`` (temperature / top-k / top-p) with the
+    provided key.  Every family's fused token step — transformer, rwkv6,
+    hybrid, encdec — funnels through here so the one-sync guarantee and
+    the key-stream discipline are identical across families."""
+    from repro.kernels import ops
+    if key is None or sampling is None:
+        return greedy_tokens(logits, cfg)
+    return ops.sample_tokens(logits, key, cfg.vocab_size,
+                             temperature=sampling.temperature,
+                             top_k=sampling.top_k, top_p=sampling.top_p)
+
+
 def decode_step_tokens(params: dict, token: jax.Array, cache: dict,
-                       cfg: ModelConfig) -> tuple[jax.Array, dict]:
-    """``decode_step`` with the greedy sampler fused in: returns
+                       cfg: ModelConfig, key=None, sampling=None):
+    """``decode_step`` with the sampler fused in: returns
     ``((B,) int32 next tokens, updated cache)`` — the serving engine's
     sync-free hot path pulls B int32s per round instead of (B, V) logits.
+    With a PRNG ``key`` (threaded and donated exactly like the token
+    vector) the step splits it in-jit, samples stochastically, and
+    additionally returns the advanced key.
     """
     logits, cache = decode_step(params, token, cache, cfg)
-    return greedy_tokens(logits, cfg), cache
+    if key is None:
+        return greedy_tokens(logits, cfg), cache
+    key, sub = jax.random.split(key)
+    return sampled_tokens(logits, cfg, sub, sampling), cache, key
 
 
 def decode_step_paged_tokens(params: dict, token: jax.Array, cache: dict,
                              block_tables: jax.Array, pos: jax.Array,
-                             active: jax.Array, cfg: ModelConfig
-                             ) -> tuple[jax.Array, dict, jax.Array]:
+                             active: jax.Array, cfg: ModelConfig,
+                             key=None, sampling=None):
     """Fused paged round: sample on device AND advance the per-slot
     position vector in-jit (``pos + active``), so the engine keeps
     ``pos`` device-resident and only uploads it when admission, release,
     or migration touched the host mirror.  Free slots (``active == 0``)
-    neither write KV nor advance.  Returns (tokens, cache, new pos).
+    neither write KV nor advance.  Returns (tokens, cache, new pos), plus
+    the advanced PRNG key when one is threaded through.
     """
     active = jnp.asarray(active, jnp.int32)
     logits, cache = decode_step_paged(params, token, cache, block_tables,
                                       pos, cfg, active=active)
-    return greedy_tokens(logits, cfg), cache, pos + active
+    if key is None:
+        return greedy_tokens(logits, cfg), cache, pos + active
+    key, sub = jax.random.split(key)
+    return (sampled_tokens(logits, cfg, sub, sampling), cache,
+            pos + active, key)
+
+
+# --------------------------------------------------------------------------
+# Speculative verify — score a k+1 window in one forward
+# --------------------------------------------------------------------------
+
+
+def block_verify(lp: dict, x: jax.Array, kc: jax.Array, vc: jax.Array,
+                 pos: jax.Array, cfg: ModelConfig
+                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    a, kc, vc = attn.attn_verify(lp["attn"], h, kc, vc, pos, cfg)
+    x = x + a
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    m, _ = _ffn(lp, h, cfg, train=False)
+    return x + m, kc, vc
+
+
+def block_verify_paged(lp: dict, x: jax.Array, kc: jax.Array, vc: jax.Array,
+                       block_tables: jax.Array, pos: jax.Array,
+                       cfg: ModelConfig,
+                       active: Optional[jax.Array] = None
+                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    a, kc, vc = attn.attn_verify_paged(lp["attn"], h, kc, vc,
+                                       block_tables, pos, cfg, active)
+    x = x + a
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    m, _ = _ffn(lp, h, cfg, train=False)
+    return x + m, kc, vc
+
+
+def supports_speculative(cfg: ModelConfig) -> bool:
+    """The verify step addresses KV rows by absolute position (like the
+    paged plane) and writes a W-row window per round, so it covers the
+    same full-cache dense/MoE configs — minus the int8 KV variant, whose
+    per-row scale pools would need a windowed quantized writer."""
+    return supports_paged(cfg) and not attn.kv_int8_enabled(cfg)
+
+
+def verify_step(params: dict, tokens: jax.Array, cache: dict,
+                cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    """Score a speculative window in one forward against a dense cache.
+
+    tokens: (B, W) int32 — [last emitted token, k draft tokens], W=k+1.
+    Writes the window's KV rows at cache["pos"]..pos+W-1 and returns
+    (logits (B, W, V), updated cache); ``logits[:, j]`` is the target
+    distribution for the token *after* window position j.  ``cache["pos"]``
+    is left untouched — the caller folds the accepted-prefix length in
+    (the rejected rows beyond the new position are garbage the causal
+    mask hides until they are overwritten, exactly like bucketed
+    prefill's padded tail).
+    """
+    if not supports_speculative(cfg):
+        raise NotImplementedError(
+            f"speculative verify requires a full-cache dense/moe config, "
+            f"got {cfg.name} ({cfg.family})")
+    b = tokens.shape[0]
+    pos = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(cache["pos"])),
+                           (b,)).astype(jnp.int32)
+    x = embed_tokens(params, tokens, cfg)
+
+    def body(x, xs):
+        lp, kc, vc = xs
+        x, kc, vc = block_verify(lp, x, kc, vc, pos, cfg)
+        return x, (kc, vc)
+
+    x, (kn, vn) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"]))
+    return lm_head(params, x, cfg), dict(cache, k=kn, v=vn)
+
+
+def verify_step_paged(params: dict, tokens: jax.Array, cache: dict,
+                      block_tables: jax.Array, pos: jax.Array,
+                      cfg: ModelConfig,
+                      active: Optional[jax.Array] = None
+                      ) -> tuple[jax.Array, dict]:
+    """``verify_step`` against block-paged KV pools: writes the window's
+    rows through the per-position paged scatter (inactive slots drop) and
+    returns (logits (B, W, V), updated cache).  Position bookkeeping
+    stays with the caller."""
+    if not supports_speculative(cfg):
+        raise NotImplementedError(
+            f"speculative verify requires a full-cache dense/moe config, "
+            f"got {cfg.name} ({cfg.family})")
+    x = embed_tokens(params, tokens, cfg)
+    pos = jnp.asarray(pos, jnp.int32)
+    block_tables = jnp.asarray(block_tables, jnp.int32)
+
+    def body(x, xs):
+        lp, kc, vc = xs
+        x, kc, vc = block_verify_paged(lp, x, kc, vc, block_tables, pos,
+                                       cfg, active)
+        return x, (kc, vc)
+
+    x, (kn, vn) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"]))
+    return lm_head(params, x, cfg), dict(cache, k=kn, v=vn)

@@ -69,6 +69,9 @@ from repro.core.slo import SLORecorder
 from repro.models.model import Model, default_kv_blocks
 from repro.serving.paging import (NULL_BLOCK, KVPageAllocator, PageTable,
                                   blocks_needed, prompt_digests)
+from repro.serving.speculative import (GREEDY, SamplingConfig, SpecConfig,
+                                       spec_round_continuous,
+                                       spec_round_paged)
 
 
 def _bucket_len(n: int) -> int:
@@ -128,9 +131,16 @@ class FunctionInstance:
                  max_len: int = 64, batching: str = "continuous",
                  prefill_buckets: bool = True, block_size: int = 16,
                  n_kv_blocks: Optional[int] = None, fused: bool = True,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True,
+                 sampling: Optional[SamplingConfig] = None,
+                 speculate: Optional[SpecConfig] = None,
+                 draft_model: Optional[Model] = None,
+                 draft_key: Optional[str] = None):
         if batching not in ("continuous", "static", "paged"):
             raise ValueError(f"unknown batching mode {batching!r}")
+        if sampling is not None and batching == "static":
+            raise ValueError("stochastic sampling requires a slot batching "
+                             "mode (continuous/paged)")
         self.inst_id = inst_id
         self.model = model
         self.alloc = alloc
@@ -245,10 +255,89 @@ class FunctionInstance:
             self._pos_dev: Optional[jax.Array] = None
             self._active_dev: Optional[jax.Array] = None
             self._state_dirty = True
+        # -- stochastic sampling + speculative decoding ---------------------
+        # The PRNG key is device state threaded through the fused round and
+        # donated like the token vector; the fused=False reference replays
+        # the identical split sequence eagerly, so sampled token streams
+        # diff bit-identical between the paths.
+        self.sampling = sampling
+        self.speculate = speculate
+        self.draft_model = draft_model
+        self.draft_key = draft_key
+        self.draft_params: Optional[Any] = None
+        self.dcache: Optional[Any] = None  # draft slot-cache side pool
+        self.spec_proposed = 0  # draft tokens proposed (telemetry)
+        self.spec_accepted = 0  # draft tokens accepted (telemetry)
+        self._round_spec: Optional[tuple[Any, Any]] = None
+        self._key_dev: Optional[jax.Array] = None
+        if sampling is not None or speculate is not None:
+            seed = sampling.seed if sampling is not None else speculate.seed
+            self._key_dev = jax.random.PRNGKey(seed)
+        if sampling is not None:
+            self._sample = _executor(
+                model, ("sample", sampling),
+                lambda: jax.jit(lambda l, k: model.sample_tokens(l, k,
+                                                                 sampling)))
+            self._decode_tok_s = _executor(
+                model, ("decode_tok_sampled", sampling),
+                lambda: jax.jit(
+                    lambda p, t, c, k: model.decode_step_tokens(
+                        p, t, c, key=k, sampling=sampling),
+                    donate_argnums=(1, 2, 3)))
+            if batching == "paged":
+                self._decode_paged_tok_s = _executor(
+                    model, ("decode_paged_tok_sampled", sampling),
+                    lambda: jax.jit(
+                        lambda p, t, c, tb, pos, act, k:
+                        model.decode_step_paged_tokens(
+                            p, t, c, tb, pos, act, key=k, sampling=sampling),
+                        donate_argnums=(1, 2, 4, 6)))
+        if speculate is not None:
+            if not self.fused or batching == "static":
+                raise ValueError(
+                    "speculate requires the fused continuous/paged hot path "
+                    "(the draft/verify loop is a single donated round)")
+            if not model.supports_speculative():
+                raise ValueError(
+                    f"{model.cfg.name}: speculative verify needs a "
+                    f"full-cache dense/moe target (no int8 KV)")
+            if draft_model is None or draft_key is None:
+                raise ValueError("speculate needs a draft model + weights "
+                                 "key (engine.deploy builds them)")
+            if not draft_model.supports_speculative():
+                raise ValueError(
+                    f"{draft_model.cfg.name}: the draft must be a "
+                    f"full-cache dense/moe config")
+            if draft_model.cfg.vocab_size != model.cfg.vocab_size:
+                raise ValueError("draft and target must share vocab_size")
+            self.draft_params = store.get(draft_key)
+            samp = sampling if sampling is not None else GREEDY
+            build = (spec_round_paged if batching == "paged"
+                     else spec_round_continuous)
+            donate = (2, 3, 4, 6, 8) if batching == "paged" else (2, 3, 4, 5)
+            self._spec_round = _executor(
+                model, ("spec_round", batching, speculate.k, samp,
+                        draft_model.cfg.name),
+                lambda: jax.jit(build(model, draft_model, speculate.k, samp),
+                                donate_argnums=donate))
+            self._dprefill = _executor(
+                draft_model, ("prefill", max_len),
+                lambda: jax.jit(lambda p, t: draft_model.prefill(
+                    p, t, max_len=max_len)))
+            self._dprefill_len = _executor(
+                draft_model, ("prefill_len", max_len),
+                lambda: jax.jit(lambda p, t, n: draft_model.prefill(
+                    p, t, max_len=max_len, length=n))
+            ) if self.bucketed else None
+            self._dmerge = _executor(
+                draft_model, ("merge",),
+                lambda: jax.jit(draft_model.merge_slot, donate_argnums=(0,)))
 
     def close(self) -> None:
         if self.batching == "paged":
             self.pages.release_all()  # defensive: drained closes freed all
+        if self.draft_params is not None:
+            self.store.put_back(self.draft_key)
         self.store.put_back(self.weights_key)
 
     # -- KV accounting -----------------------------------------------------
@@ -297,6 +386,13 @@ class FunctionInstance:
         """Queue depth + occupied slots (join-shortest-queue metric)."""
         return len(self.queue) + self.n_active()
 
+    def acceptance_rate(self) -> float:
+        """Measured draft-token acceptance fraction (0 when the instance
+        is not speculating or has not completed a round yet)."""
+        if not self.spec_proposed:
+            return 0.0
+        return self.spec_accepted / self.spec_proposed
+
     def _clip_tok(self, tok: np.ndarray) -> np.ndarray:
         return np.minimum(tok, self.model.cfg.vocab_size - 1)
 
@@ -344,10 +440,46 @@ class FunctionInstance:
                                      jnp.int32(n))
         return self._prefill(self.params, jnp.asarray(prompt[None], jnp.int32))
 
+    def _dprefill_one(self, prompt: np.ndarray):
+        """Draft-model prefill for speculative admission (same bucketing
+        discipline as the target's)."""
+        n = int(prompt.shape[0])
+        if self.bucketed and n < self.max_len:
+            pl = min(_bucket_len(n), self.max_len)
+            if pl > n:
+                padded = np.zeros((pl,), np.int32)
+                padded[:n] = prompt
+                prompt = padded
+            return self._dprefill_len(self.draft_params,
+                                      jnp.asarray(prompt[None], jnp.int32),
+                                      jnp.int32(n))
+        return self._dprefill(self.draft_params,
+                              jnp.asarray(prompt[None], jnp.int32))
+
+    def _admit_draft(self, slot: int, req: ServeRequest) -> None:
+        """Prefill the draft model and merge its entry into the draft slot
+        cache — both async enqueues, sharing the pass's single sync."""
+        _, dentry = self._dprefill_one(req.prompt)
+        if self.dcache is None:
+            self.dcache = self.draft_model.init_slot_cache(self.max_batch,
+                                                           self.max_len)
+        self.dcache = self._dmerge(self.dcache, dentry, jnp.int32(slot))
+
+    def _spec_k(self, max_new_tokens: int) -> int:
+        """Extra KV rows a speculating request can write past the plain
+        ``prompt + max_new - 1``: the last verify window starts at most at
+        row ``prompt + max_new - 2`` and writes k rows beyond it.  Zero
+        for requests that finish at prefill (they never enter a round)."""
+        if self.speculate is None or max_new_tokens <= 1:
+            return 0
+        return self.speculate.k
+
     def _kv_rows_needed(self, req: ServeRequest) -> int:
         """KV rows a request writes over its lifetime: the prompt plus one
-        row per decode round (the final token is emitted, never cached)."""
-        return int(req.prompt.shape[0]) + req.max_new_tokens - 1
+        row per decode round (the final token is emitted, never cached),
+        plus the speculation margin for the verify window's overhang."""
+        return (int(req.prompt.shape[0]) + req.max_new_tokens - 1
+                + self._spec_k(req.max_new_tokens))
 
     def _plan_paged_admission(self, req: ServeRequest
                               ) -> tuple[int, tuple]:
@@ -443,7 +575,15 @@ class FunctionInstance:
                     break  # head-of-line waits for retiring blocks
             req = self.queue.popleft()
             logits, entry = self._prefill_one(req.prompt)
-            tok_dev = self._greedy(logits)  # (1,) int32, stays on device
+            if self.sampling is not None:
+                # Same eager split in the fused and reference paths, so the
+                # key stream (one split per admitted prefill, one per
+                # round) is identical and sampled streams diff
+                # bit-identical.  The split is async — no host pull.
+                self._key_dev, sub = jax.random.split(self._key_dev)
+                tok_dev = self._sample(logits, sub)
+            else:
+                tok_dev = self._greedy(logits)  # (1,) int32, stays on device
             if self.fused:
                 done_at_prefill = (len(req.tokens_out) + 1
                                    >= req.max_new_tokens)
@@ -476,6 +616,8 @@ class FunctionInstance:
                 self._map_paged_request(slot, req, entry, plan)
             else:
                 self.cache = self._merge(self.cache, entry, jnp.int32(slot))
+            if self.speculate is not None:
+                self._admit_draft(slot, req)
             self.slots[slot] = req
             if self.fused:
                 self._slot_tok_dev = self._set_tok(
@@ -505,13 +647,23 @@ class FunctionInstance:
             return req
         return None
 
+    def _sample_host(self, logits) -> np.ndarray:
+        """Reference-path sampler: replay the fused round's in-jit
+        ``split(key) -> sample`` sequence eagerly on the same key stream,
+        so ``fused=False`` sampled tokens are bit-identical."""
+        self._key_dev, sub = jax.random.split(self._key_dev)
+        return np.asarray(self._sample(logits, sub), np.int32)
+
     def _decode_round_continuous(self) -> list[ServeRequest]:
         """Host-side argmax reference round (``fused=False``)."""
         logits, self.cache = self._decode(
             self.params, jnp.asarray(self._slot_tok), self.cache)
         self.sync_count += 1
-        next_tok = self._clip_tok(
-            np.asarray(jnp.argmax(logits, axis=-1), np.int32))
+        if self.sampling is not None:
+            next_tok = self._sample_host(logits)
+        else:
+            next_tok = self._clip_tok(
+                np.asarray(jnp.argmax(logits, axis=-1), np.int32))
         finished = []
         for slot, req in enumerate(self.slots):
             if req is None:
@@ -539,20 +691,31 @@ class FunctionInstance:
         the first divergent append then writes the private copy.  The
         closing assert is the host-side half of the paged write contract:
         after this pass, no dispatched write can touch a shared block.
+
+        A speculating round writes a W = k+1 row window instead of one
+        row, so COW resolves for EVERY block the window can touch
+        (``pos .. pos+k``) — speculative rejection rollback is then a pure
+        position trim: rejected rows land in exclusively-owned blocks,
+        nothing is freed, and no shared/COW block is ever written.
         """
+        span = 1 + (self.speculate.k if self.speculate is not None else 0)
         for slot, req in enumerate(self.slots):
             if req is None:
                 continue
             pos = int(self._pos[slot])
-            block, moved = self.pages.writable_block(slot, pos)
-            if moved is not None:
-                old, new = moved
-                self.cache = self._copy_block(self.cache, jnp.int32(old),
-                                              jnp.int32(new))
-                self._tables[slot][pos // self.block_size] = new
-                self._state_dirty = True
-                self.cow_count += 1
-            assert self.allocator.refcount(block) == 1
+            first = pos // self.block_size
+            last = (pos + span - 1) // self.block_size
+            for idx in range(first, last + 1):
+                block, moved = self.pages.writable_block(
+                    slot, idx * self.block_size)
+                if moved is not None:
+                    old, new = moved
+                    self.cache = self._copy_block(self.cache, jnp.int32(old),
+                                                  jnp.int32(new))
+                    self._tables[slot][idx] = new
+                    self._state_dirty = True
+                    self.cow_count += 1
+                assert self.allocator.refcount(block) == 1
 
     def _decode_round_paged(self) -> list[ServeRequest]:
         """Host-side argmax reference round (``fused=False``)."""
@@ -560,8 +723,11 @@ class FunctionInstance:
             self.params, jnp.asarray(self._slot_tok), self.cache,
             jnp.asarray(self._tables), jnp.asarray(self._pos))
         self.sync_count += 1
-        next_tok = self._clip_tok(
-            np.asarray(jnp.argmax(logits, axis=-1), np.int32))
+        if self.sampling is not None:
+            next_tok = self._sample_host(logits)
+        else:
+            next_tok = self._clip_tok(
+                np.asarray(jnp.argmax(logits, axis=-1), np.int32))
         finished = []
         for slot, req in enumerate(self.slots):
             if req is None:
@@ -581,12 +747,45 @@ class FunctionInstance:
         results land in ``self._round`` for ``sync_step``.
         """
         active = [s for s, r in enumerate(self.slots) if r is not None]
+        if self.speculate is not None:
+            # Draft-k -> verify-1 in ONE donated jitted round: the k draft
+            # steps, the W=k+1 verify forward, on-device rejection
+            # sampling, and the per-slot position advance all ride the
+            # pass's single sync (sync_step pulls the (B, k+1) window +
+            # (B,) acceptance counts instead of a (B,) token vector).
+            if self.batching == "paged":
+                if self._state_dirty:
+                    self._upload_paged_state()
+                (tok, self.cache, self.dcache, self._pos_dev, out, n_emit,
+                 self._key_dev) = self._spec_round(
+                    self.params, self.draft_params, self._tok_dev(),
+                    self.cache, self.dcache, self._tables_dev,
+                    self._pos_dev, self._active_dev, self._key_dev)
+            else:
+                (tok, self.cache, self.dcache, out, n_emit,
+                 self._key_dev) = self._spec_round(
+                    self.params, self.draft_params, self._tok_dev(),
+                    self.cache, self.dcache, self._key_dev)
+            self._slot_tok_dev = tok
+            self._round = (tok, active)
+            self._round_spec = (out, n_emit)
+            return
         if self.batching == "paged":
             if self._state_dirty:
                 self._upload_paged_state()
-            tok, self.cache, self._pos_dev = self._decode_paged_tok(
-                self.params, self._tok_dev(), self.cache,
-                self._tables_dev, self._pos_dev, self._active_dev)
+            if self.sampling is not None:
+                (tok, self.cache, self._pos_dev,
+                 self._key_dev) = self._decode_paged_tok_s(
+                    self.params, self._tok_dev(), self.cache,
+                    self._tables_dev, self._pos_dev, self._active_dev,
+                    self._key_dev)
+            else:
+                tok, self.cache, self._pos_dev = self._decode_paged_tok(
+                    self.params, self._tok_dev(), self.cache,
+                    self._tables_dev, self._pos_dev, self._active_dev)
+        elif self.sampling is not None:
+            tok, self.cache, self._key_dev = self._decode_tok_s(
+                self.params, self._tok_dev(), self.cache, self._key_dev)
         else:
             tok, self.cache = self._decode_tok(
                 self.params, self._tok_dev(), self.cache)
@@ -652,6 +851,8 @@ class FunctionInstance:
         arrays = [t for _, t, _ in self._pending_prefill]
         if self._round is not None:
             arrays.append(self._round[0])
+        if self._round_spec is not None:
+            arrays.extend(self._round_spec)
         jax.block_until_ready(arrays)
         finished = []
         for req, tok_dev, slot in self._pending_prefill:
@@ -664,7 +865,29 @@ class FunctionInstance:
             else:
                 self._slot_tok[slot] = tok  # host mirror (migration seam)
         self._pending_prefill = []
-        if self._round is not None:
+        if self._round is not None and self._round_spec is not None:
+            # Speculative round: land the accepted window per slot.  A slot
+            # that reaches max_new mid-window is released immediately and
+            # its surplus tokens dropped — the device position overshot,
+            # but release resets the mirrors (paged: dirty re-upload;
+            # continuous: the next merge overwrites the slot's pos).
+            _, active = self._round
+            out_dev, n_dev = self._round_spec
+            self._round = self._round_spec = None
+            out_np = np.asarray(out_dev)
+            n_np = np.asarray(n_dev)
+            for slot in active:
+                n = int(n_np[slot])
+                self.spec_proposed += self.speculate.k
+                self.spec_accepted += n - 1
+                done = None
+                for t in out_np[slot, :n]:
+                    done = self._advance_slot(slot, int(t))
+                    if done is not None:
+                        break
+                if done is not None:
+                    finished.append(done)
+        elif self._round is not None:
             tok_dev, active = self._round
             self._round = None
             toks = np.asarray(tok_dev)
@@ -689,6 +912,10 @@ class FunctionInstance:
         req = self.slots[slot]
         if req is None:
             raise ValueError(f"slot {slot} of {self.inst_id} is empty")
+        if self.speculate is not None:
+            raise ValueError(
+                f"{self.inst_id}: speculating slots cannot be exported — "
+                f"the draft side cache does not travel (migrate gate)")
         if self.batching == "paged":
             entry = self.model.gather_pages(
                 self.cache, jnp.asarray(self._tables[slot]),
@@ -839,14 +1066,33 @@ class ServingEngine:
                n_instances: int = 1, max_batch: int = 4, max_len: int = 64,
                batching: str = "continuous", prefill_buckets: bool = True,
                block_size: int = 16, n_kv_blocks: Optional[int] = None,
-               fused: bool = True, prefix_sharing: bool = True
-               ) -> list[str]:
+               fused: bool = True, prefix_sharing: bool = True,
+               sampling: Optional[SamplingConfig] = None,
+               speculate: Optional[SpecConfig] = None,
+               draft_params: Any = None) -> list[str]:
         if not self.alive:
             raise RuntimeError("cannot deploy to a failed node")
         if fn not in self.recorders:
             self.recorders[fn] = SLORecorder(fn=fn)
         if not self.store.contains(fn):
             self.store.store(fn, params)
+        draft_model = None
+        draft_key = None
+        if speculate is not None:
+            from repro.models.model import build_model
+            # Draft models are cached per function so their shared jit
+            # executors (stored on the Model object) survive redeploys.
+            cache = self.__dict__.setdefault("_draft_models", {})
+            draft_model = cache.get(fn)
+            if draft_model is None:
+                draft_model = cache[fn] = build_model(speculate.draft_cfg)
+            draft_key = f"{fn}#draft"
+            if not self.store.contains(draft_key):
+                if draft_params is None:
+                    raise ValueError(
+                        f"{fn}: speculate set but no draft weights staged "
+                        f"(pass draft_params on the first deploy)")
+                self.store.store(draft_key, draft_params)
         ids = []
         for _ in range(n_instances):
             inst_id = f"{fn}/{next(self._inst_seq)}"
@@ -856,7 +1102,10 @@ class ServingEngine:
                                     prefill_buckets=prefill_buckets,
                                     block_size=block_size,
                                     n_kv_blocks=n_kv_blocks, fused=fused,
-                                    prefix_sharing=prefix_sharing)
+                                    prefix_sharing=prefix_sharing,
+                                    sampling=sampling, speculate=speculate,
+                                    draft_model=draft_model,
+                                    draft_key=draft_key)
             self.instances[inst_id] = inst
             self.scheduler.register(inst_id, alloc)
             ids.append(inst_id)
@@ -939,11 +1188,13 @@ class ServingEngine:
         # a paged one would out-grow its block-table row mid-admission —
         # or, worse, head-of-line livelock on a pool smaller than the
         # request's lifetime (nothing in flight to ever free blocks).
-        rows = int(prompt.shape[0]) + max_new_tokens - 1
+        rows = (int(prompt.shape[0]) + max_new_tokens - 1
+                + inst._spec_k(max_new_tokens))
         if rows > inst.max_len:
             raise ValueError(
                 f"request needs {rows} KV rows (prompt "
-                f"{int(prompt.shape[0])} + {max_new_tokens} new tokens) > "
+                f"{int(prompt.shape[0])} + {max_new_tokens} new tokens + "
+                f"{inst._spec_k(max_new_tokens)} speculation margin) > "
                 f"max_len {inst.max_len} of {inst.inst_id}")
         if (inst.batching == "paged" and max_new_tokens > 1
                 and blocks_needed(rows, inst.block_size)
@@ -1067,5 +1318,6 @@ class ServingEngine:
         plus prefix-sharing hits and COW resolutions."""
         return {k: {"steps": v.steps, "syncs": v.sync_count,
                     "uploads": v.uploads, "shared_hits": v.shared_block_hits,
-                    "cow": v.cow_count}
+                    "cow": v.cow_count, "spec_proposed": v.spec_proposed,
+                    "spec_accepted": v.spec_accepted}
                 for k, v in self.instances.items()}

@@ -97,10 +97,16 @@ class ClusterFrontend:
         # Requests stranded by a node failure while their function has zero
         # live instances: re-routed as soon as a replacement deploys.
         self._pending: dict[str, list[ServeRequest]] = {}
-        # fn -> (max_len, block_size, paged block capacity or None), learned
-        # at placement so submissions during a podless heal window can still
-        # be validated (and parked) instead of dropped.
-        self._fn_limits: dict[str, tuple[int, int, Optional[int]]] = {}
+        # fn -> (max_len, block_size, paged block capacity or None, spec_k),
+        # learned at placement so submissions during a podless heal window
+        # can still be validated (and parked) instead of dropped.
+        self._fn_limits: dict[str, tuple[int, int, Optional[int], int]] = {}
+        # Functions whose placements pinned draft weights in the fleet
+        # store (speculative decoding), so closing releases both keys.
+        self._fn_draft: set[str] = set()
+        # fn -> draft Model, built once for fleet-store staging (the engine
+        # keeps its own per-node cache for the executors).
+        self._draft_models: dict[str, Any] = {}
         self._req_seq = itertools.count()
         self._t0 = time.perf_counter()
 
@@ -163,7 +169,10 @@ class ClusterFrontend:
                        n_kv_blocks: Optional[int] = None,
                        fused: bool = True, prefix_sharing: bool = True,
                        kv_shared_frac: float = 0.0,
-                       weights_loader: Optional[Any] = None
+                       weights_loader: Optional[Any] = None,
+                       sampling: Optional[Any] = None,
+                       speculate: Optional[Any] = None,
+                       draft_params: Optional[Any] = None
                        ) -> Optional[str]:
         """Place ONE instance via MRA + memory admission with spillover.
 
@@ -196,6 +205,16 @@ class ClusterFrontend:
         then allowed: a host/peer hit re-uploads the staged shards, and
         a true cold miss calls ``weights_loader()`` — the origin fetch
         is paid inside the measured cold-start window.
+
+        ``speculate`` (a ``SpecConfig``) deploys the speculative
+        draft/verify hot path: the draft weights (``draft_params``)
+        charge the same MRA rectangle and memory admission as the target
+        (their bytes fold into the function's weight footprint), and
+        with a fleet ``model_store`` they ride the identical warm tier
+        under the ``"{fn}#draft"`` key — a scale-up on a node that
+        staged the draft before re-uploads it host->device instead of
+        paying the origin path.  ``sampling`` (a ``SamplingConfig``)
+        turns on fused on-device stochastic sampling.
         """
         t_start = time.perf_counter()
         if not 0.0 <= kv_shared_frac < 1.0:
@@ -226,6 +245,21 @@ class ClusterFrontend:
                 weight_bytes = pytree_nbytes(params)
         else:
             weight_bytes = pytree_nbytes(params)
+        if speculate is not None:
+            # The draft charges the same rectangle and admission as the
+            # target: its bytes fold into the function's weight footprint
+            # (shared per node through the store exactly like the target).
+            if draft_params is not None:
+                weight_bytes += pytree_nbytes(draft_params)
+            else:
+                staged = (self.model_store.staged_nbytes(f"{fn}#draft")
+                          if self.model_store is not None else None)
+                if staged is None:
+                    raise ValueError(
+                        f"function {fn!r} sets speculate but has no draft "
+                        f"weights (pass draft_params or stage them in the "
+                        f"fleet store)")
+                weight_bytes += staged
         created_mm = fn not in self._fn_mm
         mm = self._fn_mm.setdefault(
             fn, MemoryModel(weight_bytes=weight_bytes,
@@ -276,6 +310,8 @@ class ClusterFrontend:
             return None
         event = None
         deploy_params = params
+        deploy_draft = draft_params
+        draft_acquired = False
         if self.model_store is not None:
             resident = self.engines[placement.node].store.contains(fn)
             deploy_params, event = self.model_store.acquire(
@@ -283,12 +319,30 @@ class ClusterFrontend:
                 loader=weights_loader, resident=resident,
                 mode=self.cold_start)
             event.placed_at = t_start  # TTFT window opens at call entry
+            if speculate is not None:
+                # Draft weights ride the same warm tier under "{fn}#draft":
+                # device-resident engine copy > host-staged shards > peer >
+                # cold stage from draft_params.
+                dkey = f"{fn}#draft"
+                if fn not in self._draft_models:
+                    from repro.models.model import build_model
+                    self._draft_models[fn] = build_model(speculate.draft_cfg)
+                resident_d = self.engines[placement.node].store.contains(
+                    dkey)
+                deploy_draft, _ = self.model_store.acquire(
+                    placement.node, dkey, self._draft_models[fn],
+                    params=draft_params, resident=resident_d,
+                    mode=self.cold_start)
+                draft_acquired = True
+                self._fn_draft.add(fn)
         try:
             inst_id = self.engines[placement.node].deploy(
                 fn, model, deploy_params, alloc, n_instances=1,
                 max_batch=max_batch, max_len=max_len, batching=batching,
                 block_size=block_size, n_kv_blocks=n_kv_blocks,
-                fused=fused, prefix_sharing=prefix_sharing)[0]
+                fused=fused, prefix_sharing=prefix_sharing,
+                sampling=sampling, speculate=speculate,
+                draft_params=deploy_draft)[0]
         except Exception:
             # The rectangle was reserved before the engine ran; a failed
             # deploy must not leak it (or a provisional memory-model entry,
@@ -296,6 +350,8 @@ class ClusterFrontend:
             self.pool.release(placement)
             if self.model_store is not None:
                 self.model_store.release(placement.node, fn)
+                if draft_acquired:
+                    self.model_store.release(placement.node, f"{fn}#draft")
             rollback_mm()
             raise
         if event is not None:
@@ -306,7 +362,8 @@ class ClusterFrontend:
         inst = self.engines[placement.node].instances[inst_id]
         self._fn_limits[fn] = (max_len, block_size,
                                inst.allocator.capacity
-                               if batching == "paged" else None)
+                               if batching == "paged" else None,
+                               speculate.k if speculate is not None else 0)
         # Requests parked while the function had zero live instances.
         for req in self._pending.pop(fn, []):
             self._enqueue(fn, req)
@@ -319,7 +376,10 @@ class ClusterFrontend:
                block_size: int = 16,
                n_kv_blocks: Optional[int] = None,
                fused: bool = True, prefix_sharing: bool = True,
-               kv_shared_frac: float = 0.0) -> list[str]:
+               kv_shared_frac: float = 0.0,
+               sampling: Optional[Any] = None,
+               speculate: Optional[Any] = None,
+               draft_params: Optional[Any] = None) -> list[str]:
         """Place ``n_instances`` of ``fn`` across the fleet via MRA +
         memory admission; returns ``node:inst_id`` handles."""
         handles = []
@@ -330,7 +390,8 @@ class ClusterFrontend:
                 framework_bytes=framework_bytes,
                 block_size=block_size, n_kv_blocks=n_kv_blocks, fused=fused,
                 prefix_sharing=prefix_sharing,
-                kv_shared_frac=kv_shared_frac)
+                kv_shared_frac=kv_shared_frac, sampling=sampling,
+                speculate=speculate, draft_params=draft_params)
             if handle is None:
                 raise RuntimeError(
                     f"no node can host {fn} at alloc {alloc} "
@@ -387,8 +448,9 @@ class ClusterFrontend:
             # error: there is no config to validate against.
             if fn not in self._fn_limits:
                 raise KeyError(f"function {fn} is not deployed")
-            max_len, block_size, blocks_cap = self._fn_limits[fn]
-            rows = int(prompt.shape[0]) + max_new_tokens - 1
+            max_len, block_size, blocks_cap, spec_k = self._fn_limits[fn]
+            rows = (int(prompt.shape[0]) + max_new_tokens - 1
+                    + (spec_k if max_new_tokens > 1 else 0))
             if rows > max_len:
                 raise ValueError(
                     f"request needs {rows} KV rows > max_len {max_len} "
@@ -534,6 +596,11 @@ class ClusterFrontend:
         inst = eng.instances.get(inst_id)
         if inst is None or inst.retired or inst.batching == "static":
             return None
+        if inst.speculate is not None:
+            # Mid-flight speculative state (draft side cache, device PRNG
+            # key stream) does not export; speculating pods scale, they
+            # don't migrate.
+            return None
         mm = self._fn_mm.get(fn)
         # Copy-then-delete: the target must admit the instance while the
         # source still holds its memory.
@@ -604,10 +671,13 @@ class ClusterFrontend:
                     # the entry stays cached (evictable) for the next
                     # scale-up to hit warm.
                     self.model_store.release(node, p.fn)
+                    if p.fn in self._fn_draft:
+                        self.model_store.release(node, f"{p.fn}#draft")
                 if not any(q.fn == p.fn for q in self.placements):
                     # Fully drained: drop the per-function MemoryModel so a
                     # redeploy may use a different data-plane config.
                     self._fn_mm.pop(p.fn, None)
+                    self._fn_draft.discard(p.fn)
                 return
 
     # -- metrics -----------------------------------------------------------

@@ -1,0 +1,190 @@
+"""Speculative decoding on the sync-free hot path.
+
+A draft model living in a sliver of the same MRA rectangle proposes ``k``
+tokens; the target model scores the whole window ``[t0, d_1..d_k]`` in one
+batched ``verify_step`` forward; on-device rejection sampling
+(``ops.speculative_verify``) folds the accepted prefix plus one corrected /
+bonus token back into the round.  Everything — the k draft steps, the
+verify forward, acceptance folding, position advance, and the PRNG key
+split — runs inside ONE jitted round, so the engine's pump pass still
+spends exactly one host sync (pulling the (B, k+1) emitted-token window
+and the (B,) acceptance counts instead of a (B,) token vector).
+
+Cache discipline (the rollback invariants the property tests pin down):
+
+* **Target cache** — the verify step writes the window's KV rows at
+  ``pos..pos+k``; the engine advances ``pos`` by ``n_accept + 1`` only.
+  Rejected rows beyond the new position are garbage the causal mask hides
+  until the next round overwrites them (the bucketed-prefill argument), so
+  rollback is a pure position trim: **no block is ever freed and no
+  shared/COW block is ever written** — the engine pre-resolves
+  copy-on-write for every block the window can touch before dispatch.
+* **Draft cache** — a small dense slot-cache side pool (even under a paged
+  target; the draft is tiny).  Each round starts by overwriting the draft
+  position vector from the target's, then k+1 draft steps write rows
+  ``pos..pos+k`` (the last step discards its logits and exists only to fill
+  row ``pos+k``, which a fully-accepted round advances past); the accepted
+  prefix leaves those rows *correct* for the next round and the rejected
+  tail is overwritten before it is ever attended.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scaling import expected_tokens_per_round  # noqa: F401 (re-export)
+from repro.kernels import ops
+from repro.models import transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingConfig:
+    """On-device stochastic sampling knobs for the fused decode path.
+
+    ``temperature == 0`` degenerates to greedy argmax (bit-identical to the
+    default fused path).  ``seed`` feeds the engine's device-resident PRNG
+    key; the ``fused=False`` reference path replays the exact same key
+    stream eagerly, so fused and non-fused sampled runs diff bit-identical.
+    """
+
+    temperature: float = 1.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0 < self.top_p <= 1 and not (self.top_p == 0 and
+                                            self.temperature == 0):
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+GREEDY = SamplingConfig(temperature=0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative decoding configuration for a ``FunctionInstance``.
+
+    ``draft_cfg`` is the draft model's ``ModelConfig`` (same tokenizer /
+    real vocab as the target; padded vocab may differ).  ``k`` draft tokens
+    are proposed per round, so each round emits between 1 (immediate
+    rejection) and ``k + 1`` (full acceptance + bonus) tokens.
+    """
+
+    draft_cfg: Any
+    k: int = 4
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        if self.k < 1:
+            raise ValueError(f"speculation depth k must be >= 1, got {self.k}")
+        if getattr(self.draft_cfg, "vocab_size", None) is None:
+            raise ValueError("draft_cfg must be a ModelConfig-like object "
+                             "with a vocab_size")
+
+
+def _draft_propose(draft_model, dparams, tok, dcache, keys, sampling,
+                   k: int):
+    """Run k fused draft steps; returns (draft_tokens (B,k),
+    draft_logits (B,k,Vd), dcache).  The draft chain is the plain
+    ``decode_step`` path, so with draft == target it is literally the
+    non-speculative decode computation."""
+    dcfg = draft_model.cfg
+    t = tok
+    toks, logits_list = [], []
+    for j in range(k):
+        logits, dcache = transformer.decode_step(dparams, t, dcache, dcfg)
+        t = transformer.sampled_tokens(logits, dcfg, keys[j], sampling)
+        toks.append(t)
+        logits_list.append(logits)
+    # One extra (logit-discarded) step consuming d_k so row pos+k holds its
+    # KV: on full acceptance pos advances by k+1 and the next round's draft
+    # would otherwise attend a never-written hole at the old pos+k.
+    _, dcache = transformer.decode_step(dparams, t, dcache, dcfg)
+    return (jnp.stack(toks, axis=1), jnp.stack(logits_list, axis=1), dcache)
+
+
+def _verify_fold(cfg, tlogits, draft_logits, draft_tokens, vkey, sampling):
+    """Rejection-sample the window on device; returns (out (B,k+1),
+    n_emit (B,), tok_new (B,))."""
+    out, n_accept = ops.speculative_verify(
+        tlogits, draft_logits, draft_tokens, vkey, cfg.vocab_size,
+        temperature=sampling.temperature, top_k=sampling.top_k,
+        top_p=sampling.top_p, greedy=sampling.greedy)
+    n_emit = n_accept + 1
+    tok_new = jnp.take_along_axis(out, n_accept[:, None], axis=1)[:, 0]
+    return out, n_emit, tok_new
+
+
+def spec_round_continuous(model, draft_model, k: int,
+                          sampling: SamplingConfig):
+    """Build the fused continuous-batching speculative round.
+
+    round(params, dparams, tok, cache, dcache, key) ->
+        (tok_new, cache, dcache, out (B, k+1), n_emit (B,), new_key)
+
+    One jitted call: k draft decode steps, one W=k+1 verify forward, the
+    on-device accept/correct fold, and the per-slot position advance
+    (``cache["pos"] += n_emit``).  ``tok``, both caches, and the key are
+    donated by the engine exactly like the plain fused round.
+    """
+    cfg = model.cfg
+
+    def round_fn(params, dparams, tok, cache, dcache, key):
+        keys = jax.random.split(key, k + 2)
+        new_key, vkey = keys[0], keys[k + 1]
+        dcache = dict(dcache, pos=cache["pos"])
+        draft_tokens, draft_logits, dcache = _draft_propose(
+            draft_model, dparams, tok, dcache, keys[1:k + 1], sampling, k)
+        window = jnp.concatenate([tok[:, None], draft_tokens], axis=1)
+        tlogits, cache = transformer.verify_step(params, window, cache, cfg)
+        out, n_emit, tok_new = _verify_fold(cfg, tlogits, draft_logits,
+                                            draft_tokens, vkey, sampling)
+        cache = dict(cache, pos=cache["pos"] + n_emit)
+        return tok_new, cache, dcache, out, n_emit, new_key
+
+    return round_fn
+
+
+def spec_round_paged(model, draft_model, k: int, sampling: SamplingConfig):
+    """Paged-plane speculative round.
+
+    round(params, dparams, tok, cache, dcache, tables, pos, active, key) ->
+        (tok_new, cache, dcache, new_pos, out, n_emit, new_key)
+
+    The target writes through the per-position paged scatter (inactive
+    slots drop, COW already resolved by the engine for the whole window);
+    the draft keeps its dense side cache.  Free slots neither write nor
+    advance (``pos + n_emit * active``).
+    """
+    cfg = model.cfg
+
+    def round_fn(params, dparams, tok, cache, dcache, tables, pos, active,
+                 key):
+        keys = jax.random.split(key, k + 2)
+        new_key, vkey = keys[0], keys[k + 1]
+        active = jnp.asarray(active, jnp.int32)
+        dcache = dict(dcache, pos=pos)
+        draft_tokens, draft_logits, dcache = _draft_propose(
+            draft_model, dparams, tok, dcache, keys[1:k + 1], sampling, k)
+        window = jnp.concatenate([tok[:, None], draft_tokens], axis=1)
+        tlogits, cache = transformer.verify_step_paged(
+            params, window, cache, tables, pos, cfg, active)
+        out, n_emit, tok_new = _verify_fold(cfg, tlogits, draft_logits,
+                                            draft_tokens, vkey, sampling)
+        n_emit = n_emit * active
+        return tok_new, cache, dcache, pos + n_emit, out, n_emit, new_key
+
+    return round_fn

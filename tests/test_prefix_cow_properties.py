@@ -3,7 +3,9 @@
 Each property drives a random interleaving of the operations the engine
 performs on ``KVPageAllocator`` + ``PageTable`` — admit (with content-hash
 prefix matching and tail COW-spare reservation), decode append (through
-``writable_block``, the single COW enforcement point), release, migrate
+``writable_block``, the single COW enforcement point), speculative
+draft/verify rounds (window write + acceptance rollback, mirroring the
+engine's ``_cow_round`` span of ``1 + k``), release, migrate
 (import-then-release with full-block re-sharing, mirroring
 ``import_slot``), and defrag — against a pure-python mirror of what the
 device would hold: per-block token contents and per-sequence token
@@ -119,6 +121,41 @@ class Driver:
         m["tokens"].append(tok)
         m["budget"] -= 1
 
+    def speculate(self, seq: int, k: int, n_accept: int) -> None:
+        """One speculative draft-k/verify-1 round mirrored at the
+        page-table level: the whole window ``pos..pos+k`` is COW-resolved
+        through ``writable_block`` BEFORE any row lands (the engine's
+        ``_cow_round`` span is ``1 + k`` when speculating), then only the
+        accepted prefix advances the history — a rejection is a position
+        rollback, never a free and never a write to a still-shared block.
+        The rejected tail rows stay in the sequence's private blocks and
+        are overwritten by the next round before anything attends them.
+        """
+        m = self.model[seq]
+        k = min(k, m["budget"] - 1, m["rows"] - len(m["tokens"]) - 1)
+        if k < 1:
+            return
+        n_accept = min(n_accept, k)
+        frees_before = self.alloc.n_frees
+        pos0 = len(m["tokens"])
+        toks = [(p * 11 + seq) % 64 for p in range(pos0, pos0 + k + 1)]
+        for i, tok in enumerate(toks):
+            pos = pos0 + i
+            block, move = self.pt.writable_block(seq, pos)
+            assert self.alloc.refcount(block) == 1, \
+                "speculative window write aimed at a still-shared block"
+            if move is not None:
+                old, new = move
+                assert new == block
+                self.content[new] = dict(self.content.get(old, {}))
+            self.content.setdefault(block, {})[pos % BS] = tok
+        emitted = toks[:n_accept + 1]
+        m["tokens"].extend(emitted)
+        m["budget"] -= len(emitted)
+        assert self.alloc.n_frees == frees_before, (
+            "speculative rollback freed a block (rollback must be a "
+            "position trim only)")
+
     def release(self, seq: int) -> None:
         self.pt.release(seq)
         del self.model[seq]
@@ -212,13 +249,17 @@ def _run(n_blocks: int, ops, *, check_each: bool = True) -> Driver:
             d.migrate(live[a % len(live)])
         elif kind == 5:
             d.alloc.defrag()
+        elif kind == 6 and live:
+            seq = live[a % len(live)]
+            k = 1 + b % 4
+            d.speculate(seq, k, n_accept=a % (k + 1))
         if check_each:
             d.check_refcounts()
             d.check_tokens()
     return d
 
 
-ops_st = st.lists(st.tuples(st.integers(0, 5), st.integers(0, 31),
+ops_st = st.lists(st.tuples(st.integers(0, 6), st.integers(0, 31),
                             st.integers(0, 31)),
                   min_size=1, max_size=40)
 
@@ -323,6 +364,23 @@ def test_histories_reconstruct_bit_identically(n_blocks, ops):
     mapped blocks after every op — shared blocks are never mutated, COW
     copies preserve content, migration re-lands every row."""
     d = _run(n_blocks, ops)                   # check_tokens runs per-op
+    d.check_tokens()
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(1, 12), st.integers(1, 4), st.integers(0, 4))
+def test_speculative_rollback_never_frees_or_corrupts(plen, k, n_accept):
+    """Speculative rejection on a prefix-shared pair: the window write
+    COW-resolves first, the rollback frees nothing, and the sibling's
+    shared history stays bit-identical."""
+    d = Driver(32)
+    prompt = list(BASE[2][:plen])
+    d.admit(prompt, 8)
+    s2 = d.admit(list(prompt), 8)
+    frees = d.alloc.n_frees
+    d.speculate(s2, k, n_accept)
+    assert d.alloc.n_frees == frees, "rollback must not free blocks"
+    d.check_refcounts()
     d.check_tokens()
 
 

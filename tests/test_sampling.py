@@ -1,0 +1,165 @@
+"""Fused on-device sampler vs host reference: statistical + edge cases.
+
+``ops.sample_tokens`` is the device side of the sync-free sampled decode
+round; the engine's ``fused=False`` path replays the same PRNG key stream
+eagerly.  These tests pin the contract both paths share:
+
+* ``temperature -> 0`` degenerates to ``greedy_sample`` (bit-identical
+  argmax, vocab-clipped);
+* a sampled id is always ``< vocab_size`` even when padded-vocab columns
+  hold the largest logits (the clip runs before the filters);
+* top-k draws land only inside the top-k set, top-p draws only inside
+  the nucleus mass cutoff, and ``top_p -> 0`` keeps the argmax;
+* device sampling is bit-reproducible from the key — same key, same
+  token — which is what makes the engine's fused/non-fused paths diff
+  bit-identically;
+* draw frequencies match the host softmax distribution within a
+  tolerance band (seeded via ``--repro-seed``: the ``repro_rng`` fixture
+  generates the logits, so a failure replays exactly).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+V = 48          # real vocab
+VPAD = 64       # padded vocab (16 padding columns)
+
+
+def _logits(rng, batch=4, scale=3.0, pad_high=False):
+    """Random padded logits.  By default padding columns sit low (a real
+    lm head never routes mass there); ``pad_high`` instead makes them the
+    largest entries to probe the stochastic sampler's vocab clip.  Note
+    ``greedy_sample`` argmaxes the PADDED logits by design (bit-parity
+    with the engine's greedy fused path), so the ``temperature == 0``
+    tests use the default low padding."""
+    x = rng.normal(size=(batch, VPAD)).astype(np.float32) * scale
+    x[:, V:] = 100.0 if pad_high else -1e9
+    return jnp.asarray(x)
+
+
+def _host_softmax(logits_np, temperature=1.0):
+    x = logits_np[:, :V].astype(np.float64) / temperature
+    x -= x.max(axis=-1, keepdims=True)
+    p = np.exp(x)
+    return p / p.sum(axis=-1, keepdims=True)
+
+
+def test_temperature_zero_is_argmax(repro_rng):
+    logits = _logits(repro_rng)
+    tok = ops.sample_tokens(logits, jax.random.key(0), V, temperature=0.0)
+    ref = np.argmax(np.asarray(logits)[:, :V], axis=-1)
+    assert np.array_equal(np.asarray(tok), ref)
+    # and bit-identical to the greedy kernel the plain fused path uses
+    assert np.array_equal(np.asarray(tok),
+                          np.asarray(ops.greedy_sample(logits, V)))
+
+
+def test_vocab_clip_never_samples_padding(repro_rng):
+    """Padding columns carry +100 logits; no draw may land there."""
+    logits = _logits(repro_rng, pad_high=True)
+    for i in range(32):
+        tok = ops.sample_tokens(logits, jax.random.key(i), V,
+                                temperature=1.5)
+        assert np.all(np.asarray(tok) < V)
+
+
+def test_top_k_draws_stay_in_top_k_set(repro_rng):
+    logits = _logits(repro_rng)
+    k = 5
+    order = np.argsort(-np.asarray(logits)[:, :V], axis=-1)[:, :k]
+    for i in range(32):
+        tok = np.asarray(ops.sample_tokens(logits, jax.random.key(i), V,
+                                           temperature=1.0, top_k=k))
+        for b in range(tok.shape[0]):
+            assert tok[b] in order[b], (
+                f"top-k draw {tok[b]} outside top-{k} set {order[b]}")
+
+
+def test_top_p_mass_cutoff(repro_rng):
+    """Nucleus: draws only from the smallest prefix of sorted probs whose
+    mass-before is < top_p (the argmax always survives)."""
+    logits = _logits(repro_rng, scale=2.0)
+    probs = _host_softmax(np.asarray(logits))
+    top_p = 0.6
+    allowed = []
+    for b in range(probs.shape[0]):
+        order = np.argsort(-probs[b])
+        before = np.cumsum(probs[b][order]) - probs[b][order]
+        n_keep = max(int((before < top_p).sum()), 1)
+        allowed.append(set(order[:n_keep].tolist()))
+    for i in range(32):
+        tok = np.asarray(ops.sample_tokens(logits, jax.random.key(i), V,
+                                           temperature=1.0, top_p=top_p))
+        for b in range(tok.shape[0]):
+            assert tok[b] in allowed[b], (
+                f"top-p draw {tok[b]} outside nucleus {sorted(allowed[b])}")
+
+
+def test_top_p_zero_keeps_argmax(repro_rng):
+    """top_p -> 0 clamps the nucleus to >= 1 entry: pure argmax."""
+    logits = _logits(repro_rng)
+    ref = np.argmax(np.asarray(logits)[:, :V], axis=-1)
+    for i in range(8):
+        tok = ops.sample_tokens(logits, jax.random.key(i), V,
+                                temperature=1.0, top_p=1e-9)
+        assert np.array_equal(np.asarray(tok), ref)
+
+
+def test_same_key_bit_reproducible(repro_rng):
+    """The key fully determines the draw — the property the engine's
+    fused and ``fused=False`` sampled paths rely on to diff
+    bit-identically from one seed."""
+    logits = _logits(repro_rng)
+    for i in range(8):
+        a = ops.sample_tokens(logits, jax.random.key(i), V,
+                              temperature=0.8, top_k=7, top_p=0.9)
+        b = ops.sample_tokens(logits, jax.random.key(i), V,
+                              temperature=0.8, top_k=7, top_p=0.9)
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_distribution_matches_host_softmax(repro_rng, repro_seed):
+    """Tolerance-banded frequency check vs the numpy softmax reference
+    (small vocab, many draws, Gumbel-trick categorical)."""
+    vocab = 8
+    logits_np = np.zeros((1, vocab), np.float32)
+    logits_np[0, :5] = repro_rng.normal(size=5).astype(np.float32) * 1.5
+    logits_np[0, 5:] = -50.0          # ~zero mass tail
+    logits = jnp.asarray(logits_np)
+    n = 4000
+    keys = jax.random.split(jax.random.key(repro_seed + 11), n)
+    toks = np.asarray(jax.vmap(
+        lambda key: ops.sample_tokens(logits, key, vocab,
+                                      temperature=1.0))(keys)).ravel()
+    freq = np.bincount(toks, minlength=vocab) / n
+    x = logits_np[0].astype(np.float64)
+    x -= x.max()
+    p = np.exp(x) / np.exp(x).sum()
+    # band: 5 sigma of the binomial sampling error per bucket, floor 0.02
+    tol = np.maximum(5.0 * np.sqrt(p * (1 - p) / n), 0.02)
+    assert np.all(np.abs(freq - p) <= tol), (
+        f"freq {freq.round(3)} vs softmax {p.round(3)} (tol {tol.round(3)})")
+
+
+def test_temperature_sharpens_distribution(repro_rng, repro_seed):
+    """Lower temperature concentrates mass on the argmax (statistical,
+    banded): P_hat[argmax | T=0.5] > P_hat[argmax | T=2.0]."""
+    vocab = 8
+    logits_np = repro_rng.normal(size=(1, vocab)).astype(np.float32)
+    logits = jnp.asarray(logits_np)
+    top = int(np.argmax(logits_np[0]))
+    n = 2000
+    keys = jax.random.split(jax.random.key(repro_seed + 13), n)
+
+    def frac_top(temp):
+        toks = np.asarray(jax.vmap(
+            lambda key: ops.sample_tokens(logits, key, vocab,
+                                          temperature=temp))(keys)).ravel()
+        return float((toks == top).mean())
+
+    assert frac_top(0.5) > frac_top(2.0) + 0.05

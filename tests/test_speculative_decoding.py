@@ -1,0 +1,213 @@
+"""Speculative decoding on the sync-free hot path, end to end.
+
+The load-bearing invariant: every token a speculative round emits is the
+TARGET's greedy continuation of the true prefix (scored by ``verify_step``
+over a correct target cache), so the greedy output stream is bit-identical
+to the non-speculative fused path for ANY draft — draft quality only moves
+acceptance and throughput, never content.  Pinned here:
+
+* spec-on == spec-off greedy streams, continuous AND paged planes, with
+  draft == target (acceptance 1.0) and with a disagreeing draft;
+* exactly one host sync per pump pass with speculation on (the draft-k /
+  verify-1 loop adds zero host round-trips);
+* sampled fused rounds replay bit-identically on the eager
+  ``fused=False`` reference path from the same ``SamplingConfig.seed``;
+* the generic-family fused wrapper (rwkv: no transformer KV cache at
+  all) routes through the same shared sampler and keeps syncs == steps;
+* ``FunctionSpec.speculate`` flows through profiler-shaped points to
+  identical sim-vs-live ``decision_signature`` sequences.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny_config
+from repro.core.resources import Alloc
+from repro.serving import ServingEngine
+from repro.serving.speculative import SamplingConfig, SpecConfig
+
+FULL = Alloc(sm=1.0, quota_request=0.9, quota_limit=0.9)
+
+
+def _run(model, params, *, batching="continuous", fused=True,
+         sampling=None, speculate=None, draft_params=None, n_reqs=4,
+         max_new=9, prompt_len=6, seed=0):
+    """Serve a deterministic workload; return (token streams, telemetry)."""
+    engine = ServingEngine(window=0.1)
+    engine.deploy("lm", model, params, FULL, n_instances=1, max_batch=2,
+                  max_len=64, batching=batching, fused=fused,
+                  sampling=sampling, speculate=speculate,
+                  draft_params=draft_params)
+    rng = np.random.default_rng(seed)
+    reqs = [engine.submit(
+        "lm", rng.integers(0, model.cfg.vocab_size, prompt_len,
+                           dtype=np.int32), max_new_tokens=max_new)
+        for _ in range(n_reqs)]
+    done = engine.pump(budget_s=120.0)
+    assert done == len(reqs)
+    tele = list(engine.telemetry().values())[0]
+    return [list(r.tokens_out) for r in reqs], tele
+
+
+@pytest.mark.parametrize("batching", ["continuous", "paged"])
+def test_spec_greedy_bit_identical_draft_equals_target(
+        tiny_model, tiny_params, batching):
+    """draft == target: acceptance 1.0, one sync per pass, identical
+    greedy streams on both KV planes."""
+    base, _ = _run(tiny_model, tiny_params, batching=batching)
+    spec = SpecConfig(draft_cfg=tiny_config(), k=4)
+    out, tele = _run(tiny_model, tiny_params, batching=batching,
+                     speculate=spec, draft_params=tiny_params)
+    assert out == base
+    assert tele["syncs"] == tele["steps"], (
+        f"speculative round broke the one-sync rule: {tele}")
+    assert tele["spec_proposed"] > 0
+    assert tele["spec_accepted"] == tele["spec_proposed"], (
+        "draft == target must accept every proposal")
+
+
+@pytest.mark.parametrize("batching", ["continuous", "paged"])
+def test_spec_greedy_bit_identical_any_draft(tiny_model, tiny_params,
+                                             batching):
+    """A DISAGREEING draft (different init) still yields bit-identical
+    greedy output — rejections cost throughput, never content."""
+    base, _ = _run(tiny_model, tiny_params, batching=batching)
+    draft_params = tiny_model.init(jax.random.key(999))  # disagrees
+    spec = SpecConfig(draft_cfg=tiny_config(), k=3)
+    out, tele = _run(tiny_model, tiny_params, batching=batching,
+                     speculate=spec, draft_params=draft_params)
+    assert out == base
+    assert tele["syncs"] == tele["steps"]
+    # a random draft must actually get rejected sometimes, or this test
+    # would not be exercising the rollback path at all
+    assert tele["spec_accepted"] < tele["spec_proposed"]
+
+
+@pytest.mark.parametrize("batching", ["continuous", "paged"])
+def test_sampled_fused_matches_host_reference(tiny_model, tiny_params,
+                                              batching):
+    """Stochastic fused rounds replay bit-identically on the eager
+    ``fused=False`` path from the same seed (same key stream)."""
+    sampling = SamplingConfig(temperature=0.8, top_k=12, top_p=0.9, seed=5)
+    fused, tele = _run(tiny_model, tiny_params, batching=batching,
+                       sampling=sampling)
+    host, _ = _run(tiny_model, tiny_params, batching=batching,
+                   fused=False, sampling=sampling)
+    assert fused == host
+    assert tele["syncs"] == tele["steps"]
+
+
+def test_spec_off_reference_unchanged(tiny_model, tiny_params):
+    """``speculate=None`` + ``fused=False`` still produces the same greedy
+    stream as the fused path (the PR-5 reference contract)."""
+    base, _ = _run(tiny_model, tiny_params)
+    host, _ = _run(tiny_model, tiny_params, fused=False)
+    assert base == host
+
+
+def test_rwkv_generic_fused_sampler_sync_count():
+    """Satellite: the generic-family wrapper (rwkv has no transformer KV
+    cache) routes stochastic sampling through the shared fused sampler —
+    syncs stay == steps, and the eager reference path bit-matches."""
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    model = build_model(get_config("rwkv6-1.6b", reduced=True))
+    params = model.init(jax.random.key(3))
+    sampling = SamplingConfig(temperature=0.9, top_k=8, seed=7)
+    fused, tele = _run(model, params, n_reqs=2, max_new=6,
+                       sampling=sampling)
+    assert tele["syncs"] == tele["steps"], (
+        f"generic-family fused sampled round added host syncs: {tele}")
+    host, _ = _run(model, params, n_reqs=2, max_new=6, fused=False,
+                   sampling=sampling)
+    assert fused == host
+
+
+def test_speculating_instance_refuses_export(tiny_model, tiny_params):
+    """Migration of a speculating pod is unsupported by design (the draft
+    side cache does not travel); the engine must refuse loudly."""
+    engine = ServingEngine(window=0.1)
+    engine.deploy("lm", tiny_model, tiny_params, FULL, n_instances=1,
+                  max_batch=2, max_len=64, batching="paged",
+                  speculate=SpecConfig(draft_cfg=tiny_config(), k=2),
+                  draft_params=tiny_params)
+    req = engine.submit("lm", np.arange(6, dtype=np.int32),
+                        max_new_tokens=16)
+    inst = list(engine.instances.values())[0]
+    engine.pump(budget_s=0.2)
+    if not req.done:
+        slot = next(i for i, r in enumerate(inst.slots) if r is req)
+        with pytest.raises(ValueError, match="speculating"):
+            inst.export_slot(slot)
+
+
+# -------------------------------------------------------------------------
+# Control plane: the speculation axis yields identical sim/live decisions
+# -------------------------------------------------------------------------
+
+
+def test_sim_live_decision_signature_with_speculate(tiny_model, tiny_params):
+    from repro.control import (ControlPlane, FunctionSpec, LiveBackend,
+                               SimBackend, decision_signature, ramp)
+    from repro.core.cluster import Cluster
+    from repro.core.scaling import ProfilePoint
+    from repro.core.workload import ServiceCurve
+    from repro.serving import ClusterFrontend
+
+    profile = (
+        ProfilePoint(sm=0.25, quota=0.4, throughput=2.0, p99_latency=0.05,
+                     spec_k=4, acceptance=0.8),
+        ProfilePoint(sm=0.45, quota=0.8, throughput=5.0, p99_latency=0.03,
+                     spec_k=4, acceptance=0.8),
+    )
+    curve = ServiceCurve(name="chat", r_max=5.0, sm_sat=0.45, p=1.0,
+                         weight_bytes=1 << 20, framework_bytes=32 << 20)
+
+    def spec_for(factory):
+        return FunctionSpec(
+            name="chat", profile=profile, slo_latency=0.1,
+            target_rps=ramp([(0.0, 1.0), (2.0, 11.0), (5.0, 1.0)]),
+            headroom=1.2, min_instances=1, max_instances=5,
+            model_factory=factory, max_batch=2, max_len=32,
+            framework_bytes=32 * 1024 * 1024, curve=curve,
+            speculate=SpecConfig(draft_cfg=tiny_config(), k=4),
+            draft_factory=lambda: tiny_params)
+
+    frontend = ClusterFrontend(n_nodes=2, window=0.1)
+    live = ControlPlane(LiveBackend(frontend))
+    live.register(spec_for(lambda: (tiny_model, tiny_params)))
+
+    sim = ControlPlane(SimBackend(Cluster(n_nodes=2, sharing=True)))
+    sim.register(spec_for(None))
+
+    for tick in range(8):
+        live.reconcile(now=float(tick))
+        sim.reconcile(now=float(tick))
+
+    assert decision_signature(live.log) == decision_signature(sim.log)
+    assert len(live.log) > 0
+    # the live fleet actually speculates: serve a little traffic through it
+    rng = np.random.default_rng(0)
+    reqs = [frontend.submit("chat", rng.integers(0, 64, 6, dtype=np.int32),
+                            max_new_tokens=4) for _ in range(3)]
+    frontend.pump(budget_s=60.0)
+    assert all(r.done for r in reqs)
+    tele = [t for e in frontend.engines for t in e.telemetry().values()]
+    assert sum(t["spec_proposed"] for t in tele) > 0
+
+
+def test_spec_requires_slot_batching():
+    from repro.control import FunctionSpec
+    from repro.core.scaling import ProfilePoint
+
+    with pytest.raises(ValueError):
+        FunctionSpec(name="x",
+                     profile=(ProfilePoint(sm=0.2, quota=0.2,
+                                           throughput=1.0,
+                                           p99_latency=0.01),),
+                     slo_latency=0.1, batching="static",
+                     speculate=SpecConfig(draft_cfg=tiny_config(), k=2))
