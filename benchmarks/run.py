@@ -13,6 +13,7 @@
   cold   cold_start           fleet model-store cold-start tiers (TTFT)
   decode decode_throughput    sync-free fused decode hot path
   spec   decode_throughput    speculative draft/verify round (--speculate)
+  shard  sharded_pod          tensor-parallel pods: HBM/shard + tokens/s
 
 Every module writes its ``BENCH_*.json`` artifact to the repo root
 (``benchmarks.common.write_report``) regardless of the launch CWD.
@@ -45,6 +46,7 @@ MODULES = [
     ("cold", "benchmarks.cold_start", "run"),
     ("decode", "benchmarks.decode_throughput", "run"),
     ("spec", "benchmarks.decode_throughput", "run_spec"),
+    ("shard", "benchmarks.sharded_pod", "run"),
 ]
 
 
@@ -53,7 +55,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset "
                          "(fig8..fig13,fault,prefix,head,roof,cold,"
-                         "decode,spec)")
+                         "decode,spec,shard)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 

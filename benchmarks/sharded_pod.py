@@ -1,0 +1,167 @@
+"""Tensor-parallel sharded pods: per-shard HBM high-watermark and
+aggregate decode throughput across pod widths.
+
+Serves the same decode-heavy workload through one ``ClusterFrontend``
+pod at ``shards`` = 1, 2 and 4 (column-only exact TP over the forced
+host-device mesh) and reports, per width:
+
+* **per-shard HBM high-watermark** — resident weight + KV bytes on each
+  member device (``FunctionInstance.hbm_bytes_by_device``, counted by
+  ``addressable_shards`` so a sharded leaf charges each device only its
+  shard while the replicated row-parallel projections charge fully);
+* **aggregate decode tokens/s** of the lockstep pod.
+
+Hard acceptance checks: every sharded width emits a token stream
+bit-identical to the single-device reference (float32 params — the
+documented recipe, see ``src/repro/distributed/README.md``), and each
+member's watermark stays strictly below the single-device footprint.
+
+Emits ``BENCH_sharding.json`` (perf-trajectory artifact uploaded by CI,
+committed at the repo root) and runs as a CI smoke step with
+``--smoke``.
+
+Run:  PYTHONPATH=src python -m benchmarks.sharded_pod [--smoke]
+"""
+
+from __future__ import annotations
+
+import os
+
+# The mesh needs 4 host devices *before* jax initializes.  Appended, not
+# overwritten, so an explicit user topology wins (same guard as
+# tests/conftest.py).
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=4").strip()
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, write_report
+from repro.core.resources import Alloc
+from repro.models import build_model
+from repro.models.config import ModelConfig
+from repro.serving import ClusterFrontend
+
+MAX_BATCH = 4
+MAX_LEN = 64
+PROMPT_LEN = 8
+SHARD_WIDTHS = (1, 2, 4)
+ALLOC = Alloc(sm=0.25, quota_request=0.25, quota_limit=0.5)
+
+
+def _model():
+    cfg = ModelConfig(name="bench-tiny", family="dense", n_layers=2,
+                      d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+                      vocab_size=64, vocab_pad_multiple=32)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(7))
+    # float32: column-only TP is exact, but bf16 still wobbles by one ulp
+    # (constraint-induced codegen), which can flip near-tie argmax — f32
+    # keeps the bit-identity check meaningful.
+    params = jax.tree_util.tree_map(lambda x: x.astype(jnp.float32), params)
+    return model, params
+
+
+def _measure(model, params, shards: int, *, n_reqs: int,
+             max_new: int) -> dict:
+    """Serve ``n_reqs`` decode-heavy requests through one ``shards``-wide
+    pod; returns throughput + per-member HBM watermark + token streams."""
+    fe = ClusterFrontend(n_nodes=4)
+    handle = fe.place_instance("pod", model, params, ALLOC,
+                               max_batch=MAX_BATCH, max_len=MAX_LEN,
+                               shards=shards)
+    assert handle is not None, f"placement failed for shards={shards}"
+    [p] = fe.placements
+    inst = fe.engines[p.node].instances[p.inst_id]
+    rng = np.random.default_rng(3)
+
+    def submit(n):
+        return [fe.submit(
+            "pod", rng.integers(0, model.cfg.vocab_size, PROMPT_LEN,
+                                dtype=np.int32), max_new_tokens=max_new)
+            for _ in range(n)]
+
+    # Warm-up: compile the (mesh-keyed) executors outside the timed phase.
+    submit(2)
+    fe.pump(budget_s=60.0)
+
+    reqs = submit(n_reqs)
+    t0 = time.perf_counter()
+    fe.pump(budget_s=300.0)
+    elapsed = time.perf_counter() - t0
+    assert all(r.done for r in reqs), "requests left unfinished"
+    tokens = sum(len(r.tokens_out) for r in reqs)
+    hbm = inst.hbm_bytes_by_device()
+    return {
+        "shards": shards,
+        "member_nodes": list(p.member_nodes),
+        "requests": len(reqs),
+        "tokens": tokens,
+        "elapsed_s": elapsed,
+        "tokens_per_s": tokens / elapsed,
+        "hbm_bytes_by_device": {str(d): int(b) for d, b in sorted(
+            hbm.items())},
+        "hbm_high_watermark_bytes": max(hbm.values()),
+        "tokens_out": [list(r.tokens_out) for r in reqs],
+    }
+
+
+def _strip(stats: dict) -> dict:
+    return {k: v for k, v in stats.items() if k != "tokens_out"}
+
+
+def run(smoke: bool = False) -> list[Row]:
+    n_reqs = 8 if smoke else 32
+    max_new = 8 if smoke else 24
+    model, params = _model()
+    report: dict = {"config": {"max_batch": MAX_BATCH, "max_len": MAX_LEN,
+                               "prompt_len": PROMPT_LEN, "n_reqs": n_reqs,
+                               "max_new_tokens": max_new,
+                               "dtype": "float32",
+                               "shard_widths": list(SHARD_WIDTHS)}}
+    rows: list[Row] = []
+    results = {s: _measure(model, params, s, n_reqs=n_reqs,
+                           max_new=max_new) for s in SHARD_WIDTHS}
+    ref = results[1]
+    for s in SHARD_WIDTHS:
+        r = results[s]
+        report[f"shards{s}"] = _strip(r)
+        rows += [
+            Row("sharding", f"shards{s}.tokens_per_s", r["tokens_per_s"]),
+            Row("sharding", f"shards{s}.hbm_watermark_mib",
+                r["hbm_high_watermark_bytes"] / (1 << 20),
+                note="max per-member resident weight+KV bytes"),
+        ]
+        # Hard acceptance checks.
+        assert s == 1 or len(set(r["member_nodes"])) == s, r["member_nodes"]
+        assert r["tokens_out"] == ref["tokens_out"], (
+            f"shards={s}: token stream diverged from the single-device "
+            f"reference")
+        if s > 1:
+            assert (r["hbm_high_watermark_bytes"]
+                    < ref["hbm_high_watermark_bytes"]), (
+                f"shards={s}: per-member watermark "
+                f"{r['hbm_high_watermark_bytes']} >= single-device "
+                f"{ref['hbm_high_watermark_bytes']}")
+    rows.append(Row(
+        "sharding", "shards2.hbm_shrink",
+        results[2]["hbm_high_watermark_bytes"]
+        / ref["hbm_high_watermark_bytes"],
+        note="per-member watermark vs single device; < 1.0 but > 1/shards "
+             "(row-parallel projections replicate)"))
+    write_report("BENCH_sharding.json", report)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    rows = run(smoke="--smoke" in sys.argv[1:])
+    for r in rows:
+        print(r.csv())

@@ -11,7 +11,8 @@ from repro.control.backend import Backend, LiveBackend, SimBackend
 from repro.control.plane import (ControlPlane, MigrationEvent,
                                  ReconcileEvent, decision_signature)
 from repro.control.spec import (DemandSource, EWMADemand, FunctionSpec,
-                                HoltWintersDemand, RPSSource, ramp)
+                                HoltWintersDemand, RPSSource,
+                                autocorr_season, fit_holt_winters, ramp)
 
 __all__ = [
     "Backend",
@@ -25,6 +26,8 @@ __all__ = [
     "RPSSource",
     "ReconcileEvent",
     "SimBackend",
+    "autocorr_season",
     "decision_signature",
+    "fit_holt_winters",
     "ramp",
 ]

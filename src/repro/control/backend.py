@@ -29,6 +29,9 @@ it sees a fleet through a small verb set:
 * ``warm_nodes(fn)``       — nodes holding warm weights for ``fn`` (the
   cold-start tier; scale-up and defrag prefer them, empty when the tier
   is off).
+* ``links()``              — the fleet's inter-node bandwidth table
+  (every (a < b) pair, symmetric bytes/s): the link model behind sharded
+  multi-rectangle placement and bandwidth-aware peer weight transfers.
 
 Two implementations ship: ``SimBackend`` over the discrete-event
 ``repro.core.cluster.Cluster`` and ``LiveBackend`` over the real JAX
@@ -74,6 +77,8 @@ class Backend(Protocol):
 
     def warm_nodes(self, fn: str) -> list[int]: ...
 
+    def links(self) -> dict[tuple[int, int], float]: ...
+
     def now(self) -> float: ...
 
 
@@ -98,10 +103,14 @@ class SimBackend:
     def place(self, spec: FunctionSpec,
               point: ProfilePoint) -> Optional[str]:
         # track=False: the ControlPlane owns the L_j capacity queue.
+        # Effective tensor-parallel degree: the spec's fleet-wide setting
+        # or the point's own profiled one, whichever is wider (same rule
+        # as the live backend, so decision replays stay aligned).
         return self.cluster.deploy(spec.name, point,
                                    elastic_limit=spec.elastic_limit,
                                    track=False,
-                                   cold_start_s=spec.cold_start_s)
+                                   cold_start_s=spec.cold_start_s,
+                                   shards=max(spec.shards, point.shards))
 
     def evict(self, spec: FunctionSpec, pod_id: str) -> None:
         # Idempotent by design, but NOT the dead-pod authority: the
@@ -136,6 +145,9 @@ class SimBackend:
 
     def warm_nodes(self, fn: str) -> list[int]:
         return self.cluster.warm_nodes(fn)
+
+    def links(self) -> dict[tuple[int, int], float]:
+        return self.cluster.links.pairs()
 
     def now(self) -> float:
         return self.cluster.sim.now
@@ -194,7 +206,8 @@ class LiveBackend:
             prefix_sharing=spec.prefix_sharing,
             kv_shared_frac=shared_frac,
             speculate=spec.speculate,
-            draft_params=self._drafts.get(spec.name))
+            draft_params=self._drafts.get(spec.name),
+            shards=max(spec.shards, point.shards))
 
     def evict(self, spec: FunctionSpec, pod_id: str) -> None:
         # Same mid-tick failure tolerance as SimBackend.evict.
@@ -227,6 +240,9 @@ class LiveBackend:
 
     def warm_nodes(self, fn: str) -> list[int]:
         return self.frontend.warm_nodes(fn)
+
+    def links(self) -> dict[tuple[int, int], float]:
+        return self.frontend.links.pairs()
 
     def now(self) -> float:
         return self.frontend.now()

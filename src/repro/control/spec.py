@@ -21,6 +21,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Optional, Sequence
 
+import numpy as np
+
 from repro.core.scaling import ProfilePoint
 from repro.core.workload import ServiceCurve
 
@@ -146,6 +148,83 @@ class HoltWintersDemand(DemandSource):
         return max(self.level + self.horizon * self.trend + s, 0.0)
 
 
+def autocorr_season(series: Sequence[float], *, min_lag: int = 2,
+                    threshold: float = 0.3) -> Optional[int]:
+    """Dominant period of an RPS series via its autocorrelation peak.
+
+    Returns the lag (in ticks) of the highest *interior* local maximum of
+    the normalized autocorrelation function at or beyond ``min_lag``, or
+    ``None`` when no peak clears ``threshold`` — flat, monotone, or
+    noise-dominated traffic has no season worth modelling, and feeding
+    Holt-Winters a spurious one is worse than level+trend alone.  Requiring
+    a local maximum (not a bare argmax) rejects the smooth ACF decay every
+    trending series produces at the ``min_lag`` boundary.
+    """
+    x = np.asarray(list(series), dtype=float)
+    n = x.size
+    if n < 3 * min_lag:
+        return None
+    x = x - x.mean()
+    denom = float(x @ x)
+    if denom <= 0.0:
+        return None
+    max_lag = n // 2
+    acf = np.array([float(x[:-k] @ x[k:]) / denom
+                    for k in range(1, max_lag + 1)])
+    best_lag: Optional[int] = None
+    best_val = threshold
+    for k in range(max(min_lag, 2), max_lag):
+        i = k - 1
+        if acf[i] > acf[i - 1] and acf[i] >= acf[i + 1] and acf[i] >= best_val:
+            best_lag, best_val = k, float(acf[i])
+    return best_lag
+
+
+def fit_holt_winters(series: Sequence[float], *,
+                     season: int | str | None = "auto",
+                     horizon: float = 1.0,
+                     grid: Sequence[float] = (0.1, 0.3, 0.5, 0.7, 0.9),
+                     ) -> HoltWintersDemand:
+    """Auto-tune a ``HoltWintersDemand`` on an observed RPS series.
+
+    Replays every ``(alpha, beta, gamma)`` combination from ``grid``
+    through a fresh forecaster over ``series`` (one observation per tick)
+    and scores the one-step-ahead squared forecast error, skipping the
+    first season of warm-up ticks.  ``season="auto"`` detects the period
+    with :func:`autocorr_season`; pass an int to force one or ``None``
+    for level+trend only (then ``gamma`` is inert and not searched).
+
+    Returns a **fresh, unfed** forecaster carrying the winning parameters
+    — hand it to ``FunctionSpec.target_rps`` and let the reconciler feed
+    it live observations; replaying the fit series into it would
+    double-count history the real arrivals are about to repeat.
+    """
+    xs = [float(v) for v in series]
+    if season == "auto":
+        season = autocorr_season(xs)
+    if season is not None and not isinstance(season, int):
+        raise TypeError(f"season must be int, None or 'auto', got {season!r}")
+    warmup = season if season else 1
+    gammas = tuple(grid) if season else (tuple(grid)[0],)
+    best: Optional[tuple[float, float, float, float]] = None
+    for a in grid:
+        for b in grid:
+            for g in gammas:
+                hw = HoltWintersDemand(alpha=a, beta=b, gamma=g,
+                                       season=season, horizon=horizon)
+                err = 0.0
+                for t, v in enumerate(xs):
+                    if t >= warmup:
+                        err += (hw(float(t)) - v) ** 2
+                    hw.observe(float(t), v)
+                if best is None or err < best[0]:
+                    best = (err, a, b, g)
+    assert best is not None
+    _, a, b, g = best
+    return HoltWintersDemand(alpha=a, beta=b, gamma=g, season=season,
+                             horizon=horizon)
+
+
 @dataclasses.dataclass(frozen=True)
 class FunctionSpec:
     """Declarative serving contract for one function.
@@ -209,6 +288,16 @@ class FunctionSpec:
         Required when ``speculate`` is set on a live fleet; the weights are
         staged per node under ``"{fn}#draft"`` and admission charges them
         on top of the target weights.
+      shards: tensor-parallel axis — devices each pod of this function
+        spans.  1 (default) is today's single-device pod.  >1 makes every
+        placement a multi-rectangle pod: the live backend acquires one MRA
+        rectangle per member on the link-fastest device group, the
+        simulator charges the same multi-node footprint and folds the
+        collective cost into its round time.  A per-point
+        ``ProfilePoint.shards`` may widen individual points further; the
+        effective degree at placement is ``max(spec.shards,
+        point.shards)``.  Mutually exclusive with ``speculate`` — the
+        draft/verify round is not tensor-parallel.
       curve: simulator backend only — the calibrated ``ServiceCurve``.
     """
 
@@ -233,6 +322,7 @@ class FunctionSpec:
     cold_start_s: float = 0.0
     speculate: Optional[Any] = None
     draft_factory: Optional[Callable[[], Any]] = None
+    shards: int = 1
     curve: Optional[ServiceCurve] = None
 
     def __post_init__(self) -> None:
@@ -274,6 +364,12 @@ class FunctionSpec:
             if getattr(self.speculate, "k", 0) < 1:
                 raise ValueError(
                     "speculate must be a SpecConfig-like object with k >= 1")
+        if self.shards < 1:
+            raise ValueError(f"shards must be >= 1, got {self.shards}")
+        if self.shards > 1 and self.speculate is not None:
+            raise ValueError(
+                "speculate cannot ride a sharded pod: the draft/verify "
+                "round is not tensor-parallel")
 
     def feasible_points(self) -> list[ProfilePoint]:
         """Profile points meeting the SLO (all points when none do, so the

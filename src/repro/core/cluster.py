@@ -36,6 +36,7 @@ import statistics
 from collections import deque
 from typing import Callable, Optional
 
+from repro.core.links import NetworkLinks
 from repro.core.manager import TokenScheduler
 from repro.core.maximal_rectangles import MaxRectsPool, Placement
 from repro.core.model_sharing import MemoryModel
@@ -115,6 +116,17 @@ class PodRuntime:
     # Virtual time the pod's weights finish uploading (cold-start tier):
     # no token is granted before it.  0 = instantly ready (legacy model).
     ready_at: float = 0.0
+    # Tensor-parallel pod: one MRA rectangle per member device, index 0
+    # being the primary (``placement`` / ``placement.node``).  Empty tuples
+    # for single-device pods.  ``link_bps`` is the group's bottleneck link
+    # bandwidth, fed into ``ServiceCurve.round_time``'s collective term.
+    shards: int = 1
+    member_nodes: tuple = ()
+    member_placements: tuple = ()
+    link_bps: float = 0.0
+    # A member node died: the pod's KV shard is gone and the pod must fold
+    # as soon as any in-flight step returns its token.
+    dead: bool = False
 
     def pending(self) -> bool:
         """Work exists: queued requests or slots with rounds remaining."""
@@ -170,6 +182,17 @@ class Node:
         self.scheduler.deregister(pod_id)
         return pod
 
+    def add_member(self, fn: str, mm: MemoryModel) -> None:
+        """Charge a sharded pod's secondary member shard to this node's
+        memory model.  No scheduler registration: the pod's decode rounds
+        are token-gated on its primary node only (all members advance in
+        lockstep, so one token stream models the whole group)."""
+        self._fn_memmodel[fn] = mm
+        self._fn_instances[fn] = self._fn_instances.get(fn, 0) + 1
+
+    def remove_member(self, fn: str) -> None:
+        self._fn_instances[fn] -= 1
+
 
 # --------------------------------------------------------------------------
 # Cluster
@@ -190,6 +213,7 @@ class Cluster:
         scheduler_period: float = 0.05,
         continuous: bool = False,
         batch_alpha: Optional[float] = None,
+        links: Optional[NetworkLinks] = None,
     ):
         """``continuous=True`` enables slot-level batching: finished
         requests free their decode slot immediately and queued requests are
@@ -198,8 +222,11 @@ class Cluster:
         ``batch_alpha`` overrides the weight-bound (batch-shared) fraction
         of a decode round for EVERY function; the default (None) uses each
         curve's own ``alpha`` — 0.5 unless roofline-calibrated via
-        ``workload.calibrate_round_alpha``."""
+        ``workload.calibrate_round_alpha``.  ``links`` is the inter-node
+        bandwidth graph used by sharded (multi-rectangle) deploys; the
+        default is a uniform topology."""
         self.sim = Simulator()
+        self.links = links if links is not None else NetworkLinks(n_nodes)
         self.window = window
         self.max_batch = max_batch
         self.continuous = continuous
@@ -246,7 +273,8 @@ class Cluster:
     def deploy(self, fn: str, point: ProfilePoint,
                elastic_limit: float | None = None,
                track: bool = True,
-               cold_start_s: float = 0.0) -> Optional[str]:
+               cold_start_s: float = 0.0,
+               shards: int = 1) -> Optional[str]:
         """Place one pod of ``fn`` at profile point ``point`` via MRA.
 
         ``track=False`` skips the L_j capacity-queue push — used by
@@ -260,10 +288,18 @@ class Cluster:
         placement (host-to-host copy + upload), and nothing on a warm
         node.  The delay never enters scale decisions — ``decision_
         signature`` replay is unaffected by whether a fleet modeled it.
+
+        ``shards`` (or a sharded ``point.shards`` — the larger wins) makes
+        this a tensor-parallel pod spanning that many nodes: one rectangle
+        per member, acquired atomically on the best-linked group.
         """
         alloc = point.to_alloc(elastic_limit)
         pod_id = f"{fn}-{next(self._pod_seq)}"
         mm = self.memory_model(fn)
+        shards = max(shards, point.shards)
+        if shards > 1:
+            return self._deploy_sharded(fn, point, alloc, pod_id, mm,
+                                        shards, cold_start_s, track)
         warm_ids = ({n.node_id for n in self.nodes
                      if n.alive and fn in n.warm_fns}
                     if cold_start_s > 0 else set())
@@ -285,6 +321,7 @@ class Cluster:
                                            self.nodes[0].mem_bytes,
                                            self.window,
                                            self.nodes[0].sharing))
+                    self.links.grow(len(self.nodes))
                     self._tick(self.nodes[-1], 0.05)
                 node = self.nodes[placement.node]
                 if node.alive and node.admits(fn, mm):
@@ -329,6 +366,77 @@ class Cluster:
                 self._route(r)
         return pod_id
 
+    def _deploy_sharded(self, fn: str, point: ProfilePoint, alloc: Alloc,
+                        pod_id: str, mm: MemoryModel, shards: int,
+                        cold_start_s: float, track: bool) -> Optional[str]:
+        """Multi-rectangle deploy: one (S, Q) rectangle per member node.
+
+        Walks candidate groups best collective link first (Helix-style:
+        the pod's per-round all-gather rides the group's bottleneck link)
+        and takes the first group where every member yields a rectangle
+        AND admits the memory footprint — acquired rectangles are rolled
+        back whole-group on any member failure, so a half-placed pod never
+        leaks.  Link bandwidth outranks the warm tier here: re-uploading
+        weights is a one-off, a slow collective is paid every round.
+        """
+        candidates = [n.node_id for n in self.nodes if n.alive]
+        all_ids = {n.node_id for n in self.pool.nodes}
+        for group in self.links.best_groups(candidates, shards):
+            rects: list[Placement] = []
+            for member in group:
+                rect = self.pool.schedule(alloc, f"{pod_id}@{member}",
+                                          exclude=all_ids - {member})
+                if rect is not None and not self.nodes[member].admits(fn, mm):
+                    self.pool.release(rect)
+                    rect = None
+                if rect is None:
+                    for r in rects:
+                        self.pool.release(r)
+                    rects = []
+                    break
+                rects.append(rect)
+            if not rects:
+                continue
+            primary = group[0]
+            node = self.nodes[primary]
+            pod = PodRuntime(pod_id=pod_id, fn=fn, curve=self.fn_curves[fn],
+                             alloc=alloc, point=point, placement=rects[0],
+                             max_batch=self.max_batch, shards=shards,
+                             member_nodes=tuple(group),
+                             member_placements=tuple(rects),
+                             link_bps=self.links.bottleneck(group))
+            if cold_start_s > 0:
+                warm = {n.node_id for n in self.nodes
+                        if n.alive and fn in n.warm_fns}
+                if primary in warm:
+                    tier, delay = "host", 0.0
+                elif warm:
+                    tier, delay = "peer", 0.5 * cold_start_s
+                else:
+                    tier, delay = "cold", cold_start_s
+                pod.ready_at = self.sim.now + delay
+                for m in group:
+                    self.nodes[m].warm_fns.add(fn)
+                self.cold_events.append({"pod": pod_id, "fn": fn,
+                                         "node": primary, "tier": tier,
+                                         "delay": delay})
+                if delay > 0:
+                    self.sim.at(pod.ready_at,
+                                lambda: self._want_token(pod))
+            node.add_pod(pod, mm)
+            for m in group[1:]:
+                self.nodes[m].add_member(fn, mm)
+            self.pods[pod_id] = pod
+            self.fn_pods[fn].append(pod_id)
+            if track:
+                self.fn_queues[fn].push(pod_id, point)
+            pending = self._pending.pop(fn, None)
+            if pending:
+                for r in pending:
+                    self._route(r)
+            return pod_id
+        return None
+
     def retire(self, pod_id: str, drain: bool = True) -> None:
         """Scale-down: stop routing to the pod; release resources when idle."""
         pod = self.pods[pod_id]
@@ -345,7 +453,12 @@ class Cluster:
                 and node.scheduler.pods[pod.pod_id].holding is None:
             node.remove_pod(pod.pod_id)
             self.pool.release(pod.placement)
-            del self.pods[pod.pod_id]
+            for m, rect in zip(pod.member_nodes[1:],
+                               pod.member_placements[1:]):
+                if self.nodes[m].alive:
+                    self.nodes[m].remove_member(pod.fn)
+                    self.pool.release(rect)
+            self.pods.pop(pod.pod_id, None)
 
     # -- request path -------------------------------------------------------
 
@@ -429,7 +542,9 @@ class Cluster:
             return
         pod.in_flight = [s.req for s in live]
         dur = (pod.curve.round_time(pod.alloc.sm, len(live),
-                                    alpha=self.batch_alpha)
+                                    alpha=self.batch_alpha,
+                                    shards=pod.shards,
+                                    link_bps=pod.link_bps)
                * node.slowdown)
         occ = (min(pod.alloc.sm, pod.curve.sm_sat)
                * len(live) / max(pod.max_batch, 1))
@@ -441,6 +556,15 @@ class Cluster:
                      live: list[_DecodeSlot], dur: float, occ: float) -> None:
         if not node.alive:
             return  # failure handler already re-queued them
+        if pod.dead:
+            # A member node died mid-step: the round's result is void (its
+            # KV shard went with the node, the strays were already
+            # re-queued).  Return the token, then fold the pod.
+            pod.in_flight = []
+            node.scheduler.complete(pod.pod_id, dur, self.sim.now, occ=occ)
+            self._teardown(pod)
+            self._pump(node)
+            return
         pod.in_flight = []
         completed: list[Request] = []
         for s in live:
@@ -548,8 +672,37 @@ class Cluster:
             if pod.fn in self.fn_pods and pod.pod_id in self.fn_pods[pod.fn]:
                 self.fn_pods[pod.fn].remove(pod.pod_id)
             self.fn_queues[pod.fn].remove(pod.pod_id)
+            # Sharded primary: member rectangles on surviving nodes free up.
+            for m, rect in zip(pod.member_nodes[1:],
+                               pod.member_placements[1:]):
+                if m != node_id and self.nodes[m].alive:
+                    self.nodes[m].remove_member(pod.fn)
+                    self.pool.release(rect)
             del self.pods[pod.pod_id]
         node.pods.clear()
+        # Sharded pods anchored elsewhere that had a member shard here die
+        # too: the shard's rectangle (and its slice of every KV cache) went
+        # with the node, so the whole pod folds.
+        for pod in [p for p in self.pods.values()
+                    if node_id in p.member_nodes
+                    and p.placement.node != node_id]:
+            strays.extend(s.req for s in pod.slots if s.remaining > 0)
+            strays.extend(pod.queue)
+            pod.slots, pod.in_flight, pod.queue = [], [], deque()
+            self.fn_pods[pod.fn].remove(pod.pod_id)
+            self.fn_queues[pod.fn].remove(pod.pod_id)
+            pod.retired = True
+            pod.dead = True
+            displaced.append(pod)
+            primary = self.nodes[pod.placement.node]
+            if primary.scheduler.pods[pod.pod_id].holding is None:
+                # Between steps: tear down now (the token request, if any,
+                # dies with the scheduler deregistration, as in migrate).
+                pod.waiting_token = False
+                self._teardown(pod)
+            # else: _finish_step's dead-pod guard returns the token and
+            # tears down when the in-flight round lands.
+            self.pods.pop(pod.pod_id, None)
         self.rescheduled += len(displaced)
         # Re-inject stranded requests at the current time (no arrival log:
         # they were already counted when they first arrived).
@@ -594,6 +747,11 @@ class Cluster:
         """
         pod = self.pods.get(pod_id)
         if pod is None or pod.retired:
+            return None
+        if pod.shards > 1:
+            # A sharded pod's KV lives as one shard per member; moving it
+            # means re-acquiring a whole device group — re-place instead
+            # (the live path refuses identically).
             return None
         src = pod.placement.node
         if target == src or not 0 <= target < len(self.nodes):
@@ -655,8 +813,8 @@ class Cluster:
             node = self.nodes[nid]
             self.pool.cordon(nid)  # stop MRA from re-choosing the straggler
             for pod in list(node.pods.values()):
-                if pod.retired:
-                    continue
+                if pod.retired or pod.shards > 1:
+                    continue  # sharded pods re-place via the reconciler
                 if pod.in_flight or pod.slots or pod.waiting_token:
                     continue  # move only idle pods; busy ones drain first
                 node.remove_pod(pod.pod_id)

@@ -52,8 +52,15 @@ class ProfilePoint:
     # Alg. 1 budgets real emitted tokens/s — 0 = not speculating.
     spec_k: int = 0
     acceptance: float = 0.0
+    # Tensor-parallel axis: devices one pod of this point spans.  A sharded
+    # point's ``throughput`` is the *aggregate* rate of the whole pod (the
+    # profiler measures the pod, not a member), so Alg. 1 needs no special
+    # casing — but its RPR divides by the full resource footprint below.
+    shards: int = 1
 
     def __post_init__(self) -> None:
+        if self.shards < 1:
+            raise ValueError(f"shards must be >= 1, got {self.shards}")
         if not 0.0 <= self.kv_shared_frac < 1.0:
             raise ValueError(
                 f"kv_shared_frac must be in [0, 1), got "
@@ -68,8 +75,14 @@ class ProfilePoint:
 
     @property
     def rpr(self) -> float:
-        """RPS per Resource = T / (S * Q)."""
-        return self.throughput / (self.sm * self.quota)
+        """RPS per Resource = T / (shards * S * Q).
+
+        A sharded pod occupies one (S, Q) rectangle on *each* member
+        device, so efficiency divides by the whole footprint — otherwise
+        Alg. 1 would prefer an N-way pod over N independent pods with the
+        same aggregate throughput despite identical resource use.
+        """
+        return self.throughput / (self.shards * self.sm * self.quota)
 
     def to_alloc(self, elastic_limit: float | None = None,
                  mem_bytes: int = 0) -> Alloc:

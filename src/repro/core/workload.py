@@ -53,6 +53,10 @@ class ServiceCurve:
     # the uncalibrated default; ``calibrate_round_alpha`` replaces it with
     # the model's roofline split (repro.analysis.roofline.decode_round_alpha).
     alpha: float = 0.5
+    # Bytes exchanged per live slot per decode round by a tensor-parallel
+    # pod's collectives (the all-gather volume of the column-only layout).
+    # 0 keeps single-device behaviour exactly.
+    allreduce_bytes: int = 0
 
     def rate(self, sm: float, quota: float = 1.0) -> float:
         """Sustainable throughput (req/s) at allocation (sm, quota)."""
@@ -64,7 +68,8 @@ class ServiceCurve:
         return batch / self.rate(sm, quota=1.0)
 
     def round_time(self, sm: float, live: int,
-                   alpha: float | None = None) -> float:
+                   alpha: float | None = None, *, shards: int = 1,
+                   link_bps: float = 0.0) -> float:
         """Wall time of one decode round advancing ``live`` slots.
 
         A round pays a fixed weight-bound cost (reading the model once,
@@ -75,9 +80,21 @@ class ServiceCurve:
         ``live == 1`` this reduces to ``step_time(sm, 1)``, so single-slot
         pods keep the paper-calibrated service rates.  ``alpha=None`` uses
         the curve's own (possibly roofline-calibrated) fraction.
+
+        A tensor-parallel pod (``shards > 1``) divides the compute term
+        by its degree and adds the collective cost: the standard ring
+        exchange moves ``2 (N-1)/N`` of the payload over the group's
+        bottleneck link (``link_bps``, from ``Cluster.links``).  With
+        ``shards == 1`` or no link model the expression is bit-identical
+        to the single-device one — the sim-vs-live decision-signature
+        equality rides on that.
         """
         a = self.alpha if alpha is None else alpha
-        return (a + (1.0 - a) * live) / self.rate(sm, quota=1.0)
+        t = (a + (1.0 - a) * live) / (self.rate(sm, quota=1.0) * shards)
+        if shards > 1 and self.allreduce_bytes and link_bps > 0.0:
+            t += (2.0 * (shards - 1) / shards
+                  * self.allreduce_bytes * live / link_bps)
+        return t
 
 
 def calibrate_round_alpha(curve: ServiceCurve, cfg,

@@ -1,5 +1,10 @@
-from repro.distributed.sharding import (cache_pspec, constrain, current_mesh,
-                                        named, resolve_pspec, use_mesh)
+from repro.distributed.sharding import (SERVE_AXIS, cache_pspec, constrain,
+                                        current_mesh, named, resolve_pspec,
+                                        serve_pspec, serve_tp, shard_put,
+                                        sharding_for, tp_mesh, tree_shardings,
+                                        use_mesh)
 
-__all__ = ["constrain", "use_mesh", "current_mesh", "resolve_pspec",
-           "cache_pspec", "named"]
+__all__ = ["SERVE_AXIS", "constrain", "use_mesh", "current_mesh",
+           "resolve_pspec", "cache_pspec", "named", "serve_pspec",
+           "serve_tp", "shard_put", "sharding_for", "tp_mesh",
+           "tree_shardings"]

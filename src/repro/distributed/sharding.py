@@ -29,14 +29,22 @@ from typing import Any, Optional, Sequence
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# The serving-path tensor axis (sharded pods).  Distinct from the
+# training axis "model" on purpose: rules that would split a contraction
+# (d_ff, vocab, row-parallel "tp") deliberately do NOT map to it, so a
+# serving mesh only ever moves data with exact collectives (all-gather /
+# masked gather) and a sharded pod's token streams stay bit-identical to
+# the single-device reference even in bf16.
+SERVE_AXIS = "serve"
+
 # Logical dimension name -> preferred mesh axes (in order).
 RULES: dict[str, tuple[str, ...]] = {
     "batch": ("pod", "data"),
     "seq": (),  # unsharded by default (sequence parallelism is opt-in)
     "seq_shard": ("pod", "data"),  # context-parallel sequence (long decode)
     "d_model": (),  # activations keep d_model local
-    "heads": ("model",),
-    "kv_heads": ("model",),
+    "heads": ("model", SERVE_AXIS),
+    "kv_heads": ("model", SERVE_AXIS),
     "d_ff": ("model",),
     "vocab": ("model",),
     "fsdp": ("data",),  # parameter d_model/d_ff dims shard over data (FSDP)
@@ -139,6 +147,86 @@ def cache_pspec(shape: Sequence[int], mesh: Mesh,
             parts[s_idx] = tuple(seq_axes) if len(seq_axes) > 1 else seq_axes[0]
             return P(*parts)
     return resolve_pspec(names, shape, mesh)
+
+
+def tp_mesh(shards: int,
+            devices: Optional[Sequence[Any]] = None) -> Optional[Mesh]:
+    """Single-axis ``(SERVE_AXIS,)`` tensor-parallel mesh over ``shards``
+    devices — the mesh a multi-rectangle FaSTPod runs under.
+
+    ``shards == 1`` returns ``None`` — the caller's single-device path must
+    stay byte-identical to today's, so no mesh object exists to thread.
+    ``devices`` selects the member devices explicitly (a sharded pod's
+    rectangles name their own nodes); default is the first ``shards`` of
+    ``jax.devices()``.
+    """
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
+    if shards == 1:
+        return None
+    devs = list(devices) if devices is not None else jax.devices()
+    if len(devs) < shards:
+        raise ValueError(
+            f"need {shards} devices for a tp mesh, have {len(devs)}")
+    import numpy as np
+    return Mesh(np.asarray(devs[:shards]), (SERVE_AXIS,))
+
+
+def serve_tp(mesh: Optional[Mesh] = None) -> int:
+    """Size of the serving tensor axis in ``mesh`` (or the active mesh);
+    1 when absent — i.e. on every training/single-device path."""
+    mesh = mesh if mesh is not None else current_mesh()
+    if mesh is None:
+        return 1
+    return int(mesh.shape.get(SERVE_AXIS, 1))
+
+
+def serve_pspec(names: Sequence[Optional[str]], shape: Sequence[int],
+                mesh: Mesh) -> P:
+    """Column-only tensor-parallel placement for serving-path parameters.
+
+    Shards a parameter's OUTPUT dimensions — a trailing ``"tp"`` (column-
+    parallel projections and their biases) or any ``"vocab"`` dim — over
+    ``SERVE_AXIS`` and replicates everything else, in particular the
+    row-parallel ``"tp"`` dims of wo / w_down.  With contracting rows
+    replicated, every dot runs its full reduction on-device and the only
+    cross-device exchanges are exact (all-gathers, masked embedding
+    gathers), so a sharded pod's logits are bitwise those of the
+    single-device reference — the reassociation of a split-K all-reduce
+    in bf16 would flip near-tie argmax tokens.  Non-divisible dims stay
+    replicated (the usual divisibility fallback).
+    """
+    if len(names) != len(shape):
+        raise ValueError(f"rank mismatch: {names} vs shape {shape}")
+    n = mesh.shape.get(SERVE_AXIS, 0)
+    spec: list[Any] = []
+    for i, (name, dim) in enumerate(zip(names, shape)):
+        col = name == "vocab" or (name == "tp" and i == len(names) - 1)
+        spec.append(SERVE_AXIS if (col and n > 1 and dim % n == 0)
+                    else None)
+    return P(*spec)
+
+
+def _is_name_tuple(x: Any) -> bool:
+    return isinstance(x, tuple) and all(
+        isinstance(i, (str, type(None))) for i in x)
+
+
+def shard_put(tree: Any, names_tree: Any, mesh: Mesh,
+              resolver=resolve_pspec) -> Any:
+    """``device_put`` every leaf of ``tree`` to its resolved NamedSharding.
+
+    ``names_tree`` mirrors ``tree`` with logical-name tuples at the leaves
+    (``Model.param_names()`` / ``Model.cache_names()`` shape); ``resolver``
+    maps ``(names, shape, mesh)`` to a PartitionSpec (``serve_pspec`` for
+    serving-path parameters).  Re-placing an already-correctly-sharded
+    leaf is a no-op, so this is safe to call on the output of a sharded
+    upload.
+    """
+    return jax.tree_util.tree_map(
+        lambda names, leaf: jax.device_put(
+            leaf, NamedSharding(mesh, resolver(names, leaf.shape, mesh))),
+        names_tree, tree, is_leaf=_is_name_tuple)
 
 
 def sharding_for(names: Sequence[Optional[str]], shape: Sequence[int],

@@ -16,7 +16,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.sharding import current_mesh, named
+from repro.distributed.sharding import current_mesh, named, serve_tp
 from repro.kernels import ops
 from repro.models.config import ModelConfig
 from repro.models.layers import PSpec, apply_rope
@@ -112,7 +112,14 @@ def _project_kv(params: dict, x: jax.Array, cfg: ModelConfig
 def _output(params: dict, o: jax.Array) -> jax.Array:
     b, s, h, dh = o.shape
     o = named(o, "batch", "seq", "heads", None)
-    out = o.reshape(b, s, h * dh) @ params["wo"]
+    o = o.reshape(b, s, h * dh)
+    if serve_tp() > 1:
+        # Serving TP is column-only/exact: gather the head shards BEFORE
+        # the output projection so wo's contraction runs in full on every
+        # device — an all-gather is bitwise-exact, a split-K all-reduce
+        # is not (bf16 reassociation flips near-tie argmax tokens).
+        o = named(o, "batch", "seq", None)
+    out = o @ params["wo"]
     return named(out, "batch", "seq", None)
 
 

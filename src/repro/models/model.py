@@ -341,6 +341,15 @@ class Model:
             "v": sds((l, n_blocks, block_size, kv, dh), jnp.bfloat16),
         }
 
+    def paged_cache_names(self, n_blocks: int, block_size: int
+                          ) -> dict[str, tuple]:
+        """Logical dimension names matching ``paged_cache_shapes``: the
+        kv-head axis shards over TP when divisible (GQA replicates
+        otherwise); physical blocks stay local — the sequence-sharded slab
+        layout is the opt-in ``distributed.seqshard`` seam."""
+        return {key: ("layers", None, None, "kv_heads", None)
+                for key in self.paged_cache_shapes(n_blocks, block_size)}
+
     def kv_block_bytes(self, block_size: int) -> int:
         """Physical bytes of ONE paged KV block across all layers/leaves —
         the unit the admission budget and bytes-in-use metrics count in."""

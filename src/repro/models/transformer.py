@@ -116,10 +116,10 @@ def block_decode(lp: dict, x: jax.Array, kc: jax.Array, vc: jax.Array,
     h = rms_norm(x, lp["ln1"], cfg.norm_eps)
     a, kc, vc = attn.attn_decode(lp["attn"], h, kc, vc, pos, cfg,
                                  rolled=rolled, window=window)
-    x = x + a
+    x = named(x + a, "batch", "seq", None)
     h = rms_norm(x, lp["ln2"], cfg.norm_eps)
     m, _ = _ffn(lp, h, cfg, train=False)
-    return x + m, kc, vc
+    return named(x + m, "batch", "seq", None), kc, vc
 
 
 def block_decode_paged(lp: dict, x: jax.Array, kc: jax.Array, vc: jax.Array,
@@ -131,10 +131,10 @@ def block_decode_paged(lp: dict, x: jax.Array, kc: jax.Array, vc: jax.Array,
     h = rms_norm(x, lp["ln1"], cfg.norm_eps)
     a, kc, vc = attn.attn_decode_paged(lp["attn"], h, kc, vc,
                                        block_tables, pos, cfg, active)
-    x = x + a
+    x = named(x + a, "batch", "seq", None)
     h = rms_norm(x, lp["ln2"], cfg.norm_eps)
     m, _ = _ffn(lp, h, cfg, train=False)
-    return x + m, kc, vc
+    return named(x + m, "batch", "seq", None), kc, vc
 
 
 def block_decode_paged_quant(lp: dict, x: jax.Array, kc, vc, ksc, vsc,
@@ -144,10 +144,10 @@ def block_decode_paged_quant(lp: dict, x: jax.Array, kc, vc, ksc, vsc,
     h = rms_norm(x, lp["ln1"], cfg.norm_eps)
     a, kc, vc, ksc, vsc = attn.attn_decode_paged_quant(
         lp["attn"], h, kc, vc, ksc, vsc, block_tables, pos, cfg, active)
-    x = x + a
+    x = named(x + a, "batch", "seq", None)
     h = rms_norm(x, lp["ln2"], cfg.norm_eps)
     m, _ = _ffn(lp, h, cfg, train=False)
-    return x + m, kc, vc, ksc, vsc
+    return named(x + m, "batch", "seq", None), kc, vc, ksc, vsc
 
 
 def block_decode_quant(lp: dict, x: jax.Array, kc, vc, ksc, vsc,
@@ -156,10 +156,10 @@ def block_decode_quant(lp: dict, x: jax.Array, kc, vc, ksc, vsc,
     h = rms_norm(x, lp["ln1"], cfg.norm_eps)
     a, kc, vc, ksc, vsc = attn.attn_decode_quant(lp["attn"], h, kc, vc,
                                                  ksc, vsc, pos, cfg)
-    x = x + a
+    x = named(x + a, "batch", "seq", None)
     h = rms_norm(x, lp["ln2"], cfg.norm_eps)
     m, _ = _ffn(lp, h, cfg, train=False)
-    return x + m, kc, vc, ksc, vsc
+    return named(x + m, "batch", "seq", None), kc, vc, ksc, vsc
 
 
 def cross_block_full(lp: dict, x: jax.Array, ctx: jax.Array,

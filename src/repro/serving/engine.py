@@ -66,6 +66,7 @@ from repro.core.manager import TokenScheduler
 from repro.core.model_sharing import ModelStore
 from repro.core.resources import Alloc
 from repro.core.slo import SLORecorder
+from repro.distributed.sharding import serve_pspec, shard_put, use_mesh
 from repro.models.model import Model, default_kv_blocks
 from repro.serving.paging import (NULL_BLOCK, KVPageAllocator, PageTable,
                                   blocks_needed, prompt_digests)
@@ -86,7 +87,14 @@ def _executor(model: Model, key: tuple, build) -> Any:
     instances (keyed on the model, stored on it so the cache dies with
     it) is what makes a warm node warm in the cold-start sense: it holds
     the function's compiled executors, not just its weights.  Donation
-    is per-call semantics, so shared donated wrappers are safe."""
+    is per-call semantics, so shared donated wrappers are safe.
+
+    ``build`` must jit a FRESH function object (a lambda), never a bound
+    method directly: jax shares its trace cache across jit wrappers of
+    the same underlying function, and a sharded pod's mesh constraints
+    are baked into the jaxpr at trace time — a bound-method trace from
+    one device group would silently serve every other group's executor
+    and fail on the first mismatched device set."""
     cache = model.__dict__.setdefault("_jit_executors", {})
     fn = cache.get(key)
     if fn is None:
@@ -96,6 +104,25 @@ def _executor(model: Model, key: tuple, build) -> Any:
 
 # Model-independent: scatter one sampled token into the donated vector.
 _SET_TOK = jax.jit(lambda t, s, v: t.at[s].set(v), donate_argnums=(0,))
+
+
+def per_device_bytes(*trees: Any) -> dict[int, int]:
+    """Resident bytes per device id across ``trees`` (``None`` entries are
+    skipped), via each leaf's ``addressable_shards`` — so a tensor-parallel
+    leaf charges each device only its shard, while a replicated leaf
+    charges its full size on every device.  The benchmark's per-shard HBM
+    high-watermark accounting."""
+    out: dict[int, int] = {}
+    for tree in trees:
+        if tree is None:
+            continue
+        for leaf in jax.tree_util.tree_leaves(tree):
+            if not isinstance(leaf, jax.Array):
+                continue
+            for shard in leaf.addressable_shards:
+                d = int(shard.device.id)
+                out[d] = out.get(d, 0) + int(shard.data.nbytes)
+    return out
 
 
 @dataclasses.dataclass
@@ -135,12 +162,36 @@ class FunctionInstance:
                  sampling: Optional[SamplingConfig] = None,
                  speculate: Optional[SpecConfig] = None,
                  draft_model: Optional[Model] = None,
-                 draft_key: Optional[str] = None):
+                 draft_key: Optional[str] = None,
+                 mesh: Optional[Any] = None):
         if batching not in ("continuous", "static", "paged"):
             raise ValueError(f"unknown batching mode {batching!r}")
         if sampling is not None and batching == "static":
             raise ValueError("stochastic sampling requires a slot batching "
                              "mode (continuous/paged)")
+        if mesh is not None and speculate is not None:
+            raise ValueError(
+                "speculate cannot ride a sharded pod: the draft/verify "
+                "round is not tensor-parallel (FunctionSpec forbids it)")
+        # Tensor-parallel pod: every executor runs under this mesh so the
+        # models' named() constraints bind at trace time, and the executor
+        # cache key gets a mesh suffix.  ``key + ()`` IS ``key``, so a
+        # shards=1 instance hits the exact single-device cache entries —
+        # no re-trace, byte-identical dispatch.
+        self.mesh = mesh
+        self._mkey = (() if mesh is None else
+                      ("tp", tuple(int(d.id) for d in mesh.devices.flat)))
+
+        def _jit(owner: Model, key: tuple, build) -> Any:
+            fn = _executor(owner, key + self._mkey, build)
+            if mesh is None:
+                return fn
+
+            def sharded(*a, _fn=fn, **kw):
+                with use_mesh(mesh):
+                    return _fn(*a, **kw)
+            return sharded
+
         self.inst_id = inst_id
         self.model = model
         self.alloc = alloc
@@ -152,7 +203,7 @@ class FunctionInstance:
         self.weights_key = weights_key
         self.params = store.get(weights_key)  # shared, zero-copy
         self.queue: deque[ServeRequest] = deque()
-        self._prefill = _executor(model, ("prefill", max_len), lambda:
+        self._prefill = _jit(model, ("prefill", max_len), lambda:
                                   jax.jit(lambda p, t: model.prefill(
                                       p, t, max_len=max_len)))
         # Bucketed chunked admission: prompts are right-padded to power-of-
@@ -161,29 +212,29 @@ class FunctionInstance:
         self.bucketed = (batching in ("continuous", "paged")
                          and prefill_buckets
                          and model.supports_bucketed_prefill())
-        self._prefill_len = _executor(model, ("prefill_len", max_len),
+        self._prefill_len = _jit(model, ("prefill_len", max_len),
                                       lambda: jax.jit(
                                           lambda p, t, n: model.prefill(
                                               p, t, max_len=max_len,
                                               length=n))
                                       ) if self.bucketed else None
-        self._decode = _executor(model, ("decode",),
-                                 lambda: jax.jit(model.decode_step))
+        self._decode = _jit(model, ("decode",),
+                                 lambda: jax.jit(lambda *a: model.decode_step(*a)))
         # Fused executors: the decode round samples on device and returns
         # (B,) int32 tokens; the token vector and the whole KV pool are
         # DONATED — after dispatch the old buffers are dead and XLA writes
         # the new round in place (no per-round cache copy).  Never alias a
         # donated buffer after dispatch (serving/README.md "Hot path").
-        self._decode_tok = _executor(model, ("decode_tok",), lambda:
-                                     jax.jit(model.decode_step_tokens,
+        self._decode_tok = _jit(model, ("decode_tok",), lambda:
+                                     jax.jit(lambda *a: model.decode_step_tokens(*a),
                                              donate_argnums=(1, 2)))
-        self._greedy = _executor(model, ("greedy",),
-                                 lambda: jax.jit(model.sample_greedy))
+        self._greedy = _jit(model, ("greedy",),
+                                 lambda: jax.jit(lambda *a: model.sample_greedy(*a)))
         self._set_tok = _SET_TOK
         # The slot pool is donated on merge/append too: admitting a request
         # scatters its prefill entry into the pool in place.
-        self._merge = _executor(model, ("merge",), lambda:
-                                jax.jit(model.merge_slot,
+        self._merge = _jit(model, ("merge",), lambda:
+                                jax.jit(lambda *a: model.merge_slot(*a),
                                         donate_argnums=(0,)))
         self.steps = 0
         self.retired = False  # draining: no new routing, slots finish
@@ -238,19 +289,19 @@ class FunctionInstance:
             self._tables = np.full((max_batch, self.blocks_per_seq),
                                    NULL_BLOCK, np.int32)
             self._pos = np.zeros((max_batch,), np.int32)
-            self._decode_paged = _executor(
+            self._decode_paged = _jit(
                 model, ("decode_paged",),
-                lambda: jax.jit(model.decode_step_paged))
-            self._decode_paged_tok = _executor(
+                lambda: jax.jit(lambda *a: model.decode_step_paged(*a)))
+            self._decode_paged_tok = _jit(
                 model, ("decode_paged_tok",),
-                lambda: jax.jit(model.decode_step_paged_tokens,
+                lambda: jax.jit(lambda *a: model.decode_step_paged_tokens(*a),
                                 donate_argnums=(1, 2, 4)))
-            self._append = _executor(
+            self._append = _jit(
                 model, ("append",),
-                lambda: jax.jit(model.append_paged, donate_argnums=(0,)))
-            self._copy_block = _executor(
+                lambda: jax.jit(lambda *a: model.append_paged(*a), donate_argnums=(0,)))
+            self._copy_block = _jit(
                 model, ("copy_block",),
-                lambda: jax.jit(model.copy_block, donate_argnums=(0,)))
+                lambda: jax.jit(lambda *a: model.copy_block(*a), donate_argnums=(0,)))
             self._tables_dev: Optional[jax.Array] = None
             self._pos_dev: Optional[jax.Array] = None
             self._active_dev: Optional[jax.Array] = None
@@ -274,18 +325,18 @@ class FunctionInstance:
             seed = sampling.seed if sampling is not None else speculate.seed
             self._key_dev = jax.random.PRNGKey(seed)
         if sampling is not None:
-            self._sample = _executor(
+            self._sample = _jit(
                 model, ("sample", sampling),
                 lambda: jax.jit(lambda l, k: model.sample_tokens(l, k,
                                                                  sampling)))
-            self._decode_tok_s = _executor(
+            self._decode_tok_s = _jit(
                 model, ("decode_tok_sampled", sampling),
                 lambda: jax.jit(
                     lambda p, t, c, k: model.decode_step_tokens(
                         p, t, c, key=k, sampling=sampling),
                     donate_argnums=(1, 2, 3)))
             if batching == "paged":
-                self._decode_paged_tok_s = _executor(
+                self._decode_paged_tok_s = _jit(
                     model, ("decode_paged_tok_sampled", sampling),
                     lambda: jax.jit(
                         lambda p, t, c, tb, pos, act, k:
@@ -315,21 +366,21 @@ class FunctionInstance:
             build = (spec_round_paged if batching == "paged"
                      else spec_round_continuous)
             donate = (2, 3, 4, 6, 8) if batching == "paged" else (2, 3, 4, 5)
-            self._spec_round = _executor(
+            self._spec_round = _jit(
                 model, ("spec_round", batching, speculate.k, samp,
                         draft_model.cfg.name),
                 lambda: jax.jit(build(model, draft_model, speculate.k, samp),
                                 donate_argnums=donate))
-            self._dprefill = _executor(
+            self._dprefill = _jit(
                 draft_model, ("prefill", max_len),
                 lambda: jax.jit(lambda p, t: draft_model.prefill(
                     p, t, max_len=max_len)))
-            self._dprefill_len = _executor(
+            self._dprefill_len = _jit(
                 draft_model, ("prefill_len", max_len),
                 lambda: jax.jit(lambda p, t, n: draft_model.prefill(
                     p, t, max_len=max_len, length=n))
             ) if self.bucketed else None
-            self._dmerge = _executor(
+            self._dmerge = _jit(
                 draft_model, ("merge",),
                 lambda: jax.jit(draft_model.merge_slot, donate_argnums=(0,)))
 
@@ -423,6 +474,35 @@ class FunctionInstance:
         self._active_dev = jnp.asarray(mask)
         self._state_dirty = False
         self.uploads += 1
+
+    def _init_cache(self) -> Any:
+        """Fresh slot/paged KV pool, placed on the pod's mesh when the
+        instance is sharded: kv-heads split over the tensor axis when they
+        divide it, everything else replicated — the bitwise-safe default
+        (no cross-device reduction touches the logits).  The sequence-
+        sharded slab layout is the opt-in ``distributed.seqshard`` seam."""
+        if self.batching == "paged":
+            cache = self.model.init_paged_cache(self.allocator.n_blocks,
+                                                self.block_size)
+            if self.mesh is not None:
+                cache = shard_put(
+                    cache, self.model.paged_cache_names(
+                        self.allocator.n_blocks, self.block_size), self.mesh)
+            return cache
+        cache = self.model.init_slot_cache(self.max_batch, self.max_len)
+        if self.mesh is not None:
+            names = dict(self.model.cache_names(self.max_batch,
+                                                self.max_len))
+            names["pos"] = (None,)  # slot pool pos is (n_slots,), not ()
+            cache = shard_put(cache, names, self.mesh)
+        return cache
+
+    def hbm_bytes_by_device(self) -> dict[int, int]:
+        """Per-device resident bytes of this instance's weights + KV pool
+        (+ draft side pool), by ``addressable_shards`` — the per-shard HBM
+        high-watermark a sharded pod is benchmarked on."""
+        return per_device_bytes(self.params, self.cache, self.draft_params,
+                                self.dcache)
 
     # -- continuous path ---------------------------------------------------
 
@@ -602,10 +682,7 @@ class FunctionInstance:
                     finished.append(req)
                     continue
             if self.cache is None:
-                self.cache = (self.model.init_paged_cache(
-                    self.allocator.n_blocks, self.block_size) if paged
-                    else self.model.init_slot_cache(self.max_batch,
-                                                    self.max_len))
+                self.cache = self._init_cache()
             if had_live:
                 self.refills += 1  # joined a live decode batch mid-flight
             if paged:
@@ -935,10 +1012,7 @@ class FunctionInstance:
             raise ValueError(f"slot {slot} of {self.inst_id} is occupied")
         paged = self.batching == "paged"
         if self.cache is None:
-            self.cache = (self.model.init_paged_cache(
-                self.allocator.n_blocks, self.block_size) if paged
-                else self.model.init_slot_cache(self.max_batch,
-                                                self.max_len))
+            self.cache = self._init_cache()
         if paged:
             # Same worst-case reservation admission made on the source, so
             # the migrated request can never exhaust the pool mid-flight.
@@ -1069,13 +1143,22 @@ class ServingEngine:
                fused: bool = True, prefix_sharing: bool = True,
                sampling: Optional[SamplingConfig] = None,
                speculate: Optional[SpecConfig] = None,
-               draft_params: Any = None) -> list[str]:
+               draft_params: Any = None,
+               mesh: Optional[Any] = None) -> list[str]:
         if not self.alive:
             raise RuntimeError("cannot deploy to a failed node")
         if fn not in self.recorders:
             self.recorders[fn] = SLORecorder(fn=fn)
-        if not self.store.contains(fn):
-            self.store.store(fn, params)
+        # A sharded pod's weights live under their own store entry keyed by
+        # the tensor degree, so shards=1 replicas of the same function keep
+        # sharing the intact single-device tree.  shard_put is a no-op for
+        # leaves the modelstore already uploaded to their owning devices.
+        weights_key = fn if mesh is None else f"{fn}@tp{mesh.devices.size}"
+        if not self.store.contains(weights_key):
+            if mesh is not None:
+                params = shard_put(params, model.param_names(), mesh,
+                                   resolver=serve_pspec)
+            self.store.store(weights_key, params)
         draft_model = None
         draft_key = None
         if speculate is not None:
@@ -1096,7 +1179,8 @@ class ServingEngine:
         ids = []
         for _ in range(n_instances):
             inst_id = f"{fn}/{next(self._inst_seq)}"
-            inst = FunctionInstance(inst_id, model, self.store, fn, alloc,
+            inst = FunctionInstance(inst_id, model, self.store, weights_key,
+                                    alloc,
                                     max_batch=max_batch, max_len=max_len,
                                     batching=batching,
                                     prefill_buckets=prefill_buckets,
@@ -1105,7 +1189,7 @@ class ServingEngine:
                                     prefix_sharing=prefix_sharing,
                                     sampling=sampling, speculate=speculate,
                                     draft_model=draft_model,
-                                    draft_key=draft_key)
+                                    draft_key=draft_key, mesh=mesh)
             self.instances[inst_id] = inst
             self.scheduler.register(inst_id, alloc)
             ids.append(inst_id)

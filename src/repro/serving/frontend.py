@@ -36,9 +36,12 @@ import itertools
 import time
 from typing import Any, Optional
 
+import jax
 import numpy as np
 
+from repro.core.links import NetworkLinks
 from repro.core.maximal_rectangles import MaxRectsPool, Placement
+from repro.distributed.sharding import serve_pspec, tp_mesh
 from repro.core.model_sharing import (MemoryModel, node_shared_footprint,
                                       pytree_nbytes)
 from repro.core.resources import Alloc
@@ -55,12 +58,26 @@ DEFAULT_FRAMEWORK_BYTES = 64 * 1024 * 1024
 
 @dataclasses.dataclass
 class InstancePlacement:
-    """One live instance: which node it landed on and its MRA rectangle."""
+    """One live instance: which node it landed on and its MRA rectangle.
+
+    A sharded (tensor-parallel) pod holds one rectangle on EVERY member
+    node; ``node``/``placement`` are the primary's (the engine hosting the
+    executors), ``member_nodes``/``member_placements`` list all of them
+    (primary first).  Single-device pods leave the member tuples empty.
+    """
 
     fn: str
     inst_id: str
     node: int
     placement: Placement
+    member_nodes: tuple[int, ...] = ()
+    member_placements: tuple[Placement, ...] = ()
+
+    def all_nodes(self) -> tuple[int, ...]:
+        return self.member_nodes or (self.node,)
+
+    def all_placements(self) -> tuple[Placement, ...]:
+        return self.member_placements or (self.placement,)
 
 
 class ClusterFrontend:
@@ -69,16 +86,26 @@ class ClusterFrontend:
     def __init__(self, n_nodes: int = 2, *,
                  mem_bytes: int = 16 * 1024**3, window: float = 0.2,
                  model_store: Optional[FleetModelStore] = None,
-                 cold_start: str = "overlap"):
+                 cold_start: str = "overlap",
+                 links: Optional[NetworkLinks] = None):
         if n_nodes <= 0:
             raise ValueError("need at least one node")
         if cold_start not in ("overlap", "blocking"):
             raise ValueError(f"unknown cold_start mode {cold_start!r}")
+        # Inter-node bandwidth graph: sharded pods co-locate their
+        # rectangles on the highest-bottleneck-bandwidth group, and the
+        # fleet store picks its transfer peer by link speed.
+        self.links = links if links is not None else NetworkLinks(n_nodes)
+        self.links.grow(n_nodes)
         # Optional fleet weight tier (serving/modelstore.py): placements
         # source their params through it (device -> host -> peer -> cold),
         # scale-up prefers warm nodes, and memory admission charges the
         # storage-server context once per node instead of per function.
         self.model_store = model_store
+        if model_store is not None and getattr(model_store, "links",
+                                               None) is None:
+            # Bandwidth-aware peer selection for host-to-host transfers.
+            model_store.links = self.links
         self.cold_start = cold_start
         # (event, node, inst_id): TTFT resolved lazily from the instance's
         # first landed token by cold_start_events().
@@ -118,7 +145,7 @@ class ClusterFrontend:
     def _fn_instances_on(self, node: int) -> dict[str, int]:
         counts: dict[str, int] = {}
         for p in self.placements:
-            if p.node == node:
+            if node in p.all_nodes():
                 counts[p.fn] = counts.get(p.fn, 0) + 1
         return counts
 
@@ -172,7 +199,8 @@ class ClusterFrontend:
                        weights_loader: Optional[Any] = None,
                        sampling: Optional[Any] = None,
                        speculate: Optional[Any] = None,
-                       draft_params: Optional[Any] = None
+                       draft_params: Optional[Any] = None,
+                       shards: int = 1
                        ) -> Optional[str]:
         """Place ONE instance via MRA + memory admission with spillover.
 
@@ -215,8 +243,20 @@ class ClusterFrontend:
         staged the draft before re-uploads it host->device instead of
         paying the origin path.  ``sampling`` (a ``SamplingConfig``)
         turns on fused on-device stochastic sampling.
+
+        ``shards > 1`` deploys ONE tensor-parallel pod spanning that many
+        nodes: a rectangle is acquired on every member of the best-linked
+        node group (``NetworkLinks.best_groups``), the KV charge divides
+        by ``shards`` per node, and the primary member's engine runs the
+        executors under a ``tp_mesh`` over the members' devices.
         """
         t_start = time.perf_counter()
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        if shards > 1 and speculate is not None:
+            raise ValueError(
+                "speculate cannot ride a sharded pod: the draft/verify "
+                "round is not tensor-parallel")
         if not 0.0 <= kv_shared_frac < 1.0:
             raise ValueError(
                 f"kv_shared_frac must be in [0, 1), got {kv_shared_frac}")
@@ -229,6 +269,15 @@ class ClusterFrontend:
             batching=batching, max_batch=max_batch, max_len=max_len,
             block_size=block_size, n_kv_blocks=n_kv_blocks)
             * (1.0 - kv_shared_frac))
+        if shards > 1:
+            # Per-member charge: the KV pool shards its kv-heads over the
+            # pod's tensor axis, so each member node holds ~1/shards of
+            # it — this is what lets a dense reservation too big for ONE
+            # node's budget admit as a multi-rectangle pod.  Weights stay
+            # charged in full per node: column-only exact TP replicates
+            # the row-parallel projections, so full bytes is the honest
+            # upper bound.
+            kv_bytes //= shards
         if params is None:
             if self.model_store is None:
                 raise ValueError(
@@ -277,6 +326,15 @@ class ClusterFrontend:
         def rollback_mm() -> None:
             if created_mm and not any(p.fn == fn for p in self.placements):
                 del self._fn_mm[fn]
+
+        if shards > 1:
+            return self._place_sharded(
+                fn, model, params, alloc, mm, rollback_mm, shards,
+                max_batch=max_batch, max_len=max_len, batching=batching,
+                block_size=block_size, n_kv_blocks=n_kv_blocks,
+                fused=fused, prefix_sharing=prefix_sharing,
+                sampling=sampling, weights_loader=weights_loader,
+                t_start=t_start)
 
         pod_id = f"{fn}-{next(self._pod_seq)}"
         # Warm-first phases: with a fleet store attached, the MRA search
@@ -369,6 +427,102 @@ class ClusterFrontend:
             self._enqueue(fn, req)
         return f"{placement.node}:{inst_id}"
 
+    def _place_sharded(self, fn: str, model: Model, params: Any,
+                       alloc: Alloc, mm: MemoryModel, rollback_mm: Any,
+                       shards: int, *, max_batch: int, max_len: int,
+                       batching: str, block_size: int,
+                       n_kv_blocks: Optional[int], fused: bool,
+                       prefix_sharing: bool, sampling: Optional[Any],
+                       weights_loader: Optional[Any],
+                       t_start: float) -> Optional[str]:
+        """Acquire ``shards`` MRA rectangles — one per member node — on
+        the best-connected node group and deploy ONE tensor-parallel
+        instance across them.
+
+        Link-aware placement (Helix-style): candidate groups are walked
+        in ``NetworkLinks.best_groups`` order — highest bottleneck
+        bandwidth first, so the pod's per-round all-gathers ride the
+        fastest links available.  Every member must fit the rectangle AND
+        pass memory admission; a group that fails anywhere rolls back the
+        rectangles it acquired and the next-best group is tried.  The
+        primary (first member) hosts the executors; the mesh spans one
+        jax device per member node.
+        """
+        devices = jax.devices()
+        all_nodes = {n.node_id for n in self.pool.nodes}
+        candidates = sorted(n for n in all_nodes
+                            if n < len(devices) and self.engines[n].alive)
+        pod_id = f"{fn}-{next(self._pod_seq)}"
+        group: Optional[list[int]] = None
+        rects: list[Placement] = []
+        for cand in self.links.best_groups(candidates, shards):
+            acquired: list[Placement] = []
+            ok = True
+            for member in cand:
+                rect = self.pool.schedule(alloc, f"{pod_id}@{member}",
+                                          exclude=all_nodes - {member})
+                if rect is None or not self.admits(member, fn, mm):
+                    if rect is not None:
+                        self.pool.release(rect)
+                    ok = False
+                    break
+                acquired.append(rect)
+            if ok:
+                group, rects = list(cand), acquired
+                break
+            for rect in acquired:
+                self.pool.release(rect)
+        if group is None:
+            rollback_mm()
+            return None
+        primary = group[0]
+        mesh = tp_mesh(shards, devices=[devices[n] for n in group])
+        event = None
+        deploy_params = params
+        acquired_store = False
+        try:
+            if self.model_store is not None:
+                # The fleet tier stages on the primary's host cache but
+                # uploads each layer shard STRAIGHT to its owning device
+                # (sharding_for); the engine's shard_put re-place is then
+                # a no-op and warm scale-ups skip the origin fetch.
+                from jax.sharding import NamedSharding
+                resident = self.engines[primary].store.contains(
+                    f"{fn}@tp{shards}")
+                deploy_params, event = self.model_store.acquire(
+                    primary, fn, model, params=params,
+                    loader=weights_loader, resident=resident,
+                    mode=self.cold_start,
+                    sharding_for=lambda nm, shp: NamedSharding(
+                        mesh, serve_pspec(nm, shp, mesh)))
+                acquired_store = True
+                event.placed_at = t_start
+            inst_id = self.engines[primary].deploy(
+                fn, model, deploy_params, alloc, n_instances=1,
+                max_batch=max_batch, max_len=max_len, batching=batching,
+                block_size=block_size, n_kv_blocks=n_kv_blocks,
+                fused=fused, prefix_sharing=prefix_sharing,
+                sampling=sampling, mesh=mesh)[0]
+        except Exception:
+            for rect in rects:
+                self.pool.release(rect)
+            if acquired_store:
+                self.model_store.release(primary, fn)
+            rollback_mm()
+            raise
+        if event is not None:
+            self._cold_instances.append((event, primary, inst_id))
+        self.placements.append(InstancePlacement(
+            fn=fn, inst_id=inst_id, node=primary, placement=rects[0],
+            member_nodes=tuple(group), member_placements=tuple(rects)))
+        inst = self.engines[primary].instances[inst_id]
+        self._fn_limits[fn] = (max_len, block_size,
+                               inst.allocator.capacity
+                               if batching == "paged" else None, 0)
+        for req in self._pending.pop(fn, []):
+            self._enqueue(fn, req)
+        return f"{primary}:{inst_id}"
+
     def deploy(self, fn: str, model: Model, params: Any, alloc: Alloc, *,
                n_instances: int = 1, max_batch: int = 4, max_len: int = 64,
                batching: str = "continuous",
@@ -379,7 +533,8 @@ class ClusterFrontend:
                kv_shared_frac: float = 0.0,
                sampling: Optional[Any] = None,
                speculate: Optional[Any] = None,
-               draft_params: Optional[Any] = None) -> list[str]:
+               draft_params: Optional[Any] = None,
+               shards: int = 1) -> list[str]:
         """Place ``n_instances`` of ``fn`` across the fleet via MRA +
         memory admission; returns ``node:inst_id`` handles."""
         handles = []
@@ -391,7 +546,8 @@ class ClusterFrontend:
                 block_size=block_size, n_kv_blocks=n_kv_blocks, fused=fused,
                 prefix_sharing=prefix_sharing,
                 kv_shared_frac=kv_shared_frac, sampling=sampling,
-                speculate=speculate, draft_params=draft_params)
+                speculate=speculate, draft_params=draft_params,
+                shards=shards)
             if handle is None:
                 raise RuntimeError(
                     f"no node can host {fn} at alloc {alloc} "
@@ -552,8 +708,20 @@ class ClusterFrontend:
             # Host RAM died with the node; peer caches stay warm.
             self.model_store.drop_node(node)
         self.pool.drain_node(node)
-        lost = [p for p in self.placements if p.node == node]
-        self.placements = [p for p in self.placements if p.node != node]
+        # A sharded pod dies with ANY member: one KV shard and one weight
+        # shard lived on the dead node.  A secondary-member death must
+        # also kill the (still running) instance on the primary engine;
+        # rectangles on surviving member nodes are released explicitly
+        # (drain_node only dropped the dead node's).
+        lost = [p for p in self.placements if node in p.all_nodes()]
+        self.placements = [p for p in self.placements
+                           if node not in p.all_nodes()]
+        for p in lost:
+            if p.node != node:
+                strays.extend(self._kill_remote_member(p))
+            for n_, rect in zip(p.all_nodes(), p.all_placements()):
+                if n_ != node and self.engines[n_].alive:
+                    self.pool.release(rect)
         for fn in {p.fn for p in lost}:
             if not any(p.fn == fn for p in self.placements):
                 # No replica left anywhere: drop the per-function
@@ -565,6 +733,33 @@ class ClusterFrontend:
             else:
                 self._pending.setdefault(fn, []).append(req)
         return len(lost)
+
+    def _kill_remote_member(self, p: InstancePlacement
+                            ) -> list[tuple[str, ServeRequest]]:
+        """Tear down a sharded pod whose SECONDARY member died: the
+        primary engine is alive but the pod's mesh lost a device, so the
+        instance dies crash-style (no drain — its KV shard is gone) and
+        its unfinished requests strand for re-routing; slot occupants
+        restart from the prompt exactly like a primary crash."""
+        eng = self.engines[p.node]
+        inst = eng.instances.pop(p.inst_id, None)
+        if inst is None:
+            return []
+        eng.scheduler.deregister(p.inst_id)
+        strays: list[tuple[str, ServeRequest]] = []
+        occupants = (inst.active if inst.batching == "static"
+                     else inst.slots)
+        for req in occupants:
+            if req is None or req.done:
+                continue
+            req.tokens_out = []  # KV shard lost: re-execute from scratch
+            strays.append((p.fn, req))
+        strays.extend((p.fn, req) for req in inst.queue)
+        inst.queue.clear()
+        inst.close()  # drops the engine-store weight refcount
+        if self.model_store is not None:
+            self.model_store.release(p.node, p.fn)
+        return strays
 
     def migrate(self, fn: str, handle: str, model: Model, params: Any,
                 target: int) -> Optional[str]:
@@ -595,6 +790,11 @@ class ClusterFrontend:
         eng = self.engines[src]
         inst = eng.instances.get(inst_id)
         if inst is None or inst.retired or inst.batching == "static":
+            return None
+        if getattr(inst, "mesh", None) is not None:
+            # Sharded pods don't migrate: the KV lives as one shard per
+            # member device and a target would need an identical link
+            # group — the reconciler re-places instead.
             return None
         if inst.speculate is not None:
             # Mid-flight speculative state (draft side cache, device PRNG
@@ -664,7 +864,8 @@ class ClusterFrontend:
         """Engine callback: a retired instance finished draining."""
         for p in self.placements:
             if p.node == node and p.inst_id == inst_id:
-                self.pool.release(p.placement)
+                for rect in p.all_placements():
+                    self.pool.release(rect)
                 self.placements.remove(p)
                 if self.model_store is not None:
                     # The pod's hold on its host-staged weights ends here;

@@ -107,7 +107,19 @@ def stage_params(model, params) -> StagedWeights:
     return StagedWeights(treedef, leaves, stacked, nbytes)
 
 
-def upload_params(staged: StagedWeights, *, mode: str = "overlap"):
+def _layer_sharding(s):
+    """Sharding of one layer slice of a stacked leaf: drop the leading
+    ``"layers"`` dim from the full leaf's PartitionSpec (it is never a
+    sharded dim on the serving path)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    if not isinstance(s, NamedSharding):
+        return None
+    return NamedSharding(s.mesh, P(*tuple(s.spec)[1:]))
+
+
+def upload_params(staged: StagedWeights, *, mode: str = "overlap",
+                  shardings: Optional[List[Any]] = None):
     """Re-assemble staged shards on device.
 
     ``"blocking"`` stacks layer shards on host and blocks until the
@@ -116,23 +128,44 @@ def upload_params(staged: StagedWeights, *, mode: str = "overlap"):
     returns with the transfers still in flight — downstream jit
     tracing and the first prefill dispatch overlap the upload.  Values
     are identical either way.
+
+    ``shardings`` (optional, leaf-aligned with ``staged.leaves``) gives
+    each leaf's final ``jax.sharding.Sharding``: the upload then places
+    every leaf — and in overlap mode every LAYER shard of a stacked
+    leaf — straight onto its owning device(s), so a tensor-parallel
+    pod's weights never round-trip the full tree through one device.
     """
     if mode not in ("blocking", "overlap"):
         raise ValueError(f"unknown upload mode {mode!r}")
+    if shardings is not None and len(shardings) != len(staged.leaves):
+        raise ValueError(
+            f"shardings must align with staged leaves "
+            f"({len(shardings)} vs {len(staged.leaves)})")
     out = []
-    for leaf, stacked in zip(staged.leaves, staged.stacked):
+    for i, (leaf, stacked) in enumerate(zip(staged.leaves, staged.stacked)):
+        s = shardings[i] if shardings is not None else None
         if stacked:
             if mode == "blocking":
                 # Re-assemble on host, then one synchronous transfer.
-                out.append(jnp.asarray(np.stack(leaf)))
+                host = np.stack(leaf)
+                out.append(jnp.asarray(host) if s is None
+                           else jax.device_put(host, s))
             else:
                 # One async device_put per layer shard; the device-side
                 # stack is dispatched, not executed, so the call returns
-                # with the whole pipeline in flight.
-                out.append(jnp.stack([jax.device_put(s) for s in leaf]))
+                # with the whole pipeline in flight.  With a sharding,
+                # each layer shard is sliced host-side and lands on its
+                # owning devices directly.
+                layer_s = _layer_sharding(s) if s is not None else None
+                parts = [jax.device_put(x) if layer_s is None
+                         else jax.device_put(x, layer_s) for x in leaf]
+                out.append(jnp.stack(parts))
+        elif mode == "blocking":
+            out.append(jnp.asarray(leaf) if s is None
+                       else jax.device_put(leaf, s))
         else:
-            out.append(jnp.asarray(leaf) if mode == "blocking"
-                       else jax.device_put(leaf))
+            out.append(jax.device_put(leaf) if s is None
+                       else jax.device_put(leaf, s))
     params = jax.tree_util.tree_unflatten(staged.treedef, out)
     if mode == "blocking":
         params = jax.block_until_ready(params)
@@ -253,8 +286,13 @@ class FleetModelStore:
     ``release`` — live pods' weights are never evictable.
     """
 
-    def __init__(self, host_budget_bytes: int = 4 << 30):
+    def __init__(self, host_budget_bytes: int = 4 << 30, *,
+                 links: Optional[Any] = None):
         self.host_budget_bytes = int(host_budget_bytes)
+        # Optional NetworkLinks graph: peer selection then prefers the
+        # candidate with the fastest link to the acquiring node instead
+        # of the lowest node id (the frontend wires its own graph in).
+        self.links = links
         self._caches: Dict[int, HostWeightCache] = {}
         self._lock = threading.Lock()
         self.device_hits = 0
@@ -296,11 +334,17 @@ class FleetModelStore:
         *,
         resident: bool = False,
         mode: str = "overlap",
+        sharding_for: Optional[Callable[[tuple, tuple], Any]] = None,
     ):
         """Source ``key``'s weights for a placement on ``node``.
 
         Returns ``(device_params, ColdStartEvent)`` and pins the host
         entry backing them (pair with :meth:`release`).
+
+        ``sharding_for(names, shape) -> Sharding`` (optional) resolves
+        each param leaf's final placement — a sharded pod passes its
+        mesh resolver here so the upload streams every layer shard
+        straight to its owning device.
         """
         with self._lock:
             cache = self._cache_for(node)
@@ -321,11 +365,14 @@ class FleetModelStore:
                 self.host_hits += 1
                 staged = cache.get(key)
             else:
-                peer = next(
-                    (n for n in sorted(self._caches)
-                     if n != node and self._caches[n].contains(key)),
-                    None,
-                )
+                cands = [n for n in sorted(self._caches)
+                         if n != node and self._caches[n].contains(key)]
+                if self.links is not None and cands:
+                    # Bandwidth-aware: pull from the warm peer with the
+                    # fastest link to this node (ties to lowest id).
+                    peer = self.links.best_peer(node, cands)
+                else:
+                    peer = cands[0] if cands else None
                 if peer is not None:
                     tier = "peer"
                     self.peer_hits += 1
@@ -345,8 +392,19 @@ class FleetModelStore:
                     cache.put(key, staged)
             cache.pin(key)
 
+        shardings = None
+        if sharding_for is not None:
+            names = _name_leaves(model)
+            if names is not None and len(names) == len(staged.leaves):
+                shardings = [
+                    sharding_for(nm, ((len(leaf),) + leaf[0].shape)
+                                 if st else leaf.shape)
+                    for nm, leaf, st in zip(names, staged.leaves,
+                                            staged.stacked)
+                ]
         t0 = perf_counter()
-        device_params = upload_params(staged, mode=mode)
+        device_params = upload_params(staged, mode=mode,
+                                      shardings=shardings)
         upload_s = perf_counter() - t0
         with self._lock:
             self.bytes_h2d += staged.nbytes

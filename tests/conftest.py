@@ -25,11 +25,20 @@ Two jobs:
 from __future__ import annotations
 
 import functools
+import os
 import sys
 import types
 import zlib
 
 import pytest
+
+# Forced host devices: the sharded-pod / tensor-parallel tests build meshes
+# over XLA host platform devices, which must exist before jax initializes.
+# Appended (not overwritten) so an explicit user topology wins.
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=4").strip()
 
 # --------------------------------------------------------------------------
 # Hypothesis shim (installed only when the real package is absent)

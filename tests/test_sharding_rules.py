@@ -1,0 +1,130 @@
+"""Divisibility fallbacks of the logical sharding rules (satellite of the
+sharded-pod PR): the dormant paths ``resolve_pspec`` / ``cache_pspec``
+take when a dimension does NOT divide the mesh — head replication
+(qwen2-style 28 heads vs model=16), GQA kv < TP, batch=1 context
+parallelism — plus multi-axis ``used`` exclusivity, all under the forced
+4-host-device mesh conftest sets up.
+"""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.sharding import (SERVE_AXIS, cache_pspec,
+                                        resolve_pspec, serve_pspec, tp_mesh)
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 4, reason="needs 4 (forced host) devices")
+
+
+def mesh_of(*axes: tuple) -> Mesh:
+    """Mesh over the 4 forced host devices with the given (name, size)."""
+    sizes = [s for _, s in axes]
+    devs = np.asarray(jax.devices()[: int(np.prod(sizes))]).reshape(sizes)
+    return Mesh(devs, tuple(n for n, _ in axes))
+
+
+# -------------------------------------------------------------------------
+# resolve_pspec divisibility fallbacks
+# -------------------------------------------------------------------------
+
+
+def test_non_divisible_heads_replicate_while_d_ff_shards():
+    # qwen2-7b's situation scaled to this mesh: 7 heads on model=4 is the
+    # same non-divisibility as 28 heads on model=16 — heads stay
+    # replicated over TP while d_ff / vocab still shard.
+    mesh = mesh_of(("model", 4))
+    spec = resolve_pspec(("batch", "seq", "heads", None),
+                         (2, 16, 7, 8), mesh)
+    assert spec == P(None, None, None, None)
+    spec = resolve_pspec(("d_ff",), (64,), mesh)
+    assert spec == P("model")
+    spec = resolve_pspec(("vocab", "d_model"), (128, 30), mesh)
+    assert spec == P("model", None)
+
+
+def test_divisible_heads_do_shard():
+    mesh = mesh_of(("model", 4))
+    assert resolve_pspec(("heads",), (8,), mesh) == P("model")
+
+
+def test_gqa_kv_heads_below_tp_replicate():
+    # kv_heads=2 < model=4: the standard GQA fallback — kv tensors
+    # replicate over TP instead of splitting a head in half.
+    mesh = mesh_of(("model", 4))
+    assert resolve_pspec(("kv_heads",), (2,), mesh) == P(None)
+    assert resolve_pspec(("kv_heads",), (4,), mesh) == P("model")
+
+
+def test_multi_axis_used_exclusivity():
+    # One dim takes BOTH preferred axes; a later dim with the same
+    # preference list must not reuse them (a mesh axis shards exactly one
+    # dim of a tensor).
+    mesh = mesh_of(("model", 2), (SERVE_AXIS, 2))
+    spec = resolve_pspec(("heads", "kv_heads"), (8, 8), mesh)
+    assert spec == P(("model", SERVE_AXIS), None)
+    # And partially: heads fits only the first axis, kv takes the second.
+    spec = resolve_pspec(("heads", "kv_heads"), (2, 2), mesh)
+    assert spec == P("model", SERVE_AXIS)
+
+
+# -------------------------------------------------------------------------
+# cache_pspec: every mesh axis must shard *something*
+# -------------------------------------------------------------------------
+
+
+def test_cache_pspec_batch1_context_parallel():
+    # batch=1 (long_500k): the (pod,) axis moves from batch to seq —
+    # context parallelism — instead of replicating the cache.
+    mesh = mesh_of(("pod", 4))
+    shape = (2, 1, 16, 4, 8)  # (layers, batch, seq, kv_heads, head_dim)
+    spec = cache_pspec(shape, mesh)
+    assert spec == P(None, None, "pod", None, None)
+    # Divisible batch keeps the straight assignment.
+    spec = cache_pspec((2, 4, 16, 4, 8), mesh)
+    assert spec == P(None, "pod", None, None, None)
+
+
+def test_cache_pspec_kv_below_tp_moves_model_to_seq():
+    # GQA kv_heads=2 < model=4: model also moves to seq (flash-decoding
+    # style sequence-sharded attention with a softmax combine).
+    mesh = mesh_of(("model", 4))
+    spec = cache_pspec((2, 4, 16, 2, 8), mesh)
+    assert spec == P(None, None, "model", None, None)
+
+
+def test_cache_pspec_seq_not_divisible_gives_up():
+    # Fallback-of-the-fallback: seq can't absorb the axes either ->
+    # plain resolve_pspec result (replicated kv, unsharded seq).
+    mesh = mesh_of(("model", 4))
+    spec = cache_pspec((2, 4, 6, 2, 8), mesh)
+    assert spec == P(None, None, None, None, None)
+
+
+# -------------------------------------------------------------------------
+# serve_pspec: column-only exact TP
+# -------------------------------------------------------------------------
+
+
+def test_serve_pspec_shards_output_dims_only():
+    mesh = tp_mesh(4)
+    # Column-parallel projection: trailing "tp" shards.
+    assert serve_pspec(("d_model", "tp"), (32, 64), mesh) == \
+        P(None, SERVE_AXIS)
+    # Row-parallel projection (wo / w_down): leading "tp" replicates —
+    # the contraction must run fully on-device for exactness.
+    assert serve_pspec(("tp", "d_model"), (64, 32), mesh) == P(None, None)
+    # Vocab shards wherever it appears (embedding + lm head).
+    assert serve_pspec(("vocab", "d_model"), (64, 32), mesh) == \
+        P(SERVE_AXIS, None)
+    # Non-divisible output dim: replicated, not an error.
+    assert serve_pspec(("d_model", "tp"), (32, 30), mesh) == P(None, None)
+
+
+def test_tp_mesh_shards1_is_none():
+    assert tp_mesh(1) is None
+    with pytest.raises(ValueError):
+        tp_mesh(0)
+    with pytest.raises(ValueError):
+        tp_mesh(64)  # more shards than devices
