@@ -16,7 +16,7 @@ purely reactive scaler necessarily violates during the detection lag.
 
 from __future__ import annotations
 
-from benchmarks.common import Row
+from benchmarks.common import Row, write_report
 from repro.control import ControlPlane, FunctionSpec, SimBackend
 from repro.core.cluster import Cluster
 from repro.core.profiler import profile_points
@@ -81,6 +81,15 @@ def run() -> list[Row]:
                     note="2-4x RPS steps: reactive detection lag shows up "
                          "as transient violations"))
     rows.append(Row("fig12", "abrupt_step_peak_pods", pods2))
+    write_report("BENCH_autoscale.json", {
+        "bench": "autoscale_slo",
+        "slo_s": SLO_S,
+        "duration_s": DURATION,
+        "diurnal": {"violation_ratio": v, "served_fraction": served,
+                    "p99_s": p99, "peak_pods": pods},
+        "abrupt_step": {"violation_ratio": v2, "served_fraction": served2,
+                        "p99_s": p99_2, "peak_pods": pods2},
+    })
     return rows
 
 

@@ -1,0 +1,204 @@
+"""Chaos soak — multi-tenant ramp under a seeded fault schedule.
+
+Three tenants share a 4-node fleet, one per SLO tier:
+
+* **resnet** (guaranteed) — never shed or expired, retried without bound;
+  losing even one request is a bug the soak asserts against.
+* **bert** (best-effort) — deadline-armed: sheddable at admission when the
+  queue estimate says the deadline cannot be met, expirable mid-queue,
+  bounded jittered-backoff retries after a failure.
+* **rnnt** (batch) — the preemptible lane: queued behind every non-batch
+  request, generous deadline.
+
+Halfway through a rising ramp a deterministic :class:`ChaosSchedule`
+injects a gray-failure straggler (6x slowdown), a hard node kill, and a
+link degradation — the same three faults the sim-vs-live parity tests
+replay.  Two trials run the identical workload and schedule:
+
+* **quarantine on** — ``ControlPlane(quarantine_threshold=0.6)``: the
+  straggler's health EWMA trips the sweep, routing stops, occupants
+  drain, and the reconciler heals the capacity on healthy nodes.
+* **quarantine off** — the straggler keeps serving at 6x latency for the
+  fault's whole duration.
+
+Asserted: goodput >= floor, ZERO lost guaranteed-tier requests, and
+quarantine-on beats quarantine-off on the guaranteed tenant's p99.
+
+Run:  PYTHONPATH=src python -m benchmarks.chaos_soak [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import HEADER, Row, write_report
+from repro.control import ControlPlane, FunctionSpec, SimBackend, ramp
+from repro.core.chaos import ChaosInjector, ChaosSchedule, FaultEvent, \
+    SimChaosTarget
+from repro.core.cluster import Cluster
+from repro.core.scaling import ProfilePoint
+from repro.core.slo import (RetryPolicy, TIER_BATCH, TIER_BEST_EFFORT,
+                            TIER_GUARANTEED)
+from repro.core.workload import PAPER_ZOO, trace_arrivals
+
+CONTROL_PERIOD = 0.5
+QUARANTINE_THRESHOLD = 0.6
+GOODPUT_FLOOR = 0.90
+SEED = 17
+
+TENANTS = (
+    # (fn, tier, deadline_s, slo_s, peak_rps)
+    ("resnet", TIER_GUARANTEED, 1.5, 0.069, 25.0),
+    ("bert", TIER_BEST_EFFORT, 0.8, 0.10, 12.0),
+    ("rnnt", TIER_BATCH, 6.0, None, 4.0),
+)
+
+
+def _profile(fn: str) -> tuple[ProfilePoint, ...]:
+    c = PAPER_ZOO[fn]
+    return tuple(
+        ProfilePoint(sm=sm, quota=q, throughput=c.rate(sm, q),
+                     p99_latency=0.04)
+        for sm, q in ((0.12, 1.0), (0.24, 1.0), (0.12, 0.5)))
+
+
+def _schedule(duration: float) -> ChaosSchedule:
+    """The soak's fault timeline: straggler + kill + link, deterministic."""
+    # Node 0 is where best-area-fit packs first, so the straggler is
+    # guaranteed to hit loaded pods (a gray failure nobody can ignore).
+    return ChaosSchedule(seed=SEED, events=(
+        FaultEvent(at=0.35 * duration, kind="straggler", node=0,
+                   magnitude=6.0, duration=0.5 * duration),
+        FaultEvent(at=0.45 * duration, kind="kill", node=2),
+        FaultEvent(at=0.55 * duration, kind="link", node=3,
+                   magnitude=3.0, duration=0.25 * duration),
+    ))
+
+
+def _trial(quarantine: bool, duration: float) -> dict:
+    cluster = Cluster(n_nodes=4, sharing=True,
+                      retry=RetryPolicy(max_attempts=3, base_s=0.05,
+                                        seed=SEED))
+    plane = ControlPlane(
+        SimBackend(cluster),
+        quarantine_threshold=QUARANTINE_THRESHOLD if quarantine else None)
+    arrivals: dict[str, int] = {}
+    for fn, tier, deadline_s, slo_s, peak in TENANTS:
+        trace = [(0.0, peak * 0.4), (duration * 0.25, peak),
+                 (duration, 0.0)]
+        plane.register(FunctionSpec(
+            name=fn, profile=_profile(fn), slo_latency=slo_s,
+            slo_tier=tier, deadline_s=deadline_s,
+            target_rps=ramp(trace[:-1]), headroom=1.6,
+            min_instances=1, max_instances=24, curve=PAPER_ZOO[fn]))
+        reqs = trace_arrivals(fn, trace, seed=SEED + len(arrivals))
+        arrivals[fn] = len(reqs)
+        cluster.submit_all(reqs)
+    injector = ChaosInjector(_schedule(duration), SimChaosTarget(cluster))
+
+    def control() -> None:
+        injector.advance(cluster.sim.now)
+        plane.reconcile()
+        if cluster.sim.now < duration:
+            cluster.sim.after(CONTROL_PERIOD, control)
+
+    cluster.sim.after(CONTROL_PERIOD, control)
+    cluster.run(duration + 20.0)
+    out: dict = {"tenants": {}, "quarantines": len(plane.quarantines),
+                 "shed": cluster.shed, "expired": cluster.expired,
+                 "lost": cluster.lost}
+    for fn, tier, _, _, _ in TENANTS:
+        rec = cluster.recorders[fn]
+        out["tenants"][fn] = {
+            "tier": tier,
+            "offered": arrivals[fn],
+            "completed": rec.count(),
+            "goodput": rec.goodput(),
+            "p99_s": rec.p99(),
+            "deadline_met": rec.deadline_met,
+            "deadline_missed": rec.deadline_missed,
+            "shed": rec.shed,
+            "expired": rec.expired,
+            "lost": rec.lost,
+        }
+    met = sum(t["deadline_met"] for t in out["tenants"].values())
+    total = met + sum(t["deadline_missed"] + t["shed"] + t["expired"]
+                      + t["lost"] for t in out["tenants"].values())
+    out["goodput"] = met / max(total, 1)
+    return out
+
+
+def run(duration: float = 40.0, assert_floors: bool = True) -> list[Row]:
+    on = _trial(quarantine=True, duration=duration)
+    off = _trial(quarantine=False, duration=duration)
+    g_on = on["tenants"]["resnet"]
+    g_off = off["tenants"]["resnet"]
+    write_report("BENCH_chaos.json", {
+        "bench": "chaos_soak",
+        "duration_s": duration,
+        "seed": SEED,
+        "quarantine_threshold": QUARANTINE_THRESHOLD,
+        "goodput_floor": GOODPUT_FLOOR,
+        "schedule": [dataclasses_asdict(e)
+                     for e in _schedule(duration).events],
+        "quarantine_on": on,
+        "quarantine_off": off,
+    })
+    rows = [
+        Row("chaos", "goodput_quarantine_on", on["goodput"],
+            note=f"deadline-met fraction under chaos (floor "
+                 f"{GOODPUT_FLOOR})"),
+        Row("chaos", "goodput_quarantine_off", off["goodput"],
+            note="same chaos, gray-failure sweep disabled"),
+        Row("chaos", "guaranteed_lost_on", g_on["lost"], target=0.0,
+            tol=0.0, note="guaranteed tier must never lose a request"),
+        Row("chaos", "guaranteed_p99_on_s", g_on["p99_s"],
+            note="guaranteed tenant p99, straggler quarantined"),
+        Row("chaos", "guaranteed_p99_off_s", g_off["p99_s"],
+            note="guaranteed tenant p99, straggler left in rotation"),
+        Row("chaos", "quarantines", on["quarantines"],
+            note="nodes the health sweep took out of rotation"),
+        Row("chaos", "shed_plus_expired_on", on["shed"] + on["expired"],
+            note="typed rejections under chaos (best-effort/batch only)"),
+    ]
+    if assert_floors:
+        assert on["goodput"] >= GOODPUT_FLOOR, (
+            f"goodput {on['goodput']:.3f} under chaos fell below the "
+            f"{GOODPUT_FLOOR} floor")
+        assert g_on["lost"] == 0 and g_on["shed"] == 0 \
+            and g_on["expired"] == 0, (
+            f"guaranteed tier dropped requests: lost={g_on['lost']} "
+            f"shed={g_on['shed']} expired={g_on['expired']}")
+        assert g_on["completed"] == g_on["offered"], (
+            f"guaranteed tier served {g_on['completed']}/"
+            f"{g_on['offered']} requests")
+        assert on["quarantines"] >= 1, (
+            "the straggler never tripped the quarantine sweep")
+        assert g_on["p99_s"] <= g_off["p99_s"], (
+            f"quarantine-on p99 {g_on['p99_s']:.3f}s did not beat "
+            f"quarantine-off {g_off['p99_s']:.3f}s")
+    return rows
+
+
+def dataclasses_asdict(e: FaultEvent) -> dict:
+    return {"at": e.at, "kind": e.kind, "node": e.node,
+            "magnitude": e.magnitude, "duration": e.duration}
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--smoke", action="store_true",
+                        help="short run + hard assertions (CI tier-1)")
+    parser.add_argument("--duration", type=float, default=40.0)
+    args = parser.parse_args()
+    rows = run(duration=20.0 if args.smoke else args.duration)
+    print(HEADER)
+    for r in rows:
+        print(r.csv())
+    if args.smoke:
+        print("smoke: OK (goodput floor held, zero guaranteed losses, "
+              "quarantine beat the straggler)")
+
+
+if __name__ == "__main__":
+    main()

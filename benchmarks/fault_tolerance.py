@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import argparse
 
-from benchmarks.common import HEADER, Row
+from benchmarks.common import HEADER, Row, write_report
 from repro.control import ControlPlane, FunctionSpec, SimBackend, ramp
 from repro.core.cluster import Cluster
 from repro.core.scaling import ProfilePoint
@@ -95,6 +95,14 @@ def _trial(heal: bool, duration: float) -> dict[str, float]:
 def run(duration: float = 40.0) -> list[Row]:
     healed = _trial(heal=True, duration=duration)
     unhealed = _trial(heal=False, duration=duration)
+    write_report("BENCH_fault.json", {
+        "bench": "fault_tolerance",
+        "duration_s": duration,
+        "control_period_s": CONTROL_PERIOD,
+        "slo_s": SLO_S,
+        "healed": healed,
+        "unhealed": unhealed,
+    })
     return [
         Row("fault", "served_fraction_healed", healed["served_fraction"],
             target=1.0, tol=0.001,

@@ -14,6 +14,7 @@
   decode decode_throughput    sync-free fused decode hot path
   spec   decode_throughput    speculative draft/verify round (--speculate)
   shard  sharded_pod          tensor-parallel pods: HBM/shard + tokens/s
+  chaos  chaos_soak           seeded fault schedule: goodput + quarantine
 
 Every module writes its ``BENCH_*.json`` artifact to the repo root
 (``benchmarks.common.write_report``) regardless of the launch CWD.
@@ -47,6 +48,7 @@ MODULES = [
     ("decode", "benchmarks.decode_throughput", "run"),
     ("spec", "benchmarks.decode_throughput", "run_spec"),
     ("shard", "benchmarks.sharded_pod", "run"),
+    ("chaos", "benchmarks.chaos_soak", "run"),
 ]
 
 
@@ -55,7 +57,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset "
                          "(fig8..fig13,fault,prefix,head,roof,cold,"
-                         "decode,spec,shard)")
+                         "decode,spec,shard,chaos)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 

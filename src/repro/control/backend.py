@@ -32,6 +32,13 @@ it sees a fleet through a small verb set:
 * ``links()``              — the fleet's inter-node bandwidth table
   (every (a < b) pair, symmetric bytes/s): the link model behind sharded
   multi-rectangle placement and bandwidth-aware peer weight transfers.
+* ``health(node)``         — gray-failure score in [0, 1]: 1.0 nominal,
+  ~1/N for a node running N times slower than its own baseline, 0.0 dead.
+* ``quarantine(node)``     — take a degraded-but-alive node out of
+  routing and placement; occupants drain, the reconciler heals the lost
+  capacity through the ordinary ``alive`` prune.  Returns the number of
+  instances taken out of rotation.  Quarantine is a health action, never
+  a scheduling decision: it is logged outside ``decision_signature``.
 
 Two implementations ship: ``SimBackend`` over the discrete-event
 ``repro.core.cluster.Cluster`` and ``LiveBackend`` over the real JAX
@@ -79,6 +86,10 @@ class Backend(Protocol):
 
     def links(self) -> dict[tuple[int, int], float]: ...
 
+    def health(self, node: int) -> float: ...
+
+    def quarantine(self, node: int) -> int: ...
+
     def now(self) -> float: ...
 
 
@@ -98,7 +109,9 @@ class SimBackend:
             raise ValueError(
                 f"spec {spec.name!r} needs a ServiceCurve for the simulator")
         self.cluster.register_function(spec.name, spec.curve,
-                                       slo_latency=spec.slo_latency)
+                                       slo_latency=spec.slo_latency,
+                                       slo_tier=spec.slo_tier,
+                                       deadline_s=spec.deadline_s)
 
     def place(self, spec: FunctionSpec,
               point: ProfilePoint) -> Optional[str]:
@@ -149,6 +162,12 @@ class SimBackend:
     def links(self) -> dict[tuple[int, int], float]:
         return self.cluster.links.pairs()
 
+    def health(self, node: int) -> float:
+        return self.cluster.health(node)
+
+    def quarantine(self, node: int) -> int:
+        return self.cluster.quarantine(node)
+
     def now(self) -> float:
         return self.cluster.sim.now
 
@@ -198,6 +217,14 @@ class LiveBackend:
         shared_frac = max(spec.kv_shared_frac, point.kv_shared_frac)
         if spec.batching != "paged" or not spec.prefix_sharing:
             shared_frac = 0.0
+        # Arm the frontend's deadline/shedding lifecycle here rather than
+        # at register: the shed admission check needs a per-instance
+        # service-rate estimate, and the profile point is the first place
+        # one exists.  With a best-effort tier and no deadline this stores
+        # (tier, None, rate) and the whole machinery stays dormant.
+        self.frontend.configure_slo(spec.name, tier=spec.slo_tier,
+                                    deadline_s=spec.deadline_budget(),
+                                    est_rps=point.throughput)
         return self.frontend.place_instance(
             spec.name, model, params, alloc,
             max_batch=spec.max_batch, max_len=spec.max_len,
@@ -243,6 +270,12 @@ class LiveBackend:
 
     def links(self) -> dict[tuple[int, int], float]:
         return self.frontend.links.pairs()
+
+    def health(self, node: int) -> float:
+        return self.frontend.health(node)
+
+    def quarantine(self, node: int) -> int:
+        return self.frontend.quarantine(node)
 
     def now(self) -> float:
         return self.frontend.now()

@@ -87,6 +87,16 @@ class MigrationEvent:
     fragmentation: float  # source-node fragmentation that triggered it
 
 
+@dataclasses.dataclass(frozen=True)
+class QuarantineEvent:
+    """One gray-failure quarantine applied by the reconciler."""
+
+    now: float
+    node: int
+    score: float      # backend.health(node) that tripped the threshold
+    instances: int    # instances taken out of rotation
+
+
 class ControlPlane:
     """Declarative reconciler over any :class:`Backend`.
 
@@ -94,15 +104,21 @@ class ControlPlane:
     long-lived control loop doesn't grow without bound.  ``defrag_threshold``
     arms the defragmentation pass: when any node's MRA fragmentation
     exceeds it, up to ``defrag_max_moves`` lowest-RPR pods migrate off the
-    worst node per tick (None disables the pass).
+    worst node per tick (None disables the pass).  ``quarantine_threshold``
+    arms the gray-failure sweep: a node whose ``backend.health`` drops
+    below it is quarantined — routing stops, occupants drain, and the
+    reconciler's ordinary prune + processing gap heal the capacity exactly
+    like a crash (None disables the sweep).
     """
 
     def __init__(self, backend: Backend, history: int = 10_000,
                  defrag_threshold: Optional[float] = None,
-                 defrag_max_moves: int = 1):
+                 defrag_max_moves: int = 1,
+                 quarantine_threshold: Optional[float] = None):
         self.backend = backend
         self.defrag_threshold = defrag_threshold
         self.defrag_max_moves = defrag_max_moves
+        self.quarantine_threshold = quarantine_threshold
         self.specs: dict[str, FunctionSpec] = {}
         self.queues: dict[str, FunctionPodQueue] = {}
         # fn -> pod_id -> profile point, for every live instance we placed.
@@ -110,6 +126,8 @@ class ControlPlane:
         self.log: deque[ScaleDecision] = deque(maxlen=history)
         self.events: deque[ReconcileEvent] = deque(maxlen=history)
         self.migrations: deque[MigrationEvent] = deque(maxlen=history)
+        self.quarantines: deque[QuarantineEvent] = deque(maxlen=history)
+        self._quarantined: set[int] = set()
 
     # -- registration ------------------------------------------------------
 
@@ -165,6 +183,10 @@ class ControlPlane:
         """
         if now is None:
             now = self.backend.now()
+        # Gray-failure sweep FIRST: a node quarantined here reads dead to
+        # ``alive`` below, so the same tick's prune + gap already heal it.
+        if self.quarantine_threshold is not None:
+            self._sweep_health(now)
         # Prune pods that died behind our back (node failure): L_j and
         # ``placed`` are authoritative only over pods the backend still
         # reports alive, so the gap below re-provisions lost capacity.
@@ -245,6 +267,36 @@ class ControlPlane:
         self.events.extend(pre.values())
         self.log.extend(applied)
         return applied
+
+    # -- gray-failure quarantine -------------------------------------------
+
+    def _sweep_health(self, now: float) -> list[QuarantineEvent]:
+        """Quarantine every schedulable node whose health score fell below
+        the threshold, always keeping at least one node in rotation.
+
+        Quarantine is a health action, not a scheduling decision: events
+        go to ``self.quarantines``, never the decision log, so a replay's
+        ``decision_signature`` is unaffected by WHICH backend detected the
+        degradation — only by the capacity gap it opened, which both
+        backends heal through the same Alg.-1 path.
+        """
+        swept: list[QuarantineEvent] = []
+        in_rotation = sorted(set(self.backend.node_load())
+                             - self._quarantined)
+        scores = {n: self.backend.health(n) for n in in_rotation}
+        # Worst node first, so the keep-one floor protects the healthiest.
+        for node in sorted(in_rotation, key=lambda n: scores[n]):
+            if scores[node] >= self.quarantine_threshold:
+                break
+            if len(in_rotation) - len(swept) <= 1:
+                break  # never quarantine the last schedulable node
+            n_inst = self.backend.quarantine(node)
+            self._quarantined.add(node)
+            event = QuarantineEvent(now=now, node=node,
+                                    score=scores[node], instances=n_inst)
+            self.quarantines.append(event)
+            swept.append(event)
+        return swept
 
     # -- defragmentation ---------------------------------------------------
 

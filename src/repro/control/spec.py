@@ -24,6 +24,7 @@ from typing import Any, Callable, Optional, Sequence
 import numpy as np
 
 from repro.core.scaling import ProfilePoint
+from repro.core.slo import SLO_TIERS, TIER_BEST_EFFORT, deadline_budget
 from repro.core.workload import ServiceCurve
 
 # A target-RPS source: virtual-or-wall time -> offered requests/second.
@@ -298,12 +299,23 @@ class FunctionSpec:
         effective degree at placement is ``max(spec.shards,
         point.shards)``.  Mutually exclusive with ``speculate`` — the
         draft/verify round is not tensor-parallel.
+      slo_tier: SLO tier of every request admitted under this spec —
+        ``"guaranteed"`` (never shed or expired; retried without bound),
+        ``"best_effort"`` (the default; sheddable once a deadline is
+        configured), or ``"batch"`` (the preemptible lane: same shedding
+        rules, but queued behind every non-batch request).
+      deadline_s: per-request deadline budget in seconds from arrival.
+        None (default) falls back to ``slo_latency`` for non-best-effort
+        tiers and to *no deadline at all* for best-effort — so a spec that
+        sets neither field runs the exact pre-SLO request lifecycle.
       curve: simulator backend only — the calibrated ``ServiceCurve``.
     """
 
     name: str
     profile: tuple[ProfilePoint, ...]
     slo_latency: Optional[float] = None
+    slo_tier: str = TIER_BEST_EFFORT
+    deadline_s: Optional[float] = None
     target_rps: Optional[RPSSource] = None
     rps_window: float = 2.0
     headroom: float = 1.2
@@ -364,6 +376,13 @@ class FunctionSpec:
             if getattr(self.speculate, "k", 0) < 1:
                 raise ValueError(
                     "speculate must be a SpecConfig-like object with k >= 1")
+        if self.slo_tier not in SLO_TIERS:
+            raise ValueError(
+                f"slo_tier must be one of {SLO_TIERS}, got "
+                f"{self.slo_tier!r}")
+        if self.deadline_s is not None and self.deadline_s <= 0.0:
+            raise ValueError(
+                f"deadline_s must be positive, got {self.deadline_s}")
         if self.shards < 1:
             raise ValueError(f"shards must be >= 1, got {self.shards}")
         if self.shards > 1 and self.speculate is not None:
@@ -382,3 +401,9 @@ class FunctionSpec:
     def best_point(self) -> ProfilePoint:
         """Most efficient SLO-feasible point: ``argmax_p RPR``."""
         return max(self.feasible_points(), key=lambda p: p.rpr)
+
+    def deadline_budget(self) -> Optional[float]:
+        """Seconds from arrival each request of this function has, or None
+        (no deadline — the dormant default for best-effort specs)."""
+        return deadline_budget(self.slo_tier, self.deadline_s,
+                               self.slo_latency)

@@ -43,7 +43,9 @@ from repro.core.model_sharing import MemoryModel
 from repro.core.resources import Alloc
 from repro.core.scaling import (FunctionPodQueue, ProfilePoint, ScaleDecision,
                                 heuristic_scale, processing_gap)
-from repro.core.slo import SLORecorder, observed_rate, record_arrival
+from repro.core.slo import (TIER_BATCH, TIER_BEST_EFFORT, TIER_GUARANTEED,
+                            RetryPolicy, SLORecorder, deadline_budget,
+                            observed_rate, record_arrival)
 from repro.core.workload import Request, ServiceCurve
 
 
@@ -144,6 +146,12 @@ class Node:
         self.sharing = sharing
         self.slowdown = slowdown
         self.alive = True
+        # Gray-failure state: a quarantined node stops receiving new routes
+        # and placements but keeps draining its occupants (unlike death).
+        self.quarantined = False
+        # EWMA of observed/nominal round-duration ratio (1.0 = nominal);
+        # ``Cluster.health`` inverts it into a 0..1 health score.
+        self.lat_ewma = 1.0
         self.pods: dict[str, PodRuntime] = {}
         # function -> instance count, for the shared-memory footprint model
         self._fn_instances: dict[str, int] = {}
@@ -214,6 +222,7 @@ class Cluster:
         continuous: bool = False,
         batch_alpha: Optional[float] = None,
         links: Optional[NetworkLinks] = None,
+        retry: Optional[RetryPolicy] = None,
     ):
         """``continuous=True`` enables slot-level batching: finished
         requests free their decode slot immediately and queued requests are
@@ -224,7 +233,10 @@ class Cluster:
         curve's own ``alpha`` — 0.5 unless roofline-calibrated via
         ``workload.calibrate_round_alpha``.  ``links`` is the inter-node
         bandwidth graph used by sharded (multi-rectangle) deploys; the
-        default is a uniform topology."""
+        default is a uniform topology.  ``retry`` (a
+        ``repro.core.slo.RetryPolicy``) turns failure re-routing into
+        bounded jittered-backoff retries from the policy's own seeded
+        PRNG; the default (None) keeps the legacy immediate re-route."""
         self.sim = Simulator()
         self.links = links if links is not None else NetworkLinks(n_nodes)
         self.window = window
@@ -249,6 +261,13 @@ class Cluster:
         self.dropped = 0
         self.rescheduled = 0
         self.migrated = 0
+        # SLO lifecycle (all zero unless deadlines/retries are configured):
+        self.retry = retry
+        self.shed = 0      # rejected at admission: could not make deadline
+        self.expired = 0   # deadline passed while queued
+        self.lost = 0      # retry budget exhausted after failures
+        self.fn_tiers: dict[str, str] = {}
+        self.fn_deadlines: dict[str, Optional[float]] = {}
         # Cold-start tier telemetry: one entry per delayed deploy —
         # {pod, fn, node, tier, delay}.
         self.cold_events: list[dict] = []
@@ -259,11 +278,18 @@ class Cluster:
     # -- deployment -------------------------------------------------------
 
     def register_function(self, fn: str, curve: ServiceCurve,
-                          slo_latency: Optional[float] = None) -> None:
+                          slo_latency: Optional[float] = None,
+                          slo_tier: str = TIER_BEST_EFFORT,
+                          deadline_s: Optional[float] = None) -> None:
         self.fn_curves[fn] = curve
         self.fn_queues.setdefault(fn, FunctionPodQueue())
         self.recorders[fn] = SLORecorder(fn=fn, slo_latency=slo_latency)
         self.fn_pods.setdefault(fn, [])
+        self.fn_tiers[fn] = slo_tier
+        # None (best-effort, no deadline) keeps the whole deadline/shedding
+        # machinery dormant for this function.
+        self.fn_deadlines[fn] = deadline_budget(slo_tier, deadline_s,
+                                                slo_latency)
 
     def memory_model(self, fn: str) -> MemoryModel:
         c = self.fn_curves[fn]
@@ -472,13 +498,23 @@ class Cluster:
     def _arrive(self, req: Request) -> None:
         record_arrival(self._arrival_log, self._rps_horizon, req.fn,
                        self.sim.now)
-        self._route(req)
+        # Stamp the function's deadline/tier onto the request at admission
+        # (inert when the function has no deadline budget — the default).
+        budget = self.fn_deadlines.get(req.fn)
+        tier = self.fn_tiers.get(req.fn, TIER_BEST_EFFORT)
+        if budget is not None and req.deadline is None:
+            req = dataclasses.replace(req, deadline=self.sim.now + budget,
+                                      tier=tier)
+        elif tier != req.tier:
+            req = dataclasses.replace(req, tier=tier)
+        self._route(req, admission=True)
 
-    def _route(self, req: Request) -> None:
+    def _route(self, req: Request, admission: bool = False) -> None:
         """Route without logging an arrival (re-injection after failures
         must not inflate the observed-RPS signal)."""
         pods = [p for p in self.fn_pods.get(req.fn, ())
-                if not self.pods[p].retired]
+                if not self.pods[p].retired
+                and not self.nodes[self.pods[p].placement.node].quarantined]
         if not pods:
             if req.fn in self.fn_curves:
                 # Registered but momentarily podless (a failure killed the
@@ -491,8 +527,31 @@ class Cluster:
         # (queue depth + occupied decode slots).
         pod = min((self.pods[p] for p in pods),
                   key=lambda p: len(p.queue) + len(p.slots))
-        pod.queue.append(req)
+        # Deadline shedding ("reject fast"): at admission only, estimate
+        # completion from queue depth x the profile point's service rate
+        # and shed a non-guaranteed request that cannot make its deadline.
+        if (admission and req.deadline is not None
+                and req.tier != TIER_GUARANTEED):
+            load = len(pod.queue) + len(pod.slots)
+            est = (load + 1) / max(pod.point.throughput, 1e-9)
+            if self.sim.now + est > req.deadline + 1e-12:
+                self.shed += 1
+                self.recorders[req.fn].record_shed()
+                return
+        self._enqueue_pod(pod, req)
         self._want_token(pod)
+
+    def _enqueue_pod(self, pod: PodRuntime, req: Request) -> None:
+        """Queue with the batch lane preempted: a non-batch request inserts
+        ahead of parked batch-tier work; uniform tiers reduce to a plain
+        FIFO append (the bit-identical legacy order)."""
+        if req.tier != TIER_BATCH:
+            idx = next((i for i, r in enumerate(pod.queue)
+                        if r.tier == TIER_BATCH), None)
+            if idx is not None:
+                pod.queue.insert(idx, req)
+                return
+        pod.queue.append(req)
 
     def _want_token(self, pod: PodRuntime) -> None:
         node = self.nodes[pod.placement.node]
@@ -532,6 +591,14 @@ class Cluster:
             had_live = bool(pod.slots)
             while pod.queue and len(pod.slots) < pod.max_batch:
                 r = pod.queue.popleft()
+                # Mid-queue expiry: a non-guaranteed request whose deadline
+                # already passed is dropped with a typed outcome instead of
+                # wasting a decode slot on a response nobody can use.
+                if (r.deadline is not None and r.tier != TIER_GUARANTEED
+                        and self.sim.now > r.deadline + 1e-12):
+                    self.expired += 1
+                    self.recorders[r.fn].record_expired()
+                    continue
                 if had_live and self.continuous:
                     pod.refills += 1
                 pod.slots.append(_DecodeSlot(r, max(1, r.n_tokens)))
@@ -579,7 +646,15 @@ class Cluster:
             pod.slots = []
         rec = self.recorders[pod.fn]
         for r in completed:
-            rec.record(self.sim.now - r.arrival, self.sim.now)
+            met = (None if r.deadline is None
+                   else self.sim.now <= r.deadline + 1e-12)
+            rec.record(self.sim.now - r.arrival, self.sim.now,
+                       deadline_met=met)
+        # Gray-failure signal: EWMA of the observed/nominal duration ratio
+        # (the straggler multiplier is exactly that ratio here).
+        nominal = dur / max(node.slowdown, 1e-9)
+        ratio = dur / max(nominal, 1e-12)
+        node.lat_ewma = 0.7 * node.lat_ewma + 0.3 * ratio
         node.scheduler.complete(pod.pod_id, dur, self.sim.now, occ=occ)
         if pod.retired and not pod.pending():
             self._teardown(pod)
@@ -707,13 +782,61 @@ class Cluster:
         # Re-inject stranded requests at the current time (no arrival log:
         # they were already counted when they first arrived).
         for r in strays:
-            self._route(dataclasses.replace(r, arrival=r.arrival))
+            self._reinject(r)
         return len(displaced)
 
+    def _reinject(self, req: Request) -> None:
+        """Re-route a stranded request — immediately (legacy, no policy) or
+        through the bounded jittered-backoff retry policy."""
+        if self.retry is None:
+            self._route(dataclasses.replace(req, arrival=req.arrival))
+            return
+        attempt = req.attempts + 1
+        if (req.tier != TIER_GUARANTEED
+                and self.retry.exhausted(req.attempts)):
+            # Best-effort/batch: retry budget spent — typed loss, not an
+            # eternal park.  Guaranteed requests retry without bound.
+            self.lost += 1
+            if req.fn in self.recorders:
+                self.recorders[req.fn].record_lost()
+            return
+        retry_req = dataclasses.replace(req, attempts=attempt)
+        self.sim.after(self.retry.delay(attempt),
+                       lambda: self._route(retry_req))
+
     def alive(self, pod_id: str) -> bool:
-        """Whether a pod still exists on a live node (dead pods are removed
-        from ``pods`` by ``fail_node``, drained ones by ``_teardown``)."""
-        return pod_id in self.pods
+        """Whether a pod still exists on a live, non-quarantined node (dead
+        pods are removed from ``pods`` by ``fail_node``, drained ones by
+        ``_teardown``; a quarantined node's pods read as not-alive so the
+        reconciler prunes and heals them exactly like a crash)."""
+        pod = self.pods.get(pod_id)
+        if pod is None:
+            return False
+        nodes = set(pod.member_nodes) or {pod.placement.node}
+        return not any(self.nodes[n].quarantined for n in nodes)
+
+    def health(self, node_id: int) -> float:
+        """Node health score in (0, 1]: 1.0 nominal, lower = slower.  The
+        inverse of the node's observed/nominal round-duration EWMA."""
+        node = self.nodes[node_id]
+        if not node.alive:
+            return 0.0
+        return 1.0 / max(node.lat_ewma, 1.0)
+
+    def quarantine(self, node_id: int) -> int:
+        """Gray-failure quarantine: stop routing and placement to the node,
+        let occupants drain.  One-way, like death — but the node keeps
+        serving what it already holds.  The reconciler heals the capacity
+        through the ordinary ``alive`` prune + processing gap.  Returns the
+        number of pods the quarantine took out of rotation."""
+        node = self.nodes[node_id]
+        if node.quarantined or not node.alive:
+            return 0
+        node.quarantined = True
+        self.pool.cordon(node_id)
+        return sum(1 for p in self.pods.values()
+                   if node_id in (set(p.member_nodes)
+                                  or {p.placement.node}))
 
     def node_of(self, pod_id: str) -> Optional[int]:
         pod = self.pods.get(pod_id)

@@ -1,4 +1,4 @@
-"""SLO accounting: per-function latency recorder and violation ratios."""
+"""SLO accounting: tiers, deadlines, retry policy, and goodput recording."""
 
 from __future__ import annotations
 
@@ -7,6 +7,80 @@ import dataclasses
 from typing import Optional
 
 import numpy as np
+
+# ---------------------------------------------------------------------------
+# SLO tiers and typed request outcomes
+# ---------------------------------------------------------------------------
+
+#: Never shed, never expired, retried without bound: losing one is a bug.
+TIER_GUARANTEED = "guaranteed"
+#: The default: sheddable under load, bounded retries.  Dormant unless a
+#: deadline is configured — with no deadline the tier behaves exactly like
+#: the pre-SLO plane.
+TIER_BEST_EFFORT = "best_effort"
+#: Preemptible batch lane: same shedding rules as best-effort, but queued
+#: BEHIND every non-batch request (guaranteed/best-effort admissions insert
+#: ahead of parked batch work).
+TIER_BATCH = "batch"
+
+SLO_TIERS = (TIER_GUARANTEED, TIER_BEST_EFFORT, TIER_BATCH)
+
+#: Typed request outcomes (the "reject fast" contract): a request that will
+#: not complete gets exactly one of these instead of parking forever.
+OUTCOME_SHED = "shed"          # rejected at admission: cannot make deadline
+OUTCOME_EXPIRED = "expired"    # deadline passed while queued
+OUTCOME_REJECTED = "rejected"  # function unregistered / no longer servable
+OUTCOME_FAILED = "failed"      # retry budget exhausted after failures
+
+
+def deadline_budget(tier: str, deadline_s: Optional[float],
+                    slo_latency: Optional[float]) -> Optional[float]:
+    """Per-request deadline budget (seconds from arrival), or None.
+
+    An explicit ``deadline_s`` always wins; a non-best-effort tier falls
+    back to the latency SLO; the default (best-effort, no deadline) yields
+    None — the whole deadline machinery stays dormant.
+    """
+    if deadline_s is not None:
+        return deadline_s
+    if tier != TIER_BEST_EFFORT:
+        return slo_latency
+    return None
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded jittered-backoff retry for stranded/timed-out requests.
+
+    All randomness comes from the policy's own seeded PRNG stream — no
+    wall-clock entropy ever enters a scheduling decision, so two fleets
+    constructed with the same seed retry at identical offsets.
+    """
+
+    max_attempts: int = 3
+    base_s: float = 0.05
+    multiplier: float = 2.0
+    jitter: float = 0.5      # fraction of the backoff added as U[0, jitter)
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        if self.max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        if self.base_s < 0 or self.multiplier < 1.0:
+            raise ValueError("base_s >= 0 and multiplier >= 1 required")
+        if not 0.0 <= self.jitter <= 1.0:
+            raise ValueError("jitter must be in [0, 1]")
+        object.__setattr__(self, "_rng",
+                           np.random.default_rng(self.seed))
+
+    def delay(self, attempt: int) -> float:
+        """Backoff before retry number ``attempt`` (1-based)."""
+        base = self.base_s * self.multiplier ** max(attempt - 1, 0)
+        rng = getattr(self, "_rng")
+        return base * (1.0 + self.jitter * float(rng.random()))
+
+    def exhausted(self, attempt: int) -> bool:
+        return attempt >= self.max_attempts
 
 
 def record_arrival(log: dict[str, list[float]], horizons: dict[str, float],
@@ -48,16 +122,51 @@ def observed_rate(log: dict[str, list[float]], horizons: dict[str, float],
 
 @dataclasses.dataclass
 class SLORecorder:
-    """Streaming latency recorder for one function."""
+    """Streaming latency recorder for one function.
+
+    Beyond latency percentiles it tracks the *goodput* view: a completion
+    is counted deadline-met or deadline-missed, and the non-completions
+    (shed at admission, expired in queue, lost to retry exhaustion) are
+    tallied so ``goodput()`` is honest about every request the gateway
+    accepted responsibility for.
+    """
 
     fn: str
     slo_latency: Optional[float] = None  # seconds; None = best-effort
     latencies: list[float] = dataclasses.field(default_factory=list)
     completion_times: list[float] = dataclasses.field(default_factory=list)
+    deadline_met: int = 0
+    deadline_missed: int = 0
+    shed: int = 0
+    expired: int = 0
+    lost: int = 0
 
-    def record(self, latency: float, completed_at: float) -> None:
+    def record(self, latency: float, completed_at: float,
+               deadline_met: Optional[bool] = None) -> None:
         self.latencies.append(latency)
         self.completion_times.append(completed_at)
+        # A request with no deadline (the dormant default) counts as met.
+        if deadline_met is None or deadline_met:
+            self.deadline_met += 1
+        else:
+            self.deadline_missed += 1
+
+    def record_shed(self) -> None:
+        self.shed += 1
+
+    def record_expired(self) -> None:
+        self.expired += 1
+
+    def record_lost(self) -> None:
+        self.lost += 1
+
+    def goodput(self) -> float:
+        """Fraction of accepted-or-offered requests that completed in time."""
+        total = (self.deadline_met + self.deadline_missed
+                 + self.shed + self.expired + self.lost)
+        if total == 0:
+            return 1.0
+        return self.deadline_met / total
 
     def count(self) -> int:
         return len(self.latencies)

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Iterator
+from typing import Iterator, Optional
 
 import numpy as np
 
@@ -166,6 +166,13 @@ class Request:
     # request hold a decode slot for n_tokens token-gated rounds, which is
     # what continuous batching exploits.
     n_tokens: int = 1
+    # SLO lifecycle (all inert by default): absolute deadline stamped at
+    # admission from the function's tier/deadline budget (None = no
+    # deadline, never shed or expired), the tier it was admitted under,
+    # and how many times it has been re-routed after a failure.
+    deadline: Optional[float] = None
+    tier: str = "best_effort"
+    attempts: int = 0
 
 
 def poisson_arrivals(fn: str, rps: float, duration: float, *,

@@ -134,6 +134,15 @@ class ServeRequest:
     tokens_out: list = dataclasses.field(default_factory=list)
     done: bool = False
     finished_at: float = 0.0
+    # SLO lifecycle (inert by default): absolute deadline on the engine
+    # clock (None = no deadline), the tier it was admitted under, a typed
+    # outcome when the request terminates without completing
+    # (shed/expired/rejected/failed — see repro.core.slo), and how many
+    # times it has been re-routed after a failure.
+    deadline: Optional[float] = None
+    tier: str = "best_effort"
+    outcome: Optional[str] = None
+    attempts: int = 0
 
 
 class FunctionInstance:
@@ -1119,7 +1128,7 @@ class FunctionInstance:
 class ServingEngine:
     """One node: token scheduler + N weight-shared instances."""
 
-    def __init__(self, window: float = 0.2):
+    def __init__(self, window: float = 0.2, idle_sleep_s: float = 0.001):
         self.scheduler = TokenScheduler(window=window)
         self.store = ModelStore()
         self.instances: dict[str, FunctionInstance] = {}
@@ -1128,6 +1137,24 @@ class ServingEngine:
         self._req_ids = itertools.count()
         self._inst_seq = itertools.count()
         self._t0 = time.perf_counter()
+        # Quota-blocked idle lull: how long pump yields when a pass grants
+        # nothing and the previous pass did no work.  0 disables the sleep
+        # entirely (soak/chaos benchmarks run hot).
+        self.idle_sleep_s = idle_sleep_s
+        # Fault-injection hook: an artificial per-pass stall (seconds)
+        # inside the timed dispatch region — the chaos harness's straggler
+        # lever.  0 (default) is a no-op.
+        self.pump_delay_s = 0.0
+        # Gray-failure quarantine: routing and placement stop, occupants
+        # keep draining through pump.  One-way, set by the frontend.
+        self.quarantined = False
+        # Pass-latency EWMAs for the health score: the fast one tracks the
+        # current regime, the slow one the long-run baseline; their ratio
+        # is the gray-failure signal (1.0 healthy, -> 0 degraded).
+        self._lat_fast = 0.0
+        self._lat_slow = 0.0
+        # Per-instance expired-in-queue counts (telemetry).
+        self._expired: dict[str, int] = {}
         # Scale-down hook: called with the instance id once a retired
         # instance has fully drained and released its resources (the
         # frontend uses it to release the MRA rectangle).
@@ -1254,11 +1281,13 @@ class ServingEngine:
         self.store = ModelStore()    # node memory (weights, KV) is gone
         return strays
 
-    def submit(self, fn: str, prompt: np.ndarray, max_new_tokens: int = 8
-               ) -> ServeRequest:
+    def submit(self, fn: str, prompt: np.ndarray, max_new_tokens: int = 8,
+               deadline: Optional[float] = None, tier: str = "best_effort",
+               attempts: int = 0) -> ServeRequest:
         req = ServeRequest(req_id=next(self._req_ids), prompt=prompt,
                            max_new_tokens=max_new_tokens,
-                           submitted_at=self.now())
+                           submitted_at=self.now(), deadline=deadline,
+                           tier=tier, attempts=attempts)
         # Join-shortest-queue across the function's live instances (retired
         # ones are draining, paused ones are mid-migration: no new work).
         candidates = [v for k, v in self.instances.items()
@@ -1287,8 +1316,21 @@ class ServingEngine:
                 f"request needs {blocks_needed(rows, inst.block_size)} KV "
                 f"blocks > pool capacity {inst.allocator.capacity} of "
                 f"{inst.inst_id}; raise n_kv_blocks or shorten the request")
-        inst.queue.append(req)
+        self.enqueue(inst, req)
         return req
+
+    @staticmethod
+    def enqueue(inst: FunctionInstance, req: ServeRequest) -> None:
+        """Queue with the batch lane preempted: a non-batch request inserts
+        ahead of parked batch-tier work; uniform tiers reduce to a plain
+        FIFO append (the bit-identical legacy order)."""
+        if req.tier != "batch":
+            idx = next((i for i, r in enumerate(inst.queue)
+                        if r.tier == "batch"), None)
+            if idx is not None:
+                inst.queue.insert(idx, req)
+                return
+        inst.queue.append(req)
 
     def has_work(self) -> bool:
         return any(i.has_work() for i in self.instances.values())
@@ -1311,6 +1353,7 @@ class ServingEngine:
         deadline = time.perf_counter() + budget_s
         worked_last_pass = False
         while time.perf_counter() < deadline:
+            self._expire_queued()
             any_work = False
             for inst_id, inst in list(self.instances.items()):
                 if inst.has_work() and not inst.paused:
@@ -1324,12 +1367,18 @@ class ServingEngine:
                 # work we are saturated and the next scheduling window is
                 # imminent — spin instead of yielding mid-burst.  Only a
                 # genuinely idle lull sleeps.
-                if not worked_last_pass:
-                    time.sleep(0.001)
+                if not worked_last_pass and self.idle_sleep_s > 0:
+                    time.sleep(self.idle_sleep_s)
                 worked_last_pass = False
                 continue
             worked_last_pass = True
             t_prev = time.perf_counter()
+            if self.pump_delay_s > 0:
+                # Injected straggler stall: lands inside the timed region,
+                # so it inflates the pass latency the health EWMAs see and
+                # the Q_used the scheduler charges — a slow node looks
+                # slow everywhere, exactly like the real gray failure.
+                time.sleep(self.pump_delay_s)
             if overlap:
                 # Only fused instances join the early dispatch pass: their
                 # dispatch_step is a cheap async enqueue.  Host-synchronous
@@ -1356,6 +1405,7 @@ class ServingEngine:
                 t_now = time.perf_counter()
                 elapsed = t_now - t_prev
                 t_prev = t_now
+                self._observe_pass(elapsed)
                 # Drained occupancy scales with slot fill: an underfilled
                 # decode round cannot saturate the instance's SM share.
                 occ = token.occ * min(inst.last_fill / inst.max_batch, 1.0)
@@ -1364,12 +1414,61 @@ class ServingEngine:
                 fn = token.pod_id.split("/")[0]
                 for r in finished:
                     r.finished_at = self.now()
+                    met = (None if r.deadline is None
+                           else r.finished_at <= r.deadline)
                     self.recorders[fn].record(r.finished_at - r.submitted_at,
-                                              r.finished_at)
+                                              r.finished_at,
+                                              deadline_met=met)
                     completed += 1
                 if inst.retired and not inst.has_work():
                     self._close(token.pod_id)  # drained: release resources
         return completed
+
+    def _expire_queued(self) -> None:
+        """Drop queued non-guaranteed requests whose deadline has passed
+        (typed outcome ``"expired"``) before spending a decode slot on
+        them.  A no-op while every queued request is deadline-free."""
+        now = self.now()
+        for inst_id, inst in self.instances.items():
+            if not inst.queue:
+                continue
+            kept, dropped = [], []
+            for r in inst.queue:
+                if (r.deadline is not None and r.tier != "guaranteed"
+                        and now > r.deadline):
+                    dropped.append(r)
+                else:
+                    kept.append(r)
+            if not dropped:
+                continue
+            fn = inst_id.split("/")[0]
+            for r in dropped:
+                r.done = True
+                r.outcome = "expired"
+                r.finished_at = now
+                self._expired[inst_id] = self._expired.get(inst_id, 0) + 1
+                if fn in self.recorders:
+                    self.recorders[fn].record_expired()
+            inst.queue.clear()
+            inst.queue.extend(kept)
+
+    def _observe_pass(self, elapsed: float) -> None:
+        """Feed one pump-pass latency into the fast/slow EWMAs."""
+        if self._lat_slow == 0.0:
+            self._lat_fast = self._lat_slow = elapsed
+            return
+        self._lat_fast = 0.6 * self._lat_fast + 0.4 * elapsed
+        self._lat_slow = 0.98 * self._lat_slow + 0.02 * elapsed
+
+    def health(self) -> float:
+        """Node health score in (0, 1]: the slow/fast pass-latency EWMA
+        ratio.  1.0 while pass latency tracks its long-run baseline; a node
+        whose recent passes run Nx slower scores ~1/N.  A dead node is 0."""
+        if not self.alive:
+            return 0.0
+        if self._lat_fast <= self._lat_slow or self._lat_fast == 0.0:
+            return 1.0
+        return self._lat_slow / self._lat_fast
 
     def memory_bytes(self) -> int:
         return self.store.used_bytes()
@@ -1399,9 +1498,11 @@ class ServingEngine:
         """Hot-path counters per instance: steps, host syncs, (paged)
         device-state uploads — ``uploads << steps`` proves the block
         tables/positions stay device-resident between admission events —
-        plus prefix-sharing hits and COW resolutions."""
+        plus prefix-sharing hits and COW resolutions and the count of
+        queued requests expired past their deadline."""
         return {k: {"steps": v.steps, "syncs": v.sync_count,
                     "uploads": v.uploads, "shared_hits": v.shared_block_hits,
                     "cow": v.cow_count, "spec_proposed": v.spec_proposed,
-                    "spec_accepted": v.spec_accepted}
+                    "spec_accepted": v.spec_accepted,
+                    "expired": self._expired.get(k, 0)}
                 for k, v in self.instances.items()}

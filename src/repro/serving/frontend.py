@@ -45,7 +45,8 @@ from repro.distributed.sharding import serve_pspec, tp_mesh
 from repro.core.model_sharing import (MemoryModel, node_shared_footprint,
                                       pytree_nbytes)
 from repro.core.resources import Alloc
-from repro.core.slo import observed_rate, record_arrival
+from repro.core.slo import (TIER_BEST_EFFORT, TIER_GUARANTEED, RetryPolicy,
+                            observed_rate, record_arrival)
 from repro.models.model import Model
 from repro.serving.engine import ServeRequest, ServingEngine
 from repro.serving.modelstore import ColdStartEvent, FleetModelStore
@@ -87,7 +88,9 @@ class ClusterFrontend:
                  mem_bytes: int = 16 * 1024**3, window: float = 0.2,
                  model_store: Optional[FleetModelStore] = None,
                  cold_start: str = "overlap",
-                 links: Optional[NetworkLinks] = None):
+                 links: Optional[NetworkLinks] = None,
+                 idle_sleep_s: float = 0.001,
+                 retry: Optional[RetryPolicy] = None):
         if n_nodes <= 0:
             raise ValueError("need at least one node")
         if cold_start not in ("overlap", "blocking"):
@@ -110,7 +113,9 @@ class ClusterFrontend:
         # (event, node, inst_id): TTFT resolved lazily from the instance's
         # first landed token by cold_start_events().
         self._cold_instances: list[tuple[ColdStartEvent, int, str]] = []
-        self.engines = [ServingEngine(window=window) for _ in range(n_nodes)]
+        self.engines = [ServingEngine(window=window,
+                                      idle_sleep_s=idle_sleep_s)
+                        for _ in range(n_nodes)]
         for i, eng in enumerate(self.engines):
             eng.on_instance_closed = functools.partial(
                 self._instance_closed, i)
@@ -136,9 +141,31 @@ class ClusterFrontend:
         self._draft_models: dict[str, Any] = {}
         self._req_seq = itertools.count()
         self._t0 = time.perf_counter()
+        # SLO lifecycle (all dormant until ``configure_slo`` sets a
+        # deadline): fn -> (tier, deadline budget seconds or None,
+        # per-instance requests/s estimate for the shed admission check).
+        self._fn_slo: dict[str, tuple[str, Optional[float], float]] = {}
+        self.retry = retry
+        # (not_before, fn, req): stranded requests waiting out their
+        # jittered backoff; flushed by pump.
+        self._retry_buf: list[tuple[float, str, ServeRequest]] = []
+        self.shed = 0      # rejected at admission: could not make deadline
+        self.lost = 0      # retry budget exhausted after failures
+        self.rejected = 0  # parked requests whose function was unregistered
 
     def now(self) -> float:
         return time.perf_counter() - self._t0
+
+    def configure_slo(self, fn: str, tier: str = TIER_BEST_EFFORT,
+                      deadline_s: Optional[float] = None,
+                      est_rps: float = 0.0) -> None:
+        """Arm the deadline/shedding lifecycle for ``fn``.
+
+        ``deadline_s`` is the per-request budget from submission (None
+        keeps the machinery dormant); ``est_rps`` is the per-instance
+        service-rate estimate (the profile point's throughput) behind the
+        queue-depth completion estimate that drives shedding."""
+        self._fn_slo[fn] = (tier, deadline_s, est_rps)
 
     # -- memory admission (same closed form as core.cluster.Node) ---------
 
@@ -571,7 +598,7 @@ class ClusterFrontend:
         out = []
         for node in self.nodes_for(fn):
             eng = self.engines[node]
-            if eng.alive and any(
+            if eng.alive and not eng.quarantined and any(
                     k.startswith(fn + "/") and not inst.retired
                     and not inst.paused
                     for k, inst in eng.instances.items()):
@@ -592,10 +619,13 @@ class ClusterFrontend:
         cands = [v for k, v in eng.instances.items()
                  if k.startswith(fn + "/") and not v.retired
                  and not v.paused]
-        min(cands, key=lambda i: i.load()).queue.append(req)
+        ServingEngine.enqueue(min(cands, key=lambda i: i.load()), req)
 
     def submit(self, fn: str, prompt: np.ndarray, max_new_tokens: int = 8
                ) -> ServeRequest:
+        tier, budget, est_rps = self._fn_slo.get(
+            fn, (TIER_BEST_EFFORT, None, 0.0))
+        deadline = None if budget is None else self.now() + budget
         if not self._live_nodes(fn):
             # Podless window (a failure killed the last replica, or the
             # fleet scaled to zero): park the request — mirroring the
@@ -620,14 +650,35 @@ class ClusterFrontend:
                            self.now())
             req = ServeRequest(req_id=next(self._req_seq), prompt=prompt,
                                max_new_tokens=max_new_tokens,
-                               submitted_at=self.now())
+                               submitted_at=self.now(), deadline=deadline,
+                               tier=tier)
             self._pending.setdefault(fn, []).append(req)
             return req
         node = self._pick_node(fn)
         record_arrival(self._arrival_log, self._rps_horizon, fn, self.now())
+        # Deadline shedding ("reject fast"): estimate completion from the
+        # chosen node's queue depth x the configured per-instance service
+        # rate and reject a non-guaranteed request that cannot make its
+        # deadline with a typed outcome instead of queuing it to die.
+        if (deadline is not None and tier != TIER_GUARANTEED
+                and est_rps > 0.0):
+            est = (self._fn_load(node, fn) + 1) / est_rps
+            if self.now() + est > deadline:
+                self.shed += 1
+                eng = self.engines[node]
+                if fn in eng.recorders:
+                    eng.recorders[fn].record_shed()
+                return ServeRequest(req_id=next(self._req_seq),
+                                    prompt=prompt,
+                                    max_new_tokens=max_new_tokens,
+                                    submitted_at=self.now(),
+                                    deadline=deadline, tier=tier,
+                                    done=True, outcome="shed",
+                                    finished_at=self.now())
         # Second JSQ level across the chosen node's instances happens in
         # ServingEngine.submit.
-        return self.engines[node].submit(fn, prompt, max_new_tokens)
+        return self.engines[node].submit(fn, prompt, max_new_tokens,
+                                         deadline=deadline, tier=tier)
 
     def has_work(self) -> bool:
         return any(e.has_work() for e in self.engines)
@@ -636,11 +687,42 @@ class ClusterFrontend:
         """Interleave the per-node schedulers until idle or out of budget."""
         completed = 0
         deadline = time.perf_counter() + budget_s
-        while time.perf_counter() < deadline and self.has_work():
+        self._flush_retries()
+        while ((time.perf_counter() < deadline)
+               and (self.has_work() or self._retry_buf)):
             for eng in self.engines:
                 if eng.has_work():
                     completed += eng.pump(budget_s=slice_s)
+            self._flush_retries()
+            if not self.has_work() and self._retry_buf:
+                # Only backoff timers outstanding: wait one out instead of
+                # spinning the whole budget.
+                wake = min(t for t, _, _ in self._retry_buf)
+                wait = min(wake - self.now(), deadline - time.perf_counter())
+                if wait > 0:
+                    time.sleep(wait)
+                self._flush_retries()
         return completed
+
+    def _flush_retries(self) -> None:
+        """Re-route stranded requests whose jittered backoff has elapsed."""
+        if not self._retry_buf:
+            return
+        now = self.now()
+        due = [e for e in self._retry_buf if e[0] <= now]
+        if not due:
+            return
+        self._retry_buf = [e for e in self._retry_buf if e[0] > now]
+        for _, fn, req in due:
+            if self._live_nodes(fn):
+                self._enqueue(fn, req)
+            elif fn in self._fn_limits:
+                self._pending.setdefault(fn, []).append(req)
+            else:
+                req.done = True
+                req.outcome = "rejected"
+                req.finished_at = now
+                self.rejected += 1
 
     # -- scale-down --------------------------------------------------------
 
@@ -670,14 +752,68 @@ class ClusterFrontend:
     # -- lifecycle: failure + live KV migration ----------------------------
 
     def alive(self, handle: str) -> bool:
-        """Whether the instance behind ``node:inst_id`` is still running
-        (failed nodes lose all their instances instantly)."""
+        """Whether the instance behind ``node:inst_id`` is still running on
+        a non-quarantined node (failed nodes lose all their instances
+        instantly; a quarantined node's instances read as not-alive so the
+        reconciler prunes and heals them exactly like a crash)."""
         node_s, inst_id = handle.split(":", 1)
         node = int(node_s)
         if not 0 <= node < len(self.engines):
             return False
         eng = self.engines[node]
-        return eng.alive and inst_id in eng.instances
+        if not eng.alive or eng.quarantined or inst_id not in eng.instances:
+            return False
+        # A sharded pod reads dead when ANY member node is quarantined.
+        for p in self.placements:
+            if p.node == node and p.inst_id == inst_id:
+                return not any(self.engines[m].quarantined
+                               for m in p.all_nodes())
+        return True
+
+    def health(self, node: int) -> float:
+        """Node health score in (0, 1]: the engine's slow/fast pass-latency
+        EWMA ratio (1.0 nominal; a node running Nx slower scores ~1/N)."""
+        if not 0 <= node < len(self.engines):
+            return 0.0
+        return self.engines[node].health()
+
+    def quarantine(self, node: int) -> int:
+        """Gray-failure quarantine: stop routing and placement to the node,
+        let occupants drain through pump.  One-way, like death — but the
+        engine keeps serving what it already holds, and the reconciler
+        heals the capacity through the ordinary ``alive`` prune +
+        processing gap.  Returns the number of instances taken out of
+        rotation."""
+        eng = self.engines[node]
+        if eng.quarantined or not eng.alive:
+            return 0
+        eng.quarantined = True
+        self.pool.cordon(node)
+        return sum(1 for p in self.placements if node in p.all_nodes())
+
+    def unregister(self, fn: str) -> list[ServeRequest]:
+        """Delete a function: evict its live instances and reject every
+        parked request with the typed outcome ``"rejected"`` — a parked
+        request must never outlive its function's registration.  Returns
+        the rejected requests; subsequent submits raise ``KeyError``."""
+        for p in [p for p in self.placements if p.fn == fn]:
+            handle = f"{p.node}:{p.inst_id}"
+            if self.alive(handle):
+                self.evict(handle)
+        rejected = self._pending.pop(fn, [])
+        self._retry_buf, orphans = (
+            [e for e in self._retry_buf if e[1] != fn],
+            [e[2] for e in self._retry_buf if e[1] == fn])
+        rejected.extend(orphans)
+        now = self.now()
+        for req in rejected:
+            req.done = True
+            req.outcome = "rejected"
+            req.finished_at = now
+        self.rejected += len(rejected)
+        self._fn_limits.pop(fn, None)
+        self._fn_slo.pop(fn, None)
+        return rejected
 
     def node_of(self, handle: str) -> Optional[int]:
         node = int(handle.split(":", 1)[0])
@@ -728,11 +864,34 @@ class ClusterFrontend:
                 # MemoryModel so the healing redeploy may re-create it.
                 self._fn_mm.pop(fn, None)
         for fn, req in strays:
+            self._reinject(fn, req)
+        return len(lost)
+
+    def _reinject(self, fn: str, req: ServeRequest) -> None:
+        """Re-route one stranded request — immediately (legacy, no retry
+        policy) or through the bounded jittered-backoff retry buffer."""
+        if self.retry is None:
             if self._live_nodes(fn):
                 self._enqueue(fn, req)
             else:
                 self._pending.setdefault(fn, []).append(req)
-        return len(lost)
+            return
+        if (req.tier != TIER_GUARANTEED
+                and self.retry.exhausted(req.attempts)):
+            # Best-effort/batch: retry budget spent — typed loss, not an
+            # eternal park.  Guaranteed requests retry without bound.
+            req.done = True
+            req.outcome = "failed"
+            req.finished_at = self.now()
+            self.lost += 1
+            for eng in self.engines:
+                if eng.alive and fn in eng.recorders:
+                    eng.recorders[fn].record_lost()
+                    break
+            return
+        req.attempts += 1
+        self._retry_buf.append(
+            (self.now() + self.retry.delay(req.attempts), fn, req))
 
     def _kill_remote_member(self, p: InstancePlacement
                             ) -> list[tuple[str, ServeRequest]]:

@@ -1,0 +1,547 @@
+"""Deadline lifecycle, gray-failure quarantine, and the chaos harness.
+
+Covers the robustness seam end to end: seeded fault-schedule generation
+and replay (``repro.core.chaos``), sim-vs-live ``decision_signature``
+equality under identical chaos, the reconciler's health sweep (quarantine
++ heal on both backends), deadline shedding/expiry with typed outcomes,
+bounded jittered-backoff retries (deterministic, guaranteed tier never
+lost), the preemptible batch lane, and the unregister-rejects-parked
+contract.
+"""
+
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.control import (ControlPlane, FunctionSpec, LiveBackend,
+                           SimBackend, decision_signature, ramp)
+from repro.core.chaos import (ChaosInjector, ChaosSchedule, FaultEvent,
+                              LiveChaosTarget, SimChaosTarget)
+from repro.core.cluster import Cluster
+from repro.core.links import DEFAULT_LINK_BPS
+from repro.core.scaling import ProfilePoint
+from repro.core.slo import (RetryPolicy, TIER_BATCH, TIER_BEST_EFFORT,
+                            TIER_GUARANTEED, deadline_budget)
+from repro.core.workload import Request, ServiceCurve, poisson_arrivals
+from repro.serving import ClusterFrontend
+from repro.serving.engine import ServeRequest, ServingEngine
+
+PROFILE = (
+    ProfilePoint(sm=0.25, quota=0.4, throughput=2.0, p99_latency=0.05),
+    ProfilePoint(sm=0.45, quota=0.8, throughput=5.0, p99_latency=0.03),
+)
+
+RAMP = ramp([(0.0, 1.0), (2.0, 8.0), (6.0, 1.0)])
+
+
+def tiny_curve() -> ServiceCurve:
+    return ServiceCurve(name="chat", r_max=5.0, sm_sat=0.45, p=1.0,
+                        weight_bytes=1 << 20, framework_bytes=32 << 20)
+
+
+def make_spec(factory=None, **overrides) -> FunctionSpec:
+    kw = dict(name="chat", profile=PROFILE, slo_latency=0.1, target_rps=RAMP,
+              headroom=1.2, min_instances=1, max_instances=5,
+              model_factory=factory, max_batch=2, max_len=32,
+              framework_bytes=32 * 1024 * 1024, curve=tiny_curve())
+    kw.update(overrides)
+    return FunctionSpec(**kw)
+
+
+# -------------------------------------------------------------------------
+# Fault schedules: validation + seeded determinism
+# -------------------------------------------------------------------------
+
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent(at=0.0, kind="meteor", node=0)
+    with pytest.raises(ValueError, match=">= 0"):
+        FaultEvent(at=-1.0, kind="kill", node=0)
+    with pytest.raises(ValueError, match="magnitude"):
+        FaultEvent(at=0.0, kind="straggler", node=0, magnitude=1.0)
+    with pytest.raises(ValueError, match="duration"):
+        FaultEvent(at=0.0, kind="link", node=0, duration=0.0)
+    # kill ignores magnitude (it has none to speak of).
+    FaultEvent(at=0.0, kind="kill", node=0, magnitude=0.5)
+
+
+def test_schedule_generation_is_seed_deterministic():
+    a = ChaosSchedule.generate(seed=11, duration=30.0, n_nodes=4)
+    b = ChaosSchedule.generate(seed=11, duration=30.0, n_nodes=4)
+    c = ChaosSchedule.generate(seed=12, duration=30.0, n_nodes=4)
+    assert a.events == b.events  # byte-identical replay
+    assert a.events != c.events
+    assert list(a.events) == sorted(a.events, key=lambda e: e.at)
+    assert all(0 <= e.node < 4 for e in a.events)
+    assert all(0.0 <= e.at <= 30.0 for e in a.events)
+
+
+def test_schedule_kill_budget_keeps_a_survivor():
+    sched = ChaosSchedule.generate(seed=3, duration=10.0, n_nodes=3,
+                                   n_events=8, kinds=("kill",))
+    kills = [e for e in sched.events if e.kind == "kill"]
+    assert len(kills) <= 2  # n_nodes - 1: at least one node survives
+    assert len({e.node for e in kills}) == len(kills)  # no double-kill
+    # The overflow degraded to stragglers instead of vanishing.
+    assert len(sched.events) == 8
+    assert all(e.kind == "straggler" for e in sched.events
+               if e.kind != "kill")
+    with pytest.raises(ValueError):
+        ChaosSchedule.generate(seed=0, duration=1.0, n_nodes=0)
+
+
+def test_sim_injector_applies_and_restores():
+    cluster = Cluster(n_nodes=2, sharing=True)
+    base_mem = cluster.nodes[0].mem_bytes
+    sched = ChaosSchedule(seed=0, events=(
+        FaultEvent(at=1.0, kind="straggler", node=0, magnitude=4.0,
+                   duration=2.0),
+        FaultEvent(at=1.0, kind="link", node=1, magnitude=2.0, duration=2.0),
+        FaultEvent(at=1.0, kind="kv_pressure", node=0, magnitude=2.0,
+                   duration=2.0),
+        FaultEvent(at=5.0, kind="kill", node=1),
+    ))
+    inj = ChaosInjector(sched, SimChaosTarget(cluster))
+    assert inj.advance(0.5) == 0 and inj.pending() == 4
+    assert inj.advance(1.0) == 3
+    assert cluster.nodes[0].slowdown == pytest.approx(4.0)
+    assert cluster.nodes[0].mem_bytes == base_mem // 2
+    assert cluster.links.bandwidth(0, 1) == pytest.approx(
+        DEFAULT_LINK_BPS / 2)
+    # All three bounded faults restore at t=3 — exactly what they changed.
+    assert inj.advance(3.0) == 3
+    assert cluster.nodes[0].slowdown == pytest.approx(1.0)
+    assert cluster.nodes[0].mem_bytes == base_mem
+    assert cluster.links.bandwidth(0, 1) == pytest.approx(DEFAULT_LINK_BPS)
+    # The kill is permanent: applied once, nothing left to restore.
+    assert inj.advance(10.0) == 1
+    assert not cluster.nodes[1].alive and inj.pending() == 0
+    assert [e.kind for _, e in inj.applied] == \
+        ["straggler", "link", "kv_pressure", "kill"]
+
+
+def test_live_target_straggler_and_kv_pressure():
+    frontend = ClusterFrontend(n_nodes=2, window=0.05)
+    target = LiveChaosTarget(frontend, straggler_unit_s=0.01)
+    base_mem = frontend.mem_bytes
+    undo = target.straggler(0, magnitude=3.0)
+    assert frontend.engines[0].pump_delay_s == pytest.approx(0.02)
+    undo()
+    assert frontend.engines[0].pump_delay_s == 0.0
+    undo = target.kv_pressure(0, magnitude=2.0)
+    assert frontend.mem_bytes == base_mem // 2
+    undo()
+    assert frontend.mem_bytes == base_mem
+
+
+# -------------------------------------------------------------------------
+# Sim-vs-live decision parity under identical chaos
+# -------------------------------------------------------------------------
+
+
+def _parity_schedule() -> ChaosSchedule:
+    # Node 0 is where MRA best-area-fit packs first, so the straggler and
+    # the kill both hit loaded capacity on either backend.
+    return ChaosSchedule(seed=0, events=(
+        FaultEvent(at=1.0, kind="straggler", node=0, magnitude=3.0,
+                   duration=4.0),
+        FaultEvent(at=3.0, kind="kill", node=0),
+        FaultEvent(at=4.0, kind="link", node=1, magnitude=2.0,
+                   duration=2.0),
+    ))
+
+
+def test_sim_vs_live_signature_under_seeded_chaos(tiny_model, tiny_params):
+    """One seeded fault schedule, two fleets, identical decisions."""
+
+    def run(plane, injector):
+        for tick in range(9):
+            injector.advance(float(tick))
+            plane.reconcile(now=float(tick))
+
+    frontend = ClusterFrontend(n_nodes=2, window=0.05)
+    live = ControlPlane(LiveBackend(frontend))
+    live.register(make_spec(lambda: (tiny_model, tiny_params)))
+    inj_live = ChaosInjector(_parity_schedule(), LiveChaosTarget(frontend))
+    run(live, inj_live)
+
+    cluster = Cluster(n_nodes=2, sharing=True)
+    sim = ControlPlane(SimBackend(cluster))
+    sim.register(make_spec())
+    inj_sim = ChaosInjector(_parity_schedule(), SimChaosTarget(cluster))
+    run(sim, inj_sim)
+
+    assert decision_signature(live.log) == decision_signature(sim.log)
+    # Both fleets saw the exact same fault history...
+    assert [e for _, e in inj_live.applied] == [e for _, e in inj_sim.applied]
+    # ...and both healed the kill: every surviving pod is off node 0.
+    assert all(live.backend.node_of(p) == 1 for p in live.placed["chat"])
+    assert all(sim.backend.node_of(p) == 1 for p in sim.placed["chat"])
+    assert live.instances("chat") == sim.instances("chat")
+
+
+def test_sim_vs_live_signature_under_explicit_quarantine(tiny_model,
+                                                         tiny_params):
+    """Quarantining the same node at the same tick heals through the same
+    Alg.-1 path on both backends: the quarantine itself never enters the
+    decision log, only the capacity gap it opens does."""
+
+    def run(plane, backend):
+        for tick in range(9):
+            if tick == 3:
+                assert backend.quarantine(0) >= 1
+            plane.reconcile(now=float(tick))
+
+    frontend = ClusterFrontend(n_nodes=2, window=0.05)
+    lb = LiveBackend(frontend)
+    live = ControlPlane(lb)
+    live.register(make_spec(lambda: (tiny_model, tiny_params)))
+    run(live, lb)
+
+    cluster = Cluster(n_nodes=2, sharing=True)
+    sb = SimBackend(cluster)
+    sim = ControlPlane(sb)
+    sim.register(make_spec())
+    run(sim, sb)
+
+    assert decision_signature(live.log) == decision_signature(sim.log)
+    assert all(lb.node_of(p) == 1 for p in live.placed["chat"])
+    assert all(sb.node_of(p) == 1 for p in sim.placed["chat"])
+    # Idempotent: a second quarantine of the same node is a no-op.
+    assert lb.quarantine(0) == 0 and sb.quarantine(0) == 0
+
+
+# -------------------------------------------------------------------------
+# Health signals + the reconciler's gray-failure sweep
+# -------------------------------------------------------------------------
+
+
+def test_sim_health_tracks_the_straggler_ewma():
+    cluster = Cluster(n_nodes=2, sharing=True)
+    cluster.register_function("chat", tiny_curve())
+    assert cluster.deploy("chat", PROFILE[1]) is not None  # node 0
+    assert cluster.health(0) == pytest.approx(1.0)
+    SimChaosTarget(cluster).straggler(0, magnitude=5.0)
+    cluster.submit_all(poisson_arrivals("chat", rps=3.0, duration=3.0,
+                                        seed=1))
+    cluster.run(60.0)
+    # The EWMA converged toward the slowdown factor: health ~ 1/5.
+    assert cluster.health(0) < 0.5
+    cluster.fail_node(1)
+    assert cluster.health(1) == 0.0  # dead reads zero
+
+
+def test_live_engine_health_ratio():
+    eng = ServingEngine(window=0.05)
+    assert eng.health() == pytest.approx(1.0)  # no samples yet
+    eng._lat_slow, eng._lat_fast = 0.5, 1.0  # recent passes 2x slower
+    assert eng.health() == pytest.approx(0.5)
+    eng._lat_slow, eng._lat_fast = 1.0, 0.8  # recovered: fast below slow
+    assert eng.health() == pytest.approx(1.0)
+
+
+def test_sim_sweep_quarantines_worst_first_and_keeps_one_node():
+    cluster = Cluster(n_nodes=3, sharing=True)
+    plane = ControlPlane(SimBackend(cluster), quarantine_threshold=0.6)
+    plane.register(make_spec(min_instances=2,
+                             target_rps=ramp([(0.0, 0.0)])))
+    assert {cluster.node_of(p) for p in plane.placed["chat"]} == {0}
+    # Every node degraded below threshold: the sweep must still keep one.
+    cluster.nodes[0].lat_ewma = 5.0  # health 0.2 — worst
+    cluster.nodes[1].lat_ewma = 3.0  # health 0.33
+    cluster.nodes[2].lat_ewma = 2.0  # health 0.5 — least bad, survives
+    plane.reconcile(now=1.0)
+    assert [q.node for q in plane.quarantines] == [0, 1]
+    assert [q.instances for q in plane.quarantines] == [2, 0]
+    assert cluster.nodes[0].quarantined and cluster.nodes[1].quarantined
+    assert not cluster.nodes[2].quarantined
+    # Same tick healed the capacity onto the surviving node.
+    assert plane.instances("chat") == 2
+    assert all(cluster.node_of(p) == 2 for p in plane.placed["chat"])
+    # Sweep is sticky: the next tick re-quarantines nothing.
+    plane.reconcile(now=2.0)
+    assert len(plane.quarantines) == 2
+    # Health actions never touch the decision log's signature stream.
+    assert all(d.function == "chat" for d in plane.log)
+
+
+def test_live_sweep_quarantines_and_heals(tiny_model, tiny_params):
+    frontend = ClusterFrontend(n_nodes=2, window=0.05)
+    plane = ControlPlane(LiveBackend(frontend), quarantine_threshold=0.6)
+    plane.register(make_spec(lambda: (tiny_model, tiny_params),
+                             min_instances=2,
+                             target_rps=ramp([(0.0, 1.0)])))
+    assert all(int(p.split(":")[0]) == 0 for p in plane.placed["chat"])
+    rng = np.random.default_rng(9)
+    req = frontend.submit("chat", rng.integers(0, 64, 5, dtype=np.int32),
+                          max_new_tokens=3)
+    # Simulate a gray failure: recent passes twice as slow as the baseline.
+    frontend.engines[0]._lat_slow = 0.01
+    frontend.engines[0]._lat_fast = 0.02
+    assert frontend.health(0) == pytest.approx(0.5)
+    plane.reconcile(now=1.0)
+    assert [q.node for q in plane.quarantines] == [0]
+    assert frontend.engines[0].quarantined
+    assert plane.instances("chat") == 2
+    assert all(int(p.split(":")[0]) == 1 for p in plane.placed["chat"])
+    # The quarantined node drains its occupants (unlike a crash) and new
+    # submissions route around it.
+    req2 = frontend.submit("chat", rng.integers(0, 64, 5, dtype=np.int32),
+                           max_new_tokens=3)
+    frontend.pump(budget_s=30.0)
+    assert req.done and len(req.tokens_out) == 3
+    assert req2.done and len(req2.tokens_out) == 3
+
+
+# -------------------------------------------------------------------------
+# Deadlines: shedding at admission, expiry in queue, typed outcomes
+# -------------------------------------------------------------------------
+
+
+def _burst(n: int, fn: str = "chat") -> list[Request]:
+    return [Request(fn=fn, arrival=0.001 * i, req_id=i) for i in range(n)]
+
+
+def test_sim_sheds_best_effort_that_cannot_make_deadline():
+    cluster = Cluster(n_nodes=1, sharing=True)
+    cluster.register_function("chat", tiny_curve(), slo_latency=0.1,
+                              slo_tier=TIER_BEST_EFFORT, deadline_s=0.5)
+    cluster.deploy("chat", PROFILE[0])  # 2 req/s: one fits the budget
+    cluster.submit_all(_burst(10))
+    cluster.run(30.0)
+    rec = cluster.recorders["chat"]
+    assert cluster.shed >= 1
+    assert rec.shed == cluster.shed
+    assert rec.count() + rec.shed == 10  # every request got an outcome
+    assert cluster.dropped == 0 and cluster.expired == 0
+
+
+def test_sim_never_sheds_or_expires_guaranteed():
+    cluster = Cluster(n_nodes=1, sharing=True)
+    cluster.register_function("vip", tiny_curve(), slo_latency=0.1,
+                              slo_tier=TIER_GUARANTEED, deadline_s=0.5)
+    cluster.deploy("vip", PROFILE[0])
+    cluster.submit_all(_burst(8, fn="vip"))
+    cluster.run(30.0)
+    rec = cluster.recorders["vip"]
+    assert cluster.shed == 0 and cluster.expired == 0 and cluster.lost == 0
+    assert rec.count() == 8  # all served, even the deadline-missed tail
+    assert rec.deadline_missed >= 1  # late, but never dropped
+
+
+def test_sim_expires_queued_requests_after_gray_failure():
+    """Admission said the deadline was makeable; a straggler then slowed
+    the node — queued requests expire with a typed outcome instead of
+    wasting a decode slot."""
+    cluster = Cluster(n_nodes=1, sharing=True)
+    cluster.register_function("chat", tiny_curve(), slo_latency=0.1,
+                              slo_tier=TIER_BEST_EFFORT, deadline_s=2.0)
+    cluster.deploy("chat", PROFILE[1])  # 5 req/s: the whole burst admits
+    cluster.submit_all(_burst(8))
+    cluster.sim.at(0.01, lambda: SimChaosTarget(cluster).straggler(
+        0, magnitude=60.0))
+    cluster.run(200.0)
+    rec = cluster.recorders["chat"]
+    assert cluster.shed == 0  # admission estimate predates the straggler
+    assert cluster.expired >= 1
+    assert rec.expired == cluster.expired
+    assert rec.count() + rec.expired == 8
+
+
+def test_live_sheds_with_typed_outcome(tiny_model, tiny_params):
+    frontend = ClusterFrontend(n_nodes=1, window=0.05)
+    plane = ControlPlane(LiveBackend(frontend))
+    plane.register(make_spec(lambda: (tiny_model, tiny_params),
+                             min_instances=1, max_batch=1,
+                             target_rps=ramp([(0.0, 1.0)])))
+    frontend.configure_slo("chat", tier=TIER_BEST_EFFORT, deadline_s=0.05,
+                           est_rps=50.0)
+    rng = np.random.default_rng(2)
+    reqs = [frontend.submit("chat", rng.integers(0, 64, 4, dtype=np.int32),
+                            max_new_tokens=2) for _ in range(8)]
+    # (load + 1) / 50 exceeds the 50 ms budget once ~2 requests queue.
+    shed = [r for r in reqs if r.outcome == "shed"]
+    assert frontend.shed == len(shed) >= 1
+    assert all(r.done and r.finished_at >= r.submitted_at for r in shed)
+    frontend.pump(budget_s=30.0)
+    assert all(r.done for r in reqs)
+    served = [r for r in reqs if r.outcome is None]
+    assert all(len(r.tokens_out) == 2 for r in served)
+
+
+def test_live_expires_queued_requests_past_deadline(tiny_model,
+                                                    tiny_params):
+    frontend = ClusterFrontend(n_nodes=1, window=0.05)
+    plane = ControlPlane(LiveBackend(frontend))
+    plane.register(make_spec(lambda: (tiny_model, tiny_params),
+                             min_instances=1, max_batch=1,
+                             target_rps=ramp([(0.0, 1.0)])))
+    # No est_rps: shedding stays off, expiry alone polices the deadline.
+    frontend.configure_slo("chat", tier=TIER_BEST_EFFORT, deadline_s=0.001)
+    rng = np.random.default_rng(4)
+    reqs = [frontend.submit("chat", rng.integers(0, 64, 4, dtype=np.int32),
+                            max_new_tokens=2) for _ in range(4)]
+    import time
+    time.sleep(0.02)  # every queued deadline is now in the past
+    frontend.pump(budget_s=30.0)
+    assert all(r.done for r in reqs)
+    expired = [r for r in reqs if r.outcome == "expired"]
+    assert len(expired) >= 1 and all(not r.tokens_out for r in expired)
+    node0 = frontend.engines[0]
+    assert sum(t["expired"] for t in node0.telemetry().values()) \
+        == len(expired)
+
+
+def test_deadline_budget_resolution():
+    assert deadline_budget(TIER_BEST_EFFORT, 0.4, 0.1) == 0.4  # explicit
+    assert deadline_budget(TIER_GUARANTEED, None, 0.1) == 0.1  # SLO falls in
+    assert deadline_budget(TIER_BATCH, None, 0.1) == 0.1
+    assert deadline_budget(TIER_BEST_EFFORT, None, 0.1) is None  # dormant
+    spec = make_spec(slo_tier=TIER_GUARANTEED)
+    assert spec.deadline_budget() == spec.slo_latency
+
+
+# -------------------------------------------------------------------------
+# Retries: seeded determinism, bounded loss, guaranteed never lost
+# -------------------------------------------------------------------------
+
+
+def test_retry_policy_validation_and_determinism():
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError):
+        RetryPolicy(multiplier=0.5)
+    with pytest.raises(ValueError):
+        RetryPolicy(jitter=1.5)
+    a = RetryPolicy(max_attempts=3, base_s=0.1, seed=7)
+    b = RetryPolicy(max_attempts=3, base_s=0.1, seed=7)
+    c = RetryPolicy(max_attempts=3, base_s=0.1, seed=8)
+    da = [a.delay(i) for i in range(1, 5)]
+    assert da == [b.delay(i) for i in range(1, 5)]  # same seed, same jitter
+    assert da != [c.delay(i) for i in range(1, 5)]
+    # Backoff grows with the attempt and stays within the jitter envelope.
+    assert all(0.1 * 2 ** (i - 1) <= d <= 0.1 * 2 ** (i - 1) * 1.5
+               for i, d in enumerate(da, start=1))
+    assert not a.exhausted(2) and a.exhausted(3)
+
+
+@pytest.mark.parametrize("tier,expect_lost",
+                         [(TIER_BEST_EFFORT, True), (TIER_GUARANTEED, False)])
+def test_sim_retry_budget_after_repeated_failures(tier, expect_lost):
+    """Two node kills in a row: best-effort requests exhaust the retry
+    budget and record a typed loss; guaranteed requests never do."""
+    cluster = Cluster(n_nodes=2, sharing=True,
+                      retry=RetryPolicy(max_attempts=1, base_s=0.01, seed=0))
+    plane = ControlPlane(SimBackend(cluster),
+                         quarantine_threshold=None)
+    plane.register(make_spec(min_instances=1, slo_tier=tier,
+                             target_rps=ramp([(0.0, 0.0)])))
+    cluster.submit_all(poisson_arrivals("chat", rps=8.0, duration=1.0,
+                                        seed=3))
+    cluster.sim.at(0.5, lambda: cluster.fail_node(0))
+    cluster.sim.at(1.0, lambda: plane.reconcile(now=1.0))  # heal to node 1
+    cluster.sim.at(1.2, lambda: cluster.fail_node(1))
+    cluster.run(30.0)
+    rec = cluster.recorders["chat"]
+    if expect_lost:
+        assert cluster.lost >= 1 and rec.lost == cluster.lost
+    else:
+        assert cluster.lost == 0 and rec.lost == 0
+    assert cluster.dropped == 0
+    parked = len(cluster._pending.get("chat", ()))
+    # Every offered request is accounted for: served, lost, or parked
+    # awaiting a heal that never comes (both nodes are dead).
+    offered = rec.count() + cluster.lost + parked
+    assert offered == len(poisson_arrivals("chat", rps=8.0, duration=1.0,
+                                           seed=3))
+
+
+def test_sim_retry_runs_are_reproducible():
+    def trial() -> tuple:
+        cluster = Cluster(n_nodes=2, sharing=True,
+                          retry=RetryPolicy(max_attempts=3, base_s=0.02,
+                                            seed=5))
+        plane = ControlPlane(SimBackend(cluster))
+        plane.register(make_spec(min_instances=1,
+                                 target_rps=ramp([(0.0, 0.0)])))
+        cluster.submit_all(poisson_arrivals("chat", rps=6.0, duration=2.0,
+                                            seed=6))
+        cluster.sim.at(0.7, lambda: cluster.fail_node(0))
+        for t in range(1, 6):
+            cluster.sim.at(float(t), lambda t=t: plane.reconcile(now=t))
+        cluster.run(40.0)
+        rec = cluster.recorders["chat"]
+        return (rec.count(), cluster.lost, cluster.shed, cluster.expired,
+                rec.p99(), decision_signature(plane.log))
+
+    assert trial() == trial()
+
+
+# -------------------------------------------------------------------------
+# Batch lane: non-batch admissions preempt parked batch work
+# -------------------------------------------------------------------------
+
+
+def test_sim_batch_lane_ordering():
+    cluster = Cluster(n_nodes=1, sharing=True)
+    cluster.register_function("chat", tiny_curve())
+    pod = cluster.pods[cluster.deploy("chat", PROFILE[0])]
+    tiers = [TIER_BATCH, TIER_BATCH, TIER_BEST_EFFORT, TIER_GUARANTEED,
+             TIER_BATCH]
+    for i, t in enumerate(tiers):
+        cluster._enqueue_pod(pod, Request(fn="chat", arrival=0.0, req_id=i,
+                                          tier=t))
+    assert [r.req_id for r in pod.queue] == [2, 3, 0, 1, 4]
+    assert [r.tier for r in pod.queue] == [
+        TIER_BEST_EFFORT, TIER_GUARANTEED, TIER_BATCH, TIER_BATCH,
+        TIER_BATCH]
+
+
+def test_live_batch_lane_ordering():
+    inst = SimpleNamespace(queue=[])
+    prompt = np.zeros(2, dtype=np.int32)
+    for i, t in enumerate([TIER_BATCH, TIER_BEST_EFFORT, TIER_BATCH,
+                           TIER_GUARANTEED]):
+        ServingEngine.enqueue(inst, ServeRequest(req_id=i, prompt=prompt,
+                                                 tier=t))
+    assert [r.req_id for r in inst.queue] == [1, 3, 0, 2]
+
+
+# -------------------------------------------------------------------------
+# Unregister: parked requests get a typed rejection, never a leak
+# -------------------------------------------------------------------------
+
+
+def test_live_unregister_rejects_parked_requests(tiny_model, tiny_params):
+    frontend = ClusterFrontend(n_nodes=2, window=0.05)
+    plane = ControlPlane(LiveBackend(frontend))
+    plane.register(make_spec(lambda: (tiny_model, tiny_params),
+                             min_instances=1,
+                             target_rps=ramp([(0.0, 1.0)])))
+    rng = np.random.default_rng(8)
+    frontend.fail_node(
+        int(next(iter(plane.placed["chat"])).split(":")[0]))
+    # Podless window: the submission parks, exactly like the sim buffer.
+    req = frontend.submit("chat", rng.integers(0, 64, 5, dtype=np.int32),
+                          max_new_tokens=3)
+    assert not req.done and frontend._pending["chat"] == [req]
+    rejected = frontend.unregister("chat")
+    # The parked request terminated with a typed outcome — no leak.
+    assert rejected == [req]
+    assert req.done and req.outcome == "rejected"
+    assert req.finished_at >= req.submitted_at
+    assert frontend.rejected == 1
+    assert "chat" not in frontend._pending
+    # The function is gone for good: later submissions are a hard error.
+    with pytest.raises(KeyError):
+        frontend.submit("chat", rng.integers(0, 64, 5, dtype=np.int32))
+
+
+def test_idle_sleep_knob_plumbs_through():
+    eng = ServingEngine(window=0.05, idle_sleep_s=0.0)
+    assert eng.idle_sleep_s == 0.0
+    frontend = ClusterFrontend(n_nodes=2, window=0.05, idle_sleep_s=0.0)
+    assert all(e.idle_sleep_s == 0.0 for e in frontend.engines)
+    assert ClusterFrontend(n_nodes=1).engines[0].idle_sleep_s == 0.001
